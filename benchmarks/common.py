@@ -1,0 +1,51 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+
+def out_dir(sub: str = "") -> str:
+    d = os.path.join("experiments", sub) if sub else "experiments"
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def save_json(name: str, obj, sub: str = "") -> str:
+    path = os.path.join(out_dir(sub), name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def bench(fn, *args, iters: int = 5, warmup: int = 2) -> dict:
+    """Median wall-time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return {
+        "median_s": ts[len(ts) // 2],
+        "min_s": ts[0],
+        "max_s": ts[-1],
+        "iters": iters,
+    }
+
+
+def fmt_table(rows: list[dict], cols: list[str], title: str = "") -> str:
+    w = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+    lines = []
+    if title:
+        lines.append(f"== {title} ==")
+    lines.append(" | ".join(c.ljust(w[c]) for c in cols))
+    lines.append("-+-".join("-" * w[c] for c in cols))
+    for r in rows:
+        lines.append(" | ".join(str(r.get(c, "")).ljust(w[c]) for c in cols))
+    return "\n".join(lines)

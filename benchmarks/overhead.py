@@ -1,0 +1,232 @@
+"""Paper Figs. 2-3: monitoring overhead of {vanilla, perfmon, all, selective}.
+
+Reproduction mapping (DESIGN.md §2):
+  vanilla    — the uninstrumented program (scopes exist, no collector)
+  perfmon    — breakpoint_mode: an ordered io_callback host round-trip on
+               every monitored-scope entry+exit (the ptrace analogue)
+  all        — collector over the FULL compile-time scope set; only one
+               scope's events are unmasked (paper: intercept all functions,
+               monitor one)
+  selective  — collector whose compile-time set contains ONLY the monitored
+               scope
+
+Workloads mirror the paper's two axes:
+  * real apps (reduced NAS stand-ins): smoke configs of a dense, an SSM and
+    an MoE arch, one training step each;
+  * a synthetic call-count sweep (Fig. 3's tens .. tens-of-thousands of
+    calls): a tiny function called k times per step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from repro.configs import model_config
+from repro.core.backends import host_callback as hc
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.core.counters import CounterState, MonitorParams
+from repro.models.registry import Arch
+from repro.train.step import build_monitor_spec
+
+from .common import bench, fmt_table, save_json
+
+
+# ---------------------------------------------------------------------------
+# builders for the four test cases
+# ---------------------------------------------------------------------------
+
+def _arch_loss(arch):
+    def loss(params, batch):
+        return arch.loss_fn(params, batch)
+    return loss
+
+
+def build_cases(loss_fn, params, batch, spec_all: MonitorSpec,
+                monitored_scope: str):
+    """Returns {case: jitted fn(state_or_none) -> loss} + per-case state."""
+    grad = jax.grad(lambda p, b: loss_fn(p, b))
+
+    def vanilla():
+        f = jax.jit(lambda p, b: (loss_fn(p, b), grad(p, b)))
+        return lambda: f(params, batch), None
+
+    def perfmon():
+        mon = hc.global_monitor()
+
+        def step(p, b):
+            return loss_fn(p, b), grad(p, b)
+
+        with scalpel.breakpoint_mode(mon, scopes=[monitored_scope.split("/")[-1]]):
+            f = jax.jit(step)
+            f.lower(params, batch)  # trace inside the ctx so bps are planted
+            # keep ctx open through first real call:
+            return (lambda: f(params, batch)), mon
+
+    def all_case():
+        mp = MonitorParams.selective(spec_all, [monitored_scope])
+
+        def step(p, b, state, mp):
+            with scalpel.collecting(spec_all, mp, state) as col:
+                l = loss_fn(p, b)
+                g = jax.grad(lambda pp: loss_fn(pp, b))(p)
+            return l, g, state.add(col.delta)
+
+        f = jax.jit(step)
+        s0 = CounterState.zeros(spec_all)
+        return (lambda: f(params, batch, s0, mp)), None
+
+    def selective():
+        ctx = spec_all.context(monitored_scope)
+        spec_sel = MonitorSpec.of([ctx])
+        mp = MonitorParams.all_on(spec_sel)
+
+        def step(p, b, state, mp):
+            with scalpel.collecting(spec_sel, mp, state) as col:
+                l = loss_fn(p, b)
+                g = jax.grad(lambda pp: loss_fn(pp, b))(p)
+            return l, g, state.add(col.delta)
+
+        f = jax.jit(step)
+        s0 = CounterState.zeros(spec_sel)
+        return (lambda: f(params, batch, s0, mp)), None
+
+    return {
+        "vanilla": vanilla,
+        "perfmon": perfmon,
+        "all": all_case,
+        "selective": selective,
+    }
+
+
+def run_arch_workloads(arch_ids=("qwen3_14b", "xlstm_125m", "dbrx_132b"),
+                       iters: int = 5, seq: int = 64, batch_size: int = 4):
+    rows = []
+    for aid in arch_ids:
+        cfg = model_config(aid, smoke=True)
+        arch = Arch(cfg)
+        params = arch.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(
+            jax.random.PRNGKey(1), (batch_size, seq), 0, cfg.vocab
+        )
+        batch = {"tokens": toks,
+                 "targets": jax.random.randint(
+                     jax.random.PRNGKey(2), (batch_size, seq), 0, cfg.vocab)}
+        spec_all = build_monitor_spec(arch, batch)
+        # monitor the mlp/ffn-ish scope (called n_layers times per step)
+        cand = [s for s in spec_all.scopes
+                if s.endswith(("mlp", "moe", "ssm", "mlstm", "ffn"))]
+        scope = cand[0] if cand else spec_all.scopes[0]
+        loss_fn = _arch_loss(arch)
+        case_builders = build_cases(loss_fn, params, batch, spec_all, scope)
+        base = None
+        for case in ("vanilla", "selective", "all", "perfmon"):
+            fn, mon = case_builders[case]()
+            if case == "perfmon":
+                hc.global_monitor().reset()
+            r = bench(fn, iters=iters)
+            t = r["min_s"]
+            if case == "vanilla":
+                base = t
+            rows.append({
+                "workload": aid, "case": case, "scope": scope,
+                "n_scopes": spec_all.n_scopes,
+                "median_ms": round(r["median_s"] * 1e3, 2),
+                "min_ms": round(t * 1e3, 3),
+                "overhead_pct": round(100 * (t - base) / base, 1),
+                "bp_calls": sum(hc.global_monitor().calls.values())
+                if case == "perfmon" else 0,
+            })
+    return rows
+
+
+def run_callcount_sweep(counts=(16, 256, 1024), iters: int = 5):
+    """Fig. 3's axis: overhead vs number of function calls per run."""
+    rows = []
+    for k in counts:
+        spec = MonitorSpec.of([
+            ScopeContext.exhaustive("hot", [EventSpec("ACT_RMS", "x")]),
+            ScopeContext.exhaustive("cold", [EventSpec("ACT_RMS", "x")]),
+        ])
+
+        def work(x):
+            # a cheap body so the instrumentation cost is visible
+            for _ in range(k):
+                with scalpel.function("hot"):
+                    x = x * 1.0001 + 0.1
+                    scalpel.probe(x=x)
+            with scalpel.function("cold"):
+                scalpel.probe(x=x)
+            return x
+
+        x0 = jnp.ones((128,))
+        base = None
+        for case in ("vanilla", "selective", "all", "perfmon"):
+            if case == "vanilla":
+                f = jax.jit(work)
+                fn = lambda: f(x0)
+            elif case == "perfmon":
+                mon = hc.global_monitor()
+                mon.reset()
+                with scalpel.breakpoint_mode(mon, scopes=["hot"]):
+                    f = jax.jit(work)
+                    f.lower(x0)
+                fn = lambda: f(x0)
+            else:
+                sp = spec if case == "all" else MonitorSpec.of(
+                    [spec.context("hot")]
+                )
+                mp = MonitorParams.selective(sp, ["hot"])
+                s0 = CounterState.zeros(sp)
+
+                def step(x, s, mp, sp=sp):
+                    with scalpel.collecting(sp, mp, s) as col:
+                        y = work(x)
+                    return y, s.add(col.delta)
+
+                f = jax.jit(step)
+                fn = lambda f=f, s0=s0, mp=mp: f(x0, s0, mp)
+            r = bench(fn, iters=iters)
+            t = r["min_s"]
+            if case == "vanilla":
+                base = t
+            rows.append({
+                "workload": f"calls={k}", "case": case,
+                "median_ms": round(r["median_s"] * 1e3, 3),
+                "min_ms": round(t * 1e3, 3),
+                "overhead_pct": round(100 * (t - base) / base, 1),
+                "per_call_us": round(1e6 * (t - base) / max(k, 1), 3),
+            })
+    return rows
+
+
+def main(fast: bool = False):
+    iters = 3 if fast else 5
+    rows = run_arch_workloads(iters=iters)
+    rows += run_callcount_sweep(
+        counts=(16, 256) if fast else (16, 256, 1024), iters=iters
+    )
+    save_json("overhead.json", rows, sub="bench")
+    print(fmt_table(
+        rows,
+        ["workload", "case", "min_ms", "overhead_pct", "per_call_us",
+         "bp_calls"],
+        title="ScALPEL overhead: vanilla / selective / all / perfmon "
+              "(paper Figs. 2-3)",
+    ))
+    # the paper's hierarchy, asserted softly
+    by = {}
+    for r in rows:
+        by.setdefault(r["workload"], {})[r["case"]] = r["min_ms"]
+    ok = sum(
+        1 for w, c in by.items()
+        if c["perfmon"] >= max(c["selective"], c["all"]) * 0.9
+    )
+    print(f"\nhierarchy check: perfmon slowest in {ok}/{len(by)} workloads")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(fast="--fast" in sys.argv)

@@ -1,0 +1,49 @@
+"""Benchmark driver: python -m benchmarks.run [--fast]
+
+One benchmark per paper table/figure + the scale deliverables:
+  overhead    — paper Figs. 2-3 (vanilla/perfmon/all/selective)
+  case_study  — paper Table 2 + Fig. 4 (two GEMM schedules through counters)
+  kernels     — Pallas kernel vs oracle timings + cost-model table
+  roofline    — per (arch x shape) three-term roofline from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    fast = "--fast" in sys.argv
+    failures = []
+    print("=" * 72)
+    print("ScALPEL-JAX benchmark suite")
+    print("=" * 72)
+
+    from . import case_study, kernels_bench, overhead, roofline
+
+    for name, fn in [
+        ("overhead (paper Figs. 2-3)", lambda: overhead.main(fast=fast)),
+        ("case study (paper Table 2 / Fig. 4)",
+         lambda: case_study.main(fast=fast)),
+        ("kernel microbench", lambda: kernels_bench.main(fast=fast)),
+        ("roofline 16x16", lambda: roofline.main(mesh="16x16")),
+        ("roofline 2x16x16", lambda: roofline.main(mesh="2x16x16")),
+    ]:
+        print("\n" + "=" * 72)
+        print(f"--- {name}")
+        print("=" * 72)
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print("\n" + "=" * 72)
+    if failures:
+        print(f"FAILED benchmarks: {failures}")
+        return 1
+    print("all benchmarks completed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,64 @@
+"""Quickstart: monitor a model with ScALPEL-JAX in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a model (any callable using scalpel.function/probe scopes).
+2. Discover the compile-time scope set (the '-finstrument-functions' pass).
+3. Pick a runtime subset + events; run; read the per-scope report.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from repro.configs import model_config
+from repro.models.registry import Arch
+
+
+def main():
+    # -- 1. the application: a small LM forward+loss ----------------------
+    arch = Arch(model_config("qwen3_14b", smoke=True))
+    params = arch.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                     arch.cfg.vocab),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0,
+                                      arch.cfg.vocab),
+    }
+
+    # -- 2. compile-time set: discover every scope the program touches ----
+    seen = scalpel.discover(arch.loss_fn, params, batch)
+    spec = scalpel.spec_from_discovery(
+        seen, tensor_events=("ACT_RMS", "ACT_MAX_ABS")
+    )
+    print("compile-time scope set:")
+    print(spec.describe())
+
+    # -- 3. runtime subset: monitor only attention scopes ------------------
+    attn_scopes = [s for s in spec.scopes if s.endswith("attn")]
+    mparams = scalpel.MonitorParams.selective(spec, attn_scopes)
+    state = scalpel.CounterState.zeros(spec)
+
+    @jax.jit
+    def step(params, batch, state, mparams):
+        with scalpel.collecting(spec, mparams, state) as col:
+            loss = arch.loss_fn(params, batch)
+        return loss, state.add(col.delta)
+
+    for _ in range(3):
+        loss, state = step(params, batch, state, mparams)
+
+    # -- 4. report (paper: stdout on termination) ---------------------------
+    print(f"\nloss={float(loss):.4f}")
+    print(scalpel.format_text(scalpel.build(spec, state)))
+
+    # flipping the monitored subset is a data swap — NO recompile:
+    mparams = scalpel.MonitorParams.selective(
+        spec, [s for s in spec.scopes if s.endswith("mlp")]
+    )
+    loss, state = step(params, batch, state, mparams)  # same compiled step
+    print("\nafter runtime reconfig to mlp scopes (no re-trace):")
+    print(scalpel.format_text(scalpel.build(spec, state)))
+
+
+if __name__ == "__main__":
+    main()

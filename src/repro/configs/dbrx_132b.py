@@ -1,0 +1,23 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16 experts top-4, fine-grained
+[hf:databricks/dbrx-base; unverified].
+"""
+from repro.models import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352,
+    moe=MoEConfig(n_experts=16, top_k=4, capacity_factor=1.25),
+)
+
+SMOKE = CONFIG.replace(
+    name="dbrx-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512, param_dtype="float32", compute_dtype="float32",
+    remat="none", moe=MoEConfig(n_experts=4, top_k=2),
+)
+
+CELLS = {
+    "default": {"opt_state": "int8"},
+    "train_4k": {"microbatches": 8},
+}

@@ -1,0 +1,29 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 + shared attn blocks
+[arXiv:2411.15242; unverified].
+
+81 layers = 13 groups of (6 Mamba2 + shared attention at 2*d_model) + 3
+trailing Mamba2 layers; the attention/MLP block weights are shared across
+all 13 application sites (Zamba2's parameter-sharing trick).
+"""
+from repro.models import HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab=32000,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),
+    hybrid=HybridConfig(attn_every=6, concat_embedding=True),
+)
+
+SMOKE = CONFIG.replace(
+    name="zamba2-smoke", n_layers=5, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512, param_dtype="float32", compute_dtype="float32",
+    remat="none", ssm=SSMConfig(chunk=16, head_dim=16),
+    hybrid=HybridConfig(attn_every=2),
+)
+
+CELLS = {
+    "default": {"opt_state": "f32"},
+    "train_4k": {"microbatches": 2},
+}

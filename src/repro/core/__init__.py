@@ -1,0 +1,46 @@
+"""ScALPEL-JAX core: the paper's contribution as a composable JAX module.
+
+Public API (see DESIGN.md §2 for the paper mapping):
+
+    spec     = scalpel.MonitorSpec / spec_from_mapping / spec_from_discovery
+    params   = scalpel.MonitorParams.all_on(spec) / .selective(...)
+    state    = scalpel.CounterState.zeros(spec)
+
+    with scalpel.collecting(spec, params, state) as col:
+        ... model code calling scalpel.function(...) / scalpel.probe(...) ...
+    state = state.add(col.delta)
+
+    runtime  = scalpel.ScalpelRuntime(spec, config_path=..., install_signal=True)
+"""
+from .config_file import (  # noqa: F401
+    ConfigError,
+    ScalpelConfig,
+    apply_config,
+    parse,
+    parse_file,
+    serialize,
+)
+from .context import (  # noqa: F401
+    EventSpec,
+    MonitorSpec,
+    ScopeContext,
+    spec_from_mapping,
+)
+from .counters import CounterState, MonitorParams  # noqa: F401
+from .events import EXTENSIVE, INTENSIVE, compute, lookup, registered  # noqa: F401
+from .instrument import (  # noqa: F401
+    breakpoint_mode,
+    capture,
+    collecting,
+    current_collector,
+    discover,
+    discovering,
+    function,
+    instrument,
+    probe,
+    probe_scope,
+    scan_with_counters,
+    spec_from_discovery,
+)
+from .report import build, estimates, format_text, to_json, write_jsonl  # noqa: F401
+from .runtime import ScalpelRuntime  # noqa: F401

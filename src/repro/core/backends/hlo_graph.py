@@ -1,0 +1,540 @@
+"""HLO module graph analysis with while-loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE — for a
+scan-over-layers transformer that underreports FLOPs by O(n_layers * n_scan)
+(measured: 1000x on our stacks).  This module parses the post-optimization
+HLO text into a computation graph and computes:
+
+  * flops            — dot/convolution FLOPs, x trip count for while bodies
+  * hbm_bytes        — operand+output bytes of traffic-bearing top-level ops
+                       (fusions count as one op: that IS the fusion's HBM
+                       round-trip), x trip count
+  * collective link bytes per kind (ring-algorithm per-chip estimates)
+  * max over conditional branches (roofline-fair for predicated monitoring)
+
+All numbers are per-device: the input is the SPMD-partitioned module.
+Trip counts come from the loop-condition comparison constant (jax scans
+count 0..N); loops whose bound cannot be parsed are scaled by 1 and counted
+in ``unscaled_whiles``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True)) + r")"
+    r"\[([0-9,]*)\]"
+)
+# computation header: "%name (sig...) -> type {"; the signature may contain
+# nested parens (tuple types), so match only the leading name
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_ATTR_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_ATTR_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_ATTR_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_ATTR_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_ATTR_TOAPPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"%([\w\.\-]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_REPLICA_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+_PLUMBING = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "iota", "after-all", "opt-barrier", "partition-id", "replica-id",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+    "copy-done", "copy-start", "domain", "rng-get-and-update-state",
+}
+
+
+def _shape_bytes(text: str) -> float:
+    return sum(
+        _DTYPE_BYTES[d] * (eval("*".join(dims.split(",")))
+                           if dims else 1)
+        for d, dims in _SHAPE_RE.findall(text)
+    )
+
+
+def _shape_elems(text: str) -> float:
+    tot = 0.0
+    for _, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for x in dims.split(","):
+                n *= int(x)
+        tot += n
+    return tot
+
+
+def _first_shape_dims(text: str) -> list[int] | None:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(x) for x in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    transcendental: float = 0.0
+    coll: dict[str, float] | None = None
+    coll_payload: float = 0.0
+    n_coll: int = 0
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {}
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.transcendental += other.transcendental * mult
+        self.coll_payload += other.coll_payload * mult
+        self.n_coll += int(other.n_coll * mult)
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+    @property
+    def collective_link_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloModule:
+    def __init__(self, text: str, default_group: int = 1):
+        self.default_group = default_group
+        self.computations: dict[str, list[Op]] = {}
+        self.symbols: dict[str, str] = {}   # op name -> output type text
+        self.constants: dict[str, int] = {}
+        self.entry: str | None = None
+        self.unscaled_whiles = 0
+        self._parse(text)
+        self._memo: dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: list[Op] | None = None
+        cur_name = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.endswith("{"):
+                m = _COMP_START_RE.match(line.strip())
+                if m:
+                    cur_name = m.group(1)
+                    cur = []
+                    self.computations[cur_name] = cur
+                    if line.startswith("ENTRY"):
+                        self.entry = cur_name
+                    continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mo = _OP_RE.match(line)
+            if not mo:
+                continue
+            name, out_type, kind = mo.group(1), mo.group(2), mo.group(3)
+            paren = line[mo.end():]
+            # operands: %refs inside the first paren group (up to matching ')')
+            depth = 1
+            i = 0
+            for i, ch in enumerate(paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operand_text = paren[:i]
+            operands = _OPERAND_RE.findall(operand_text)
+            op = Op(name=name, kind=kind, out_type=out_type,
+                    operands=operands, line=line)
+            cur.append(op)
+            self.symbols[name] = out_type
+            mc = _CONST_RE.search(line)
+            if mc:
+                self.constants[mc.group(1)] = int(mc.group(2))
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, op: Op) -> float:
+        return sum(
+            _shape_bytes(self.symbols.get(o, "")) for o in op.operands
+        )
+
+    _PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+    _SLICERS = ("dynamic-slice", "slice", "gather")
+
+    def _fusion_in_traffic(self, comp_name: str, operands: list[str]) -> float:
+        """HBM read traffic of a fusion: full operand bytes, EXCEPT
+        * operands consumed only through (dynamic-)slice/gather — a scan body
+          reads one layer slice of the stacked params per trip, not the stack;
+        * operands consumed only as the TARGET buffer (operand 0) of a
+          dynamic-update-slice — XLA updates in place, no read of the buffer.
+        """
+        ops = self.computations.get(comp_name, [])
+        if not ops:
+            return sum(
+                _shape_bytes(self.symbols.get(o, "")) for o in operands
+            )
+        pidx: dict[str, int] = {}
+        for o in ops:
+            if o.kind == "parameter":
+                m = self._PARAM_IDX_RE.search(o.line)
+                if m:
+                    pidx[o.name] = int(m.group(1))
+
+        _TRANSPARENT = ("bitcast", "copy", "reshape", "transpose")
+
+        def effective_consumers(name: str, depth: int = 0) -> list[Op]:
+            """Consumers of ``name``, looking through layout-only ops."""
+            out: list[Op] = []
+            for c in ops:
+                if name not in c.operands:
+                    continue
+                if c.kind in _TRANSPARENT and depth < 4:
+                    out.extend(effective_consumers(c.name, depth + 1))
+                else:
+                    out.append(c)
+            return out
+
+        total = 0.0
+        for pname, idx in pidx.items():
+            consumers = effective_consumers(pname)
+            if consumers and all(c.kind in self._SLICERS for c in consumers):
+                total += sum(self._out_bytes(c) for c in consumers)
+            elif consumers and all(
+                c.kind == "dynamic-update-slice"
+                and c.operands
+                and (c.operands[0] == pname
+                     or self.symbols.get(c.operands[0], "")
+                     and _shape_elems(self.symbols.get(c.operands[0], ""))
+                     == _shape_elems(self.symbols.get(pname, "x[1]")))
+                for c in consumers
+            ):
+                pass  # in-place DUS target: buffer is not re-read
+            else:
+                if idx < len(operands):
+                    total += _shape_bytes(
+                        self.symbols.get(operands[idx], "")
+                    )
+        return total
+
+    def _fusion_out_bytes(self, comp_name: str, op: Op) -> float:
+        """Fusion write traffic: a DUS-carrying fusion whose output is the
+        updated buffer writes only the slice (in-place aliasing).  Element
+        counts are compared (converts may change the byte width)."""
+        out_e = _shape_elems(op.out_type)
+        for o in self.computations.get(comp_name, []):
+            if o.kind == "dynamic-update-slice" and len(o.operands) > 1 \
+                    and _shape_elems(o.out_type) == out_e:
+                upd = _shape_bytes(self.symbols.get(o.operands[1], ""))
+                if upd:
+                    return upd
+        return self._out_bytes(op)
+
+    def _out_bytes(self, op: Op) -> float:
+        return _shape_bytes(op.out_type)
+
+    def _group_size(self, line: str) -> int:
+        m = _REPLICA_IOTA_RE.search(line)
+        if m:
+            return int(m.group(2))
+        m = _REPLICA_GROUPS_RE.search(line)
+        if m:
+            ids = [x for x in m.group(1).split(",") if x.strip()]
+            return max(1, len(ids))
+        return self.default_group
+
+    def _dot_flops(self, op: Op) -> float:
+        out_elems = _shape_elems(op.out_type)
+        cd = _LHS_CDIMS_RE.search(op.line)
+        k = 1.0
+        if cd and op.operands:
+            lhs_dims = _first_shape_dims(
+                self.symbols.get(op.operands[0], "")
+            )
+            if lhs_dims is not None and cd.group(1):
+                for idx in cd.group(1).split(","):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, op: Op) -> float:
+        # depthwise/grouped convs in our stacks are small; approximate
+        # 2 * out_elems * prod(kernel dims except output feature)
+        out_elems = _shape_elems(op.out_type)
+        k_elems = 1.0
+        if len(op.operands) > 1:
+            kd = _first_shape_dims(self.symbols.get(op.operands[1], ""))
+            if kd:
+                full = 1
+                for d in kd:
+                    full *= d
+                od = _first_shape_dims(op.out_type) or [1]
+                # divide by output-feature dim (last of kernel by default)
+                k_elems = full / max(1, kd[-1])
+        return 2.0 * out_elems * k_elems
+
+    def _fusion_flops(self, comp_name: str) -> float:
+        """Dot/conv FLOPs inside a fusion computation (bytes NOT counted)."""
+        total = 0.0
+        for op in self.computations.get(comp_name, []):
+            if op.kind == "dot":
+                total += self._dot_flops(op)
+            elif op.kind == "convolution":
+                total += self._conv_flops(op)
+            elif op.kind == "fusion":
+                m = _ATTR_CALLS_RE.search(op.line)
+                if m:
+                    total += self._fusion_flops(m.group(1))
+        return total
+
+    def _trip_count(self, cond_name: str) -> int | None:
+        best = None
+        for op in self.computations.get(cond_name, []):
+            for o in op.operands:
+                if o in self.constants:
+                    v = self.constants[o]
+                    best = v if best is None else max(best, v)
+            if op.name in self.constants:
+                v = self.constants[op.name]
+                best = v if best is None else max(best, v)
+        return best
+
+    # ------------------------------------------------------------------
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = Cost()
+        self._memo[comp_name] = total  # guard cycles
+        for op in self.computations.get(comp_name, []):
+            k = op.kind
+            if k in _PLUMBING:
+                continue
+            if k == "while":
+                mc = _ATTR_COND_RE.search(op.line)
+                mb = _ATTR_BODY_RE.search(op.line)
+                # XLA annotates loops it has bounded: the authoritative count
+                mt = _TRIP_COUNT_RE.search(op.line)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    trip = self._trip_count(mc.group(1)) if mc else None
+                if trip is None:
+                    trip = 1
+                    self.unscaled_whiles += 1
+                if mb:
+                    total.add(self.cost_of(mb.group(1)), mult=trip)
+                if mc:
+                    total.add(self.cost_of(mc.group(1)), mult=trip)
+                continue
+            if k == "conditional":
+                mb = _ATTR_BRANCHES_RE.search(op.line)
+                names = []
+                if mb:
+                    names = _OPERAND_RE.findall(mb.group(1)) or [
+                        x.strip() for x in mb.group(1).split(",")
+                    ]
+                else:
+                    names = [m for m in
+                             (_ATTR_COND_RE.search(op.line),) if m]
+                branch_costs = [self.cost_of(n) for n in names if n]
+                if branch_costs:
+                    mx = max(branch_costs,
+                             key=lambda c: (c.flops, c.hbm_bytes))
+                    total.add(mx)
+                continue
+            if k in ("call", "async-start"):
+                m = _ATTR_TOAPPLY_RE.search(op.line) or \
+                    _ATTR_CALLS_RE.search(op.line)
+                if m:
+                    total.add(self.cost_of(m.group(1)))
+                continue
+            if k in _COLLECTIVES:
+                base = k[:-6] if k.endswith("-start") else k
+                out_b = self._out_bytes(op)
+                in_b = self._operand_bytes(op) or out_b
+                n = self._group_size(op.line)
+                f = (n - 1) / n if n > 1 else 0.0
+                link = {
+                    "all-reduce": 2.0 * in_b * f,
+                    "all-gather": out_b * f,
+                    "reduce-scatter": in_b * f,
+                    "all-to-all": in_b * f,
+                    "collective-permute": in_b if n > 1 else 0.0,
+                }[base]
+                total.coll[base] = total.coll.get(base, 0.0) + link
+                total.coll_payload += max(in_b, out_b)
+                total.n_coll += 1
+                total.hbm_bytes += in_b + out_b
+                continue
+            if k == "fusion":
+                m = _ATTR_CALLS_RE.search(op.line)
+                if m:
+                    total.flops += self._fusion_flops(m.group(1))
+                    total.hbm_bytes += self._fusion_in_traffic(
+                        m.group(1), op.operands
+                    ) + self._fusion_out_bytes(m.group(1), op)
+                else:
+                    total.hbm_bytes += self._operand_bytes(op) + \
+                        self._out_bytes(op)
+                continue
+            if k in self._SLICERS:
+                # reads only the slice it produces (+ writes it)
+                total.hbm_bytes += 2.0 * self._out_bytes(op)
+                continue
+            if k in ("dynamic-update-slice", "scatter"):
+                # in-place update: traffic ~ 2x the update operand, not the
+                # whole buffer (matters for decode KV-cache writes)
+                upd = (
+                    _shape_bytes(self.symbols.get(op.operands[1], ""))
+                    if len(op.operands) > 1 else self._out_bytes(op)
+                )
+                total.hbm_bytes += 2.0 * upd
+                continue
+            if k == "dot":
+                total.flops += self._dot_flops(op)
+                total.hbm_bytes += self._operand_bytes(op) + \
+                    self._out_bytes(op)
+                continue
+            if k == "convolution":
+                total.flops += self._conv_flops(op)
+                total.hbm_bytes += self._operand_bytes(op) + \
+                    self._out_bytes(op)
+                continue
+            # generic traffic-bearing op
+            total.hbm_bytes += self._operand_bytes(op) + self._out_bytes(op)
+            if k in ("exponential", "tanh", "log", "rsqrt", "sqrt",
+                     "logistic", "power", "sine", "cosine"):
+                total.transcendental += _shape_elems(op.out_type)
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            # fall back: largest computation
+            best = Cost()
+            for name in self.computations:
+                c = self.cost_of(name)
+                if c.flops >= best.flops:
+                    best = c
+            return best
+        return self.cost_of(self.entry)
+
+
+def breakdown(hlo_text: str, default_group: int = 1, top: int = 25):
+    """Top cost-contributing ops with their effective trip multipliers —
+    the dry-run 'profile' used by the §Perf iterations."""
+    mod = HloModule(hlo_text, default_group=default_group)
+    entries: list[dict] = []
+
+    def walk(comp: str, mult: float, path: str):
+        for op in mod.computations.get(comp, []):
+            k = op.kind
+            if k in _PLUMBING:
+                continue
+            if k == "while":
+                mt = _TRIP_COUNT_RE.search(op.line)
+                mc = _ATTR_COND_RE.search(op.line)
+                mb = _ATTR_BODY_RE.search(op.line)
+                trip = int(mt.group(1)) if mt else (
+                    mod._trip_count(mc.group(1)) if mc else None) or 1
+                if mb:
+                    walk(mb.group(1), mult * trip, path + f"/while×{trip}")
+                continue
+            if k in ("call", "async-start"):
+                m = _ATTR_TOAPPLY_RE.search(op.line) or \
+                    _ATTR_CALLS_RE.search(op.line)
+                if m:
+                    walk(m.group(1), mult, path)
+                continue
+            if k == "conditional":
+                m = _ATTR_BRANCHES_RE.search(op.line)
+                if m:
+                    names = _OPERAND_RE.findall(m.group(1))
+                    costs = [(n, mod.cost_of(n)) for n in names]
+                    if costs:
+                        n, _ = max(costs, key=lambda t: t[1].flops)
+                        walk(n, mult, path + "/cond")
+                continue
+            flops = hbm = 0.0
+            if k == "fusion":
+                m = _ATTR_CALLS_RE.search(op.line)
+                if m:
+                    flops = mod._fusion_flops(m.group(1))
+                    hbm = mod._fusion_in_traffic(
+                        m.group(1), op.operands) + mod._fusion_out_bytes(
+                        m.group(1), op)
+            elif k == "dot":
+                flops = mod._dot_flops(op)
+                hbm = mod._operand_bytes(op) + mod._out_bytes(op)
+            elif k in mod._SLICERS:
+                hbm = 2.0 * mod._out_bytes(op)
+            elif k in ("dynamic-update-slice", "scatter"):
+                upd = (_shape_bytes(mod.symbols.get(op.operands[1], ""))
+                       if len(op.operands) > 1 else mod._out_bytes(op))
+                hbm = 2.0 * upd
+            elif k in _COLLECTIVES:
+                hbm = mod._operand_bytes(op) + mod._out_bytes(op)
+            else:
+                hbm = mod._operand_bytes(op) + mod._out_bytes(op)
+            entries.append({
+                "op": op.name, "kind": k, "path": path, "mult": mult,
+                "flops": flops * mult, "hbm": hbm * mult,
+                "line": op.line.strip()[:160],
+            })
+
+    walk(mod.entry or "", 1.0, "entry")
+    entries.sort(key=lambda e: e["hbm"], reverse=True)
+    by_hbm = entries[:top]
+    entries2 = sorted(entries, key=lambda e: e["flops"], reverse=True)
+    return {"by_hbm": by_hbm, "by_flops": entries2[:top]}
+
+
+def analyze_text(hlo_text: str, default_group: int = 1):
+    mod = HloModule(hlo_text, default_group=default_group)
+    cost = mod.entry_cost()
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "transcendentals": cost.transcendental,
+        "collectives_by_kind": dict(cost.coll),
+        "collective_link_bytes": cost.collective_link_bytes,
+        "collective_payload_bytes": cost.coll_payload,
+        "n_collectives": cost.n_coll,
+        "unscaled_whiles": mod.unscaled_whiles,
+    }

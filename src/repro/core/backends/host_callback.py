@@ -1,0 +1,104 @@
+"""'Perfmon mode' — a deliberately breakpoint-like backend.
+
+The paper's central overhead result (Figs. 2–3) is that perfmon's
+ptrace/breakpoint interception costs 2–3 orders of magnitude more than
+compiler-directed callbacks, because every monitored call detours through
+the kernel/monitor process.  The JAX analogue of that detour is an
+``io_callback`` on every scope entry: the device round-trips to the host,
+serializes the operands, runs Python, and stalls the dispatch queue.
+
+This backend exists so benchmarks/overhead.py can reproduce the paper's
+hierarchy (vanilla < selective <= all << perfmon) on our stack.  It is NOT
+the production path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HostMonitor:
+    """Host-side 'monitor process': receives one callback per scope call."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.calls: dict[str, int] = {}
+        self.values: dict[str, float] = {}
+        self.timestamps: dict[str, list[float]] = {}
+
+    def on_call(self, scope: str, value: float) -> None:
+        with self._lock:
+            self.calls[scope] = self.calls.get(scope, 0) + 1
+            self.values[scope] = self.values.get(scope, 0.0) + float(value)
+            self.timestamps.setdefault(scope, []).append(time.perf_counter())
+
+    def reset(self) -> None:
+        with self._lock:
+            self.calls.clear()
+            self.values.clear()
+            self.timestamps.clear()
+
+
+_GLOBAL_MONITOR = HostMonitor()
+
+
+def global_monitor() -> HostMonitor:
+    return _GLOBAL_MONITOR
+
+
+def breakpoint_probe(scope: str, value, monitor: HostMonitor | None = None):
+    """Insert a host round-trip 'breakpoint' carrying one scalar.
+
+    Returns ``value`` with a data dependency on the callback so XLA cannot
+    elide it (mirrors how a real breakpoint serializes execution).
+    """
+    mon = monitor or _GLOBAL_MONITOR
+    v = jnp.asarray(value, jnp.float32)
+    if v.ndim > 0:
+        v = jnp.mean(v)
+
+    def cb(x):
+        mon.on_call(scope, float(np.asarray(x)))
+        return np.asarray(x, np.float32)
+
+    out = jax.experimental.io_callback(cb, jax.ShapeDtypeStruct((), jnp.float32), v,
+                                       ordered=True)
+    return out
+
+
+def instrument_breakpoint(fn: Callable, scope: str,
+                          monitor: HostMonitor | None = None) -> Callable:
+    """Wrap ``fn`` so every call fires entry+exit breakpoints (perfmon mode)."""
+
+    def wrapped(*args, **kwargs):
+        # entry breakpoint on the first array argument (or 0.0)
+        first = next(
+            (a for a in jax.tree.leaves((args, kwargs))
+             if isinstance(a, (jax.Array, jnp.ndarray))),
+            jnp.float32(0.0),
+        )
+        tick = breakpoint_probe(scope + "@entry", jnp.float32(0.0) * jnp.mean(
+            jnp.asarray(first, jnp.float32).ravel()[0]), monitor)
+        out = fn(*args, **kwargs)
+        leaves = jax.tree.leaves(out)
+        anchor = leaves[0] if leaves else jnp.float32(0.0)
+        exit_v = breakpoint_probe(
+            scope + "@exit",
+            jnp.mean(jnp.asarray(anchor, jnp.float32)) + tick * 0,
+            monitor,
+        )
+        # thread the exit value back so the callback stays in the graph
+        if leaves and isinstance(leaves[0], (jax.Array, jnp.ndarray)):
+            patched = leaves[0] + jnp.zeros_like(
+                leaves[0], leaves[0].dtype
+            ) * exit_v.astype(leaves[0].dtype)
+            out = jax.tree.unflatten(jax.tree.structure(out),
+                                     [patched] + leaves[1:])
+        return out
+
+    return wrapped

@@ -1,0 +1,97 @@
+"""Host wall-clock backend: dispatch timing around jitted blocks.
+
+The cheapest possible "effect" counter — equivalent to the paper's use of
+UNIX ``time`` for the overhead study, but per named block and feeding the
+runtime's adaptive hooks (straggler detection uses the per-step series).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+
+
+@dataclasses.dataclass
+class TimingStats:
+    name: str
+    calls: int
+    total_s: float
+    mean_s: float
+    p50_s: float
+    p95_s: float
+    max_s: float
+
+
+class HostTimer:
+    def __init__(self):
+        self.samples: dict[str, list[float]] = {}
+
+    def wrap(self, fn: Callable, name: str, block: bool = True) -> Callable:
+        """Wrap a (possibly jitted) callable with wall-clock timing.
+
+        ``block=True`` calls ``block_until_ready`` on the outputs so the
+        measurement covers device execution, not just dispatch.
+        """
+
+        def timed(*args, **kwargs):
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            if block:
+                out = jax.block_until_ready(out)
+            self.samples.setdefault(name, []).append(time.perf_counter() - t0)
+            return out
+
+        return timed
+
+    def record(self, name: str, seconds: float) -> None:
+        self.samples.setdefault(name, []).append(seconds)
+
+    def stats(self, name: str) -> TimingStats:
+        xs = sorted(self.samples.get(name, []))
+        if not xs:
+            return TimingStats(name, 0, 0.0, 0.0, 0.0, 0.0, 0.0)
+        n = len(xs)
+        return TimingStats(
+            name=name,
+            calls=n,
+            total_s=sum(xs),
+            mean_s=sum(xs) / n,
+            p50_s=xs[n // 2],
+            p95_s=xs[min(n - 1, int(0.95 * n))],
+            max_s=xs[-1],
+        )
+
+    def all_stats(self) -> list[TimingStats]:
+        return [self.stats(k) for k in sorted(self.samples)]
+
+    def outliers(self, name: str, sigma: float = 3.0) -> list[int]:
+        """Indices of samples more than ``sigma`` stdevs above the median —
+        the straggler-detection primitive."""
+        xs = self.samples.get(name, [])
+        if len(xs) < 4:
+            return []
+        med = statistics.median(xs)
+        sd = statistics.pstdev(xs) or 1e-12
+        return [i for i, x in enumerate(xs) if (x - med) / sd > sigma]
+
+
+def time_compiled(fn: Callable, *args, iters: int = 10, warmup: int = 2,
+                  **kwargs) -> dict[str, Any]:
+    """Benchmark helper: median wall time of a callable over ``iters`` runs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return {
+        "median_s": ts[len(ts) // 2],
+        "min_s": ts[0],
+        "mean_s": sum(ts) / len(ts),
+        "iters": iters,
+    }

@@ -1,0 +1,313 @@
+"""ScALPEL configuration-file grammar (paper Table 1), parse + serialize.
+
+The format is kept byte-compatible with the paper's layout::
+
+    BINARY=my_a.out          // name of the binary
+    NO_FUNCTIONS=1           // number of functions
+    [FUNCTION]
+    FUNC_NAME=foo            // name of the function (scope path here)
+    NO_EVENTS=2              // total number of events
+    [EVENT]
+    ID=DATA_CACHE_MISSES     // the event name or id
+    NO_SUBEVENTS=0           // number of subevents
+    [/EVENT]
+    [EVENT]
+    ID=DISPATCHED_FPU
+    NO_SUBEVENTS=3
+    [SUBEVENT]
+    ID=OPS_ADD
+    ID=OPS_ADD_PIPE_LOAD_OPS
+    ID=OPS_MULTIPLY_PIPE_LOAD_OPS
+    [/SUBEVENT]
+    [/EVENT]
+    [/FUNCTION]
+
+Extensions (all optional, default to the paper's exhaustive behaviour):
+
+* ``MULTIPLEX_PERIOD=<n>`` inside [FUNCTION] — cycle event sets every n calls
+  (the paper's case study used 100).
+* ``SET=<k>`` inside [EVENT] — assign the event to multiplex set k.  Without
+  SET keys all events share set 0 (exhaustive monitoring).
+* ``TENSOR=<name>`` inside [EVENT] — bind the event to a named probe tensor
+  (equivalently write ``ID=ACT_RMS:x``).
+
+A config names the *monitored subset*; the compile-time set (MonitorSpec) may
+be larger.  ``apply_config`` folds a config into (spec, params): scopes in the
+config are enabled, all others disabled — reloading a config at runtime is a
+mask/period swap, no re-trace (paper §3.3, SIGUSR1 reload).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .context import EventSpec, MonitorSpec, ScopeContext
+from .counters import MonitorParams
+
+
+@dataclasses.dataclass
+class EventConfig:
+    spec: EventSpec
+    set_index: int = 0
+
+
+@dataclasses.dataclass
+class FunctionConfig:
+    name: str
+    events: list[EventConfig] = dataclasses.field(default_factory=list)
+    multiplex_period: int = 1
+
+    def to_scope_context(self) -> ScopeContext:
+        if not self.events:
+            return ScopeContext.exhaustive(self.name, [])
+        n_sets = max(e.set_index for e in self.events) + 1
+        sets: list[list[EventSpec]] = [[] for _ in range(n_sets)]
+        for e in self.events:
+            sets[e.set_index].append(e.spec)
+        sets = [s for s in sets if s]  # drop empty sets
+        if len(sets) == 1:
+            ctx = ScopeContext.exhaustive(self.name, sets[0])
+            return dataclasses.replace(
+                ctx, default_period=max(1, self.multiplex_period)
+            )
+        return ScopeContext.multiplexed(
+            self.name, sets, period=max(1, self.multiplex_period)
+        )
+
+
+@dataclasses.dataclass
+class ScalpelConfig:
+    binary: str = "a.out"
+    functions: list[FunctionConfig] = dataclasses.field(default_factory=list)
+
+    @property
+    def scope_names(self) -> list[str]:
+        return [f.name for f in self.functions]
+
+    def to_spec(self) -> MonitorSpec:
+        return MonitorSpec.of([f.to_scope_context() for f in self.functions])
+
+
+class ConfigError(ValueError):
+    pass
+
+
+def _strip(line: str) -> str:
+    # '//' starts a comment (paper style); tolerate '#' too.
+    for marker in ("//", "#"):
+        if marker in line:
+            line = line[: line.index(marker)]
+    return line.strip()
+
+
+def parse(text: str) -> ScalpelConfig:
+    cfg = ScalpelConfig()
+    fn: FunctionConfig | None = None
+    ev: EventConfig | None = None
+    in_sub = False
+    declared_functions = declared_events = declared_subs = None
+
+    for ln, raw in enumerate(text.splitlines(), 1):
+        line = _strip(raw)
+        if not line:
+            continue
+
+        def err(msg):
+            raise ConfigError(f"line {ln}: {msg} ({raw.strip()!r})")
+
+        if line == "[FUNCTION]":
+            if fn is not None:
+                err("nested [FUNCTION]")
+            fn = FunctionConfig(name="")
+            continue
+        if line == "[/FUNCTION]":
+            if fn is None:
+                err("[/FUNCTION] without [FUNCTION]")
+            if not fn.name:
+                err("FUNCTION block missing FUNC_NAME")
+            if declared_events is not None and len(fn.events) != declared_events:
+                err(
+                    f"NO_EVENTS={declared_events} but {len(fn.events)} "
+                    "[EVENT] blocks found"
+                )
+            declared_events = None
+            cfg.functions.append(fn)
+            fn = None
+            continue
+        if line == "[EVENT]":
+            if fn is None:
+                err("[EVENT] outside [FUNCTION]")
+            if ev is not None:
+                err("nested [EVENT]")
+            ev = EventConfig(spec=EventSpec(event=""))
+            continue
+        if line == "[/EVENT]":
+            if ev is None:
+                err("[/EVENT] without [EVENT]")
+            if not ev.spec.event:
+                err("EVENT block missing ID")
+            base = ev.spec
+            subs = getattr(ev, "_subs", [])
+            if declared_subs not in (None, len(subs)):
+                err(f"NO_SUBEVENTS={declared_subs} but {len(subs)} subevent IDs")
+            declared_subs = None
+            if subs:
+                for s in subs:
+                    fn.events.append(
+                        EventConfig(
+                            spec=dataclasses.replace(base, subevent=s),
+                            set_index=ev.set_index,
+                        )
+                    )
+            else:
+                fn.events.append(ev)
+            ev = None
+            continue
+        if line == "[SUBEVENT]":
+            if ev is None:
+                err("[SUBEVENT] outside [EVENT]")
+            in_sub = True
+            continue
+        if line == "[/SUBEVENT]":
+            in_sub = False
+            continue
+
+        if "=" not in line:
+            err("expected KEY=VALUE")
+        key, val = (p.strip() for p in line.split("=", 1))
+
+        if in_sub:
+            if key != "ID":
+                err("only ID= allowed inside [SUBEVENT]")
+            if not hasattr(ev, "_subs"):
+                ev._subs = []  # type: ignore[attr-defined]
+            ev._subs.append(val)  # type: ignore[attr-defined]
+            continue
+
+        if ev is not None:
+            if key == "ID":
+                parsed = EventSpec.parse(val)
+                ev.spec = dataclasses.replace(
+                    parsed, subevent=ev.spec.subevent or parsed.subevent
+                )
+            elif key == "NO_SUBEVENTS":
+                declared_subs = int(val) or None
+            elif key == "SET":
+                ev.set_index = int(val)
+            elif key == "TENSOR":
+                ev.spec = dataclasses.replace(ev.spec, tensor=val)
+            else:
+                err(f"unknown [EVENT] key {key}")
+            continue
+
+        if fn is not None:
+            if key == "FUNC_NAME":
+                fn.name = val
+            elif key == "NO_EVENTS":
+                declared_events = int(val)
+            elif key == "MULTIPLEX_PERIOD":
+                fn.multiplex_period = int(val)
+            else:
+                err(f"unknown [FUNCTION] key {key}")
+            continue
+
+        if key == "BINARY":
+            cfg.binary = val
+        elif key == "NO_FUNCTIONS":
+            declared_functions = int(val)
+        else:
+            err(f"unknown top-level key {key}")
+
+    if fn is not None:
+        raise ConfigError("unterminated [FUNCTION] block")
+    if declared_functions is not None and declared_functions != len(cfg.functions):
+        raise ConfigError(
+            f"NO_FUNCTIONS={declared_functions} but "
+            f"{len(cfg.functions)} [FUNCTION] blocks found"
+        )
+    return cfg
+
+
+def parse_file(path: str) -> ScalpelConfig:
+    with open(path) as f:
+        return parse(f.read())
+
+
+def serialize(cfg: ScalpelConfig) -> str:
+    out = [f"BINARY={cfg.binary}", f"NO_FUNCTIONS={len(cfg.functions)}"]
+    for fn in cfg.functions:
+        out.append("[FUNCTION]")
+        out.append(f"FUNC_NAME={fn.name}")
+        if fn.multiplex_period != 1:
+            out.append(f"MULTIPLEX_PERIOD={fn.multiplex_period}")
+        out.append(f"NO_EVENTS={len(fn.events)}")
+        for e in fn.events:
+            out.append("[EVENT]")
+            sid = e.spec.event
+            if e.spec.tensor:
+                sid += f":{e.spec.tensor}"
+            if e.spec.subevent:
+                sid += f"/{e.spec.subevent}"
+            out.append(f"ID={sid}")
+            if e.set_index:
+                out.append(f"SET={e.set_index}")
+            out.append("NO_SUBEVENTS=0")
+            out.append("[/EVENT]")
+        out.append("[/FUNCTION]")
+    return "\n".join(out) + "\n"
+
+
+# --------------------------------------------------------------------------
+# Folding a config into a live (spec, params) pair.
+# --------------------------------------------------------------------------
+
+def apply_config(
+    spec: MonitorSpec, cfg: ScalpelConfig, strict: bool = False
+) -> tuple[MonitorParams, list[str]]:
+    """Derive MonitorParams from a config against the compile-time ``spec``.
+
+    Scopes named in the config are enabled with their period; all other
+    scopes are masked off (interception only).  Config events that are not in
+    the scope's compiled context cannot be added without a re-trace — they
+    are reported back (and raise if ``strict``), mirroring the paper's rule
+    that runtime additions must come from the compile-time set.
+    """
+    params = MonitorParams.all_off(spec)
+    unsatisfiable: list[str] = []
+    import numpy as np
+
+    scope_mask = np.zeros((spec.n_scopes,), np.float32)
+    slot_mask = np.zeros((spec.n_scopes, spec.max_slots), np.float32)
+    period = np.asarray(params.period).copy()
+
+    for fn in cfg.functions:
+        if fn.name not in spec:
+            unsatisfiable.append(f"scope:{fn.name}")
+            continue
+        si = spec.scope_index(fn.name)
+        scope_mask[si] = 1.0
+        period[si] = max(1, fn.multiplex_period)
+        ctx = spec.context(fn.name)
+        for e in fn.events:
+            sid = e.spec.slot_id
+            if sid in ctx.slot_ids:
+                slot_mask[si, ctx.slot_ids.index(sid)] = 1.0
+            else:
+                unsatisfiable.append(f"slot:{fn.name}:{sid}")
+        if not fn.events:  # bare FUNC block: enable all compiled slots
+            slot_mask[si, : len(ctx.slots)] = 1.0
+
+    if strict and unsatisfiable:
+        raise ConfigError(
+            "config requests monitoring outside the compile-time set "
+            f"(re-trace required): {unsatisfiable}"
+        )
+    import jax.numpy as jnp
+
+    return (
+        MonitorParams(
+            scope_mask=jnp.asarray(scope_mask),
+            slot_mask=jnp.asarray(slot_mask),
+            period=jnp.asarray(period),
+        ),
+        unsatisfiable,
+    )

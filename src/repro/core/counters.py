@@ -1,0 +1,125 @@
+"""Counter state and runtime monitor parameters (the dynamic half).
+
+``CounterState`` is the accumulated counter memory — an ordinary pytree of
+device arrays that the application threads through its steps (and that
+``lax.scan`` can carry).  ``MonitorParams`` is the runtime-reconfigurable
+knob set: which scopes are monitored (mask), which slots within a scope are
+live (slot_mask) and the call-count multiplex period — all *dynamic* inputs
+to the jitted step, so flipping them never re-traces (paper C2/C3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .context import MonitorSpec
+
+Array = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CounterState:
+    """Accumulated counters, shaped by the compile-time MonitorSpec.
+
+    calls   [n_scopes]            i32 — times each scope was *intercepted*
+    values  [n_scopes, max_slots] f32 — accumulated event values
+    samples [n_scopes, max_slots] i32 — calls on which each slot was computed
+    """
+
+    calls: Array
+    values: Array
+    samples: Array
+
+    @staticmethod
+    def zeros(spec: MonitorSpec) -> "CounterState":
+        n, m = spec.n_scopes, spec.max_slots
+        return CounterState(
+            calls=jnp.zeros((n,), jnp.int32),
+            values=jnp.zeros((n, m), jnp.float32),
+            samples=jnp.zeros((n, m), jnp.int32),
+        )
+
+    def add(self, other: "CounterState") -> "CounterState":
+        return CounterState(
+            calls=self.calls + other.calls,
+            values=self.values + other.values,
+            samples=self.samples + other.samples,
+        )
+
+    def psum(self, axis_names) -> "CounterState":
+        """Cross-shard reduction (the paper's 'MPI support')."""
+        return CounterState(
+            calls=jax.lax.psum(self.calls, axis_names),
+            values=jax.lax.psum(self.values, axis_names),
+            samples=jax.lax.psum(self.samples, axis_names),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MonitorParams:
+    """Runtime-mutable monitoring controls (no re-trace on change).
+
+    scope_mask [n_scopes]            f32 — 1.0: monitor, 0.0: intercept only
+    slot_mask  [n_scopes, max_slots] f32 — per-slot enable within a scope
+    period     [n_scopes]            i32 — multiplex period (calls per set)
+    """
+
+    scope_mask: Array
+    slot_mask: Array
+    period: Array
+
+    @staticmethod
+    def all_on(spec: MonitorSpec) -> "MonitorParams":
+        n, m = spec.n_scopes, spec.max_slots
+        period = np.array(
+            [max(1, c.default_period) for c in spec.contexts], np.int32
+        )
+        return MonitorParams(
+            scope_mask=jnp.ones((n,), jnp.float32),
+            slot_mask=jnp.ones((n, m), jnp.float32),
+            period=jnp.asarray(period),
+        )
+
+    @staticmethod
+    def all_off(spec: MonitorSpec) -> "MonitorParams":
+        p = MonitorParams.all_on(spec)
+        return MonitorParams(
+            scope_mask=jnp.zeros_like(p.scope_mask),
+            slot_mask=p.slot_mask,
+            period=p.period,
+        )
+
+    @staticmethod
+    def selective(spec: MonitorSpec, scopes: list[str]) -> "MonitorParams":
+        """Monitor only the named scopes (the paper's 'selective' case)."""
+        p = MonitorParams.all_off(spec)
+        mask = np.zeros((spec.n_scopes,), np.float32)
+        for s in scopes:
+            mask[spec.scope_index(s)] = 1.0
+        return MonitorParams(
+            scope_mask=jnp.asarray(mask), slot_mask=p.slot_mask, period=p.period
+        )
+
+    # -- functional updates (host side, between steps) -------------------
+    def enable(self, spec: MonitorSpec, scope: str, on: bool = True):
+        mask = np.asarray(self.scope_mask).copy()
+        mask[spec.scope_index(scope)] = 1.0 if on else 0.0
+        return dataclasses.replace(self, scope_mask=jnp.asarray(mask))
+
+    def set_slot(self, spec: MonitorSpec, scope: str, slot_id: str, on: bool):
+        sm = np.asarray(self.slot_mask).copy()
+        sm[spec.scope_index(scope), spec.slot_index(scope, slot_id)] = (
+            1.0 if on else 0.0
+        )
+        return dataclasses.replace(self, slot_mask=jnp.asarray(sm))
+
+    def set_period(self, spec: MonitorSpec, scope: str, period: int):
+        p = np.asarray(self.period).copy()
+        p[spec.scope_index(scope)] = max(1, int(period))
+        return dataclasses.replace(self, period=jnp.asarray(p))

@@ -1,0 +1,269 @@
+"""In-graph event library — the TPU analogue of hardware performance counters.
+
+The paper reads MSR-backed counters (DTLB_MISSES, L2_LINES_IN, RESOURCE_STALLS
+...) through libpfm.  On a TPU there is no user-readable MSR file, but the
+*causes* the paper is after are visible to the compiler (FLOPs / bytes /
+collective traffic — see backends/xla_cost.py) and to the program itself:
+statistics of the live tensors flowing through each scope.  This module is the
+registry of those in-graph events.
+
+Every event is a pure function ``(tensors: dict[str, Array]) -> f32 scalar``
+and is tagged EXTENSIVE (accumulates by summation across calls: counts,
+bytes, flops) or INTENSIVE (accumulates as a mean across monitored calls:
+rms, entropy, fractions).  report.py uses the tag to turn multiplexed samples
+back into exhaustive estimates, reproducing the paper's Fig. 4 methodology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .context import EventSpec
+
+Array = jnp.ndarray
+
+EXTENSIVE = "extensive"
+INTENSIVE = "intensive"
+
+
+@dataclasses.dataclass(frozen=True)
+class EventDef:
+    name: str
+    kind: str  # EXTENSIVE | INTENSIVE
+    fn: Callable[..., Array]  # (tensor) or (tensors-dict) — see wants_dict
+    wants_dict: bool = False  # True: fn(tensors, subevent); False: fn(tensor)
+    subevents: tuple[str, ...] = ()
+    requires: tuple[str, ...] = ()  # probe tensor names a dict-event needs
+    doc: str = ""
+
+
+_REGISTRY: dict[str, EventDef] = {}
+
+
+def register(
+    name: str,
+    kind: str,
+    *,
+    wants_dict: bool = False,
+    subevents: tuple[str, ...] = (),
+    requires: tuple[str, ...] = (),
+    doc: str = "",
+):
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"event {name!r} already registered")
+        _REGISTRY[name] = EventDef(
+            name=name, kind=kind, fn=fn, wants_dict=wants_dict,
+            subevents=subevents, requires=requires, doc=doc,
+        )
+        return fn
+
+    return deco
+
+
+def computable(spec: EventSpec, tensor_names) -> bool:
+    """Can this slot be evaluated from a probe call providing ``tensor_names``?
+
+    A scope may issue several probe() calls per invocation (e.g. MoE probes
+    router stats mid-block and 'out' at the end); each call computes only the
+    slots its tensors satisfy.
+    """
+    ev = lookup(spec.event)
+    names = set(tensor_names)
+    if ev.wants_dict:
+        return all(r in names for r in ev.requires)
+    if spec.tensor:
+        return spec.tensor in names
+    return len(names) == 1
+
+
+def lookup(name: str) -> EventDef:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown event {name!r}; known: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+def registered() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def kind_of(spec: EventSpec) -> str:
+    return lookup(spec.event).kind
+
+
+def compute(spec: EventSpec, tensors: dict[str, Array]) -> Array:
+    """Evaluate one event slot on the probed tensors (traced)."""
+    ev = lookup(spec.event)
+    if ev.wants_dict:
+        val = ev.fn(tensors, spec.subevent)
+    else:
+        if spec.tensor:
+            if spec.tensor not in tensors:
+                raise KeyError(
+                    f"event {spec.slot_id}: probe tensor {spec.tensor!r} not "
+                    f"provided (have {sorted(tensors)})"
+                )
+            x = tensors[spec.tensor]
+        else:
+            if len(tensors) != 1:
+                raise KeyError(
+                    f"event {spec.event} needs an explicit ':tensor' qualifier "
+                    f"when the scope probes multiple tensors {sorted(tensors)}"
+                )
+            (x,) = tensors.values()
+        val = ev.fn(x)
+    return jnp.asarray(val, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Generic per-tensor events (apply to any probed tensor via "NAME:tensor").
+# --------------------------------------------------------------------------
+
+def _f32(x: Array) -> Array:
+    return x.astype(jnp.float32)
+
+
+@register("ACT_RMS", INTENSIVE, doc="root-mean-square of the tensor")
+def _act_rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(_f32(x))) + 1e-30)
+
+
+@register("ACT_MEAN_ABS", INTENSIVE, doc="mean |x|")
+def _act_mean_abs(x):
+    return jnp.mean(jnp.abs(_f32(x)))
+
+
+@register("ACT_MAX_ABS", INTENSIVE, doc="max |x| (overflow watch)")
+def _act_max_abs(x):
+    return jnp.max(jnp.abs(_f32(x)))
+
+
+@register("ACT_ZERO_FRAC", INTENSIVE, doc="fraction of exact zeros (sparsity)")
+def _act_zero_frac(x):
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+@register("NAN_COUNT", EXTENSIVE, doc="number of NaN entries")
+def _nan_count(x):
+    return jnp.sum(jnp.isnan(_f32(x)).astype(jnp.float32))
+
+
+@register("INF_COUNT", EXTENSIVE, doc="number of +-Inf entries")
+def _inf_count(x):
+    return jnp.sum(jnp.isinf(_f32(x)).astype(jnp.float32))
+
+
+@register("NUMEL", EXTENSIVE, doc="number of elements seen (token/elt count)")
+def _numel(x):
+    return jnp.float32(np.prod(x.shape) if x.shape else 1)
+
+
+@register("L2NORM", INTENSIVE, doc="L2 norm of the tensor")
+def _l2norm(x):
+    return jnp.sqrt(jnp.sum(jnp.square(_f32(x))) + 1e-30)
+
+
+@register("MEAN", INTENSIVE, doc="mean value")
+def _mean(x):
+    return jnp.mean(_f32(x))
+
+
+# --------------------------------------------------------------------------
+# Specialized events (bind to specific probe names).
+# --------------------------------------------------------------------------
+
+@register(
+    "ATTN_ENTROPY", INTENSIVE,
+    doc="mean entropy (nats) of attention rows; probe tensor = probabilities "
+        "over the last axis",
+)
+def _attn_entropy(p):
+    p = _f32(p)
+    return jnp.mean(-jnp.sum(p * jnp.log(p + 1e-9), axis=-1))
+
+
+@register(
+    "MOE_LOAD", INTENSIVE, wants_dict=True,
+    subevents=("MAX_FRAC", "MIN_FRAC", "CV", "AUX_LOSS"),
+    requires=("router_probs",),
+    doc="expert load statistics; needs probe 'router_probs' "
+        "[tokens, experts] and optionally 'expert_mask' [tokens, experts]",
+)
+def _moe_load(tensors, subevent):
+    probs = _f32(tensors["router_probs"])  # [tokens, experts]
+    if "expert_mask" in tensors:
+        load = jnp.mean(_f32(tensors["expert_mask"]), axis=0)  # frac per expert
+    else:
+        load = jnp.mean(probs, axis=0)
+    n_e = load.shape[-1]
+    if subevent == "MAX_FRAC":
+        return jnp.max(load) * n_e  # 1.0 == perfectly balanced
+    if subevent == "MIN_FRAC":
+        return jnp.min(load) * n_e
+    if subevent == "CV":
+        return jnp.std(load) / (jnp.mean(load) + 1e-9)
+    if subevent == "AUX_LOSS":
+        # Switch-transformer style load-balancing loss.
+        importance = jnp.mean(probs, axis=0)
+        return jnp.float32(n_e) * jnp.sum(load * importance)
+    raise KeyError(f"MOE_LOAD subevent {subevent!r}")
+
+
+@register(
+    "SSM_STATE_RMS", INTENSIVE,
+    doc="RMS of the recurrent state (probe 'state')",
+)
+def _ssm_state_rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(_f32(x))) + 1e-30)
+
+
+@register(
+    "GRAD_GLOBAL_NORM", INTENSIVE,
+    doc="global norm of a gradient tensor (probe per-group flattened grads)",
+)
+def _grad_global_norm(x):
+    return jnp.sqrt(jnp.sum(jnp.square(_f32(x))) + 1e-30)
+
+
+# --------------------------------------------------------------------------
+# Static "cost-model" events: per-call constants supplied by the scope at
+# probe time (e.g. a Pallas kernel reporting its schedule's HBM->VMEM traffic).
+# These are the closest analogue of the paper's Table-2 counters for the GEMM
+# case study: the *cause* metrics of a kernel schedule.
+# --------------------------------------------------------------------------
+
+@register("FLOPS", EXTENSIVE, doc="floating-point ops (probe provides scalar)")
+def _flops(x):
+    return jnp.sum(_f32(x))
+
+
+@register("HBM_BYTES", EXTENSIVE,
+          doc="bytes moved HBM<->VMEM by the schedule (scalar probe) — "
+              "analogue of L2_LINES_IN")
+def _hbm_bytes(x):
+    return jnp.sum(_f32(x))
+
+
+@register("VMEM_TILE_REFILLS", EXTENSIVE,
+          doc="number of HBM->VMEM tile fetches — analogue of DTLB_MISSES")
+def _vmem_refills(x):
+    return jnp.sum(_f32(x))
+
+
+@register("MXU_PASSES", EXTENSIVE,
+          doc="number of 128x128 MXU systolic passes — analogue of "
+              "SIMD_INST_RETIRED")
+def _mxu_passes(x):
+    return jnp.sum(_f32(x))
+
+
+@register("EST_STALL_CYCLES", EXTENSIVE,
+          doc="estimated memory-stall cycles (max(0, mem_time-compute_time) "
+              "* clock) — analogue of RESOURCE_STALLS")
+def _stall_cycles(x):
+    return jnp.sum(_f32(x))

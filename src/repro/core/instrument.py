@@ -1,0 +1,506 @@
+"""Trace-time scope instrumentation — the paper's compiler-directed callbacks.
+
+GCC planted entry/exit handlers in the object code; we plant event
+computations in the traced JAX program.  Model code stays unmodified in the
+paper's sense: it only names its scopes (``with scalpel.function("attn")`` or
+the decorator/auto-walker) — which events run, for which scopes, with which
+multiplex schedule is decided by the MonitorSpec/MonitorParams, not the model.
+
+Execution model
+---------------
+* ``collecting(spec, params, state)`` opens a root Collector for a step.
+* ``function(name)`` pushes a scope; entering a scope that is in the
+  compile-time set increments its call counter *in-graph* (interception).
+* ``probe(**tensors)`` evaluates the current scope's context: a ``lax.cond``
+  on the runtime scope mask (un-monitored scopes pay only the predicated
+  branch — the paper's cheap interception), then a ``lax.switch`` over the
+  scope's event sets keyed by ``(calls // period) % n_sets`` — call-count
+  multiplexing, phase-exact even inside ``lax.scan`` loops.
+* ``capture(fn, ...)`` runs ``fn`` under a child collector and returns
+  ``(out, CounterState delta)`` — the bridge that lets ``lax.scan`` carry
+  counters through stacked layers.
+
+When no collector is active every call here is a no-op: an uninstrumented
+("vanilla") program pays nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import events as events_lib
+from .context import EventSpec, MonitorSpec, ScopeContext
+from .counters import CounterState, MonitorParams
+
+_TLS = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_TLS, "stack"):
+        _TLS.stack = []
+    return _TLS.stack
+
+
+def current_collector():
+    st = _stack()
+    return st[-1] if st else None
+
+
+SEP = "/"
+
+
+class Collector:
+    """Accumulates an in-graph CounterState delta during tracing.
+
+    Counter updates are COALESCED: per-call event values are collected in
+    trace-time Python lists and materialized as ONE scatter-add per scope
+    when the region finalizes (``delta``).  A scope probed k times per step
+    costs k event computations but only one dynamic-update-slice — without
+    this, the per-call scatters dominated the monitoring overhead
+    (EXPERIMENTS.md §Perf, instrumentation iteration 1).
+    """
+
+    def __init__(self, spec: MonitorSpec, params: MonitorParams,
+                 calls_base, backends: tuple = ()):
+        self.spec = spec
+        self.params = params
+        # calls_base: i32[n_scopes] — global call counts *before* this
+        # collector's region (threading through scan carries keeps the
+        # multiplex schedule exact across iterations).
+        self.calls_base = calls_base
+        self.scope_path: list[str] = []
+        self._extended: list[bool] = []
+        self.backends = backends
+        # deferred accumulators (trace-time)
+        self._counts: dict[int, int] = {}
+        self._vals: dict[int, list] = {}
+        self._smps: dict[int, list] = {}
+        self._ingested: list[CounterState] = []
+        self._final: CounterState | None = None
+
+    # -- scope management -------------------------------------------------
+    def push(self, name: str) -> str:
+        # Paper §3.3: the context is *retained* across recursive calls to the
+        # same function — direct re-entry does not open a new scope path, so
+        # a recursive `foo` accumulates into one "foo" context rather than
+        # foo/foo/foo (which would fall outside the compile-time set).
+        if self.scope_path and self.scope_path[-1] == name:
+            self._extended.append(False)
+            return SEP.join(self.scope_path)
+        self.scope_path.append(name)
+        self._extended.append(True)
+        return SEP.join(self.scope_path)
+
+    def pop(self) -> None:
+        if self._extended.pop():
+            self.scope_path.pop()
+
+    @property
+    def current_scope(self) -> str:
+        return SEP.join(self.scope_path)
+
+    # -- in-graph counter updates -----------------------------------------
+    def _counts_arrays(self):
+        idxs = sorted(self._counts)
+        return (
+            jnp.asarray(idxs, jnp.int32),
+            jnp.asarray([self._counts[i] for i in idxs], jnp.int32),
+        )
+
+    def total_calls(self):
+        c = self.calls_base
+        for d in self._ingested:
+            c = c + d.calls
+        if self._counts:
+            idxs, cnts = self._counts_arrays()
+            c = c.at[idxs].add(cnts)
+        return c
+
+    def intercept(self, scope: str) -> None:
+        """Count a call of ``scope`` (always-on, cheap — paper's 'all').
+
+        The count is a trace-time Python increment — interception of
+        statically-unrolled calls is FREE in the compiled program (one
+        scatter of constants at region exit)."""
+        if scope not in self.spec:
+            return
+        idx = self.spec.scope_index(scope)
+        self._counts[idx] = self._counts.get(idx, 0) + 1
+        self._final = None
+
+    def probe(self, scope: str, tensors: dict[str, Any]) -> None:
+        if scope not in self.spec:
+            return
+        idx = self.spec.scope_index(scope)
+        ctx = self.spec.context(scope)
+        if not ctx.slots:
+            return
+        params = self.params
+        m = self.spec.max_slots
+        # call count *before* this call was intercepted (python-side count
+        # of prior interceptions in this region + carried base).
+        calls_here = self.calls_base[idx] + (self._counts.get(idx, 1) - 1)
+
+        tensors = {k: jax.lax.stop_gradient(v) for k, v in tensors.items()}
+        # A probe call computes only the slots its tensors satisfy — scopes
+        # may probe several times per invocation with different tensors.
+        avail = frozenset(tensors)
+        live = {
+            i for i, s in enumerate(ctx.slots)
+            if events_lib.computable(s, avail)
+        }
+        if not live:
+            return
+
+        def _set_branch(k: int):
+            members = [i for i in ctx.event_sets[k] if i in live]
+
+            def br(ts):
+                vals = jnp.zeros((m,), jnp.float32)
+                smp = jnp.zeros((m,), jnp.int32)
+                for i in members:
+                    sm = params.slot_mask[idx, i]
+                    v = events_lib.compute(ctx.slots[i], ts) * sm
+                    vals = vals.at[i].set(v)
+                    smp = smp.at[i].set((sm > 0).astype(jnp.int32))
+                return vals, smp
+
+            return br
+
+        def _monitored(ts):
+            if ctx.n_sets == 1:
+                return _set_branch(0)(ts)
+            set_idx = (calls_here // jnp.maximum(params.period[idx], 1)) % ctx.n_sets
+            return jax.lax.switch(
+                set_idx, [_set_branch(k) for k in range(ctx.n_sets)], ts
+            )
+
+        def _skipped(ts):
+            del ts
+            return jnp.zeros((m,), jnp.float32), jnp.zeros((m,), jnp.int32)
+
+        vals, smp = jax.lax.cond(
+            params.scope_mask[idx] > 0, _monitored, _skipped, tensors
+        )
+        self._vals.setdefault(idx, []).append(vals)
+        self._smps.setdefault(idx, []).append(smp)
+        self._final = None
+
+    def ingest(self, delta: CounterState) -> None:
+        """Fold a child region's delta (e.g. a scan's summed carry)."""
+        self._ingested.append(delta)
+        self._final = None
+
+    # -- finalization -------------------------------------------------------
+    @property
+    def delta(self) -> CounterState:
+        """The region's CounterState delta (coalesced, built lazily)."""
+        if self._final is not None:
+            return self._final
+        n, m = self.spec.n_scopes, self.spec.max_slots
+        calls = jnp.zeros((n,), jnp.int32)
+        if self._counts:
+            idxs, cnts = self._counts_arrays()
+            calls = calls.at[idxs].add(cnts)
+        values = jnp.zeros((n, m), jnp.float32)
+        samples = jnp.zeros((n, m), jnp.int32)
+        for idx, lst in self._vals.items():
+            tot = lst[0]
+            for v in lst[1:]:
+                tot = tot + v
+            values = values.at[idx].add(tot)
+        for idx, lst in self._smps.items():
+            tot = lst[0]
+            for v in lst[1:]:
+                tot = tot + v
+            samples = samples.at[idx].add(tot)
+        d = CounterState(calls=calls, values=values, samples=samples)
+        for ing in self._ingested:
+            d = d.add(ing)
+        self._final = d
+        return d
+
+
+class DiscoveryCollector:
+    """Records scope/probe structure without computing anything.
+
+    Used under ``jax.eval_shape`` to enumerate the compile-time set — the
+    analogue of the paper's 'instrument all functions' compiler pass.
+    """
+
+    def __init__(self):
+        self.scope_path: list[str] = []
+        self._extended: list[bool] = []
+        self.seen: dict[str, tuple[str, ...]] = {}
+
+    def push(self, name: str) -> str:
+        if self.scope_path and self.scope_path[-1] == name:
+            self._extended.append(False)
+        else:
+            self.scope_path.append(name)
+            self._extended.append(True)
+        scope = SEP.join(self.scope_path)
+        self.seen.setdefault(scope, ())
+        return scope
+
+    def pop(self) -> None:
+        if self._extended.pop():
+            self.scope_path.pop()
+
+    @property
+    def current_scope(self) -> str:
+        return SEP.join(self.scope_path)
+
+    def intercept(self, scope: str) -> None:
+        self.seen.setdefault(scope, ())
+
+    def probe(self, scope: str, tensors: dict[str, Any]) -> None:
+        old = self.seen.get(scope, ())
+        merged = tuple(dict.fromkeys(list(old) + sorted(tensors)))
+        self.seen[scope] = merged
+
+    def ingest(self, delta) -> None:  # pragma: no cover - structure only
+        del delta
+
+    total_calls = None  # discovery has no call counts
+
+
+# --------------------------------------------------------------------------
+# Public API used by model / application code.
+# --------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def collecting(spec: MonitorSpec, params: MonitorParams,
+               state: CounterState | None = None):
+    """Open a root collection region; yields the Collector.
+
+    ``state`` supplies the call-count base so multiplex schedules continue
+    across steps; pass the carried CounterState of the training loop.
+    """
+    base = state.calls if state is not None else jnp.zeros(
+        (spec.n_scopes,), jnp.int32
+    )
+    col = Collector(spec, params, calls_base=base)
+    _stack().append(col)
+    try:
+        yield col
+    finally:
+        _stack().pop()
+
+
+@contextlib.contextmanager
+def discovering():
+    col = DiscoveryCollector()
+    _stack().append(col)
+    try:
+        yield col
+    finally:
+        _stack().pop()
+
+
+@contextlib.contextmanager
+def breakpoint_mode(monitor=None, scopes=None):
+    """'Perfmon mode': every scope entry/exit fires a host round-trip.
+
+    Deliberately reproduces the ptrace/breakpoint technique the paper
+    measures against (perfmon was 2-3 orders of magnitude slower than
+    compiler-directed callbacks).  Must be active while the step is TRACED
+    so the ``io_callback``s are planted in the graph.  ``scopes``: restrict
+    breakpoints to the named scopes (None = all).
+    """
+    from .backends import host_callback as hc
+
+    prev = getattr(_TLS, "bp", None)
+    _TLS.bp = (monitor or hc.global_monitor(),
+               frozenset(scopes) if scopes else None)
+    try:
+        yield _TLS.bp[0]
+    finally:
+        _TLS.bp = prev
+
+
+def _fire_breakpoint(name: str, edge: str) -> None:
+    bp = getattr(_TLS, "bp", None)
+    if bp is None:
+        return
+    monitor, only = bp
+    if only is not None and name not in only:
+        return
+    from .backends import host_callback as hc
+
+    hc.breakpoint_probe(f"{name}@{edge}", 0.0, monitor)
+
+
+@contextlib.contextmanager
+def function(name: str):
+    """Scope context manager — the entry/exit callback pair (paper C1).
+
+    Entering counts one interception of the full scope path.  Also opens a
+    ``jax.named_scope`` so the scope name lands in HLO op metadata, which the
+    xla_cost backend uses for per-scope static cost attribution.
+    """
+    _fire_breakpoint(name, "entry")
+    col = current_collector()
+    if col is None:
+        try:
+            yield None
+        finally:
+            _fire_breakpoint(name, "exit")
+        return
+    scope = col.push(name)
+    try:
+        with jax.named_scope(name):
+            col.intercept(scope)
+            yield scope
+    finally:
+        col.pop()
+        _fire_breakpoint(name, "exit")
+
+
+def probe(**tensors) -> None:
+    """Evaluate the current scope's monitoring context on named tensors."""
+    col = current_collector()
+    if col is None:
+        return
+    col.probe(col.current_scope, tensors)
+
+
+def probe_scope(name: str, **tensors) -> None:
+    """One-shot scope: function(name) + probe(**tensors)."""
+    with function(name):
+        probe(**tensors)
+
+
+def instrument(fn: Callable, name: str, probes: Callable | None = None):
+    """Wrap ``fn`` so each call is an intercepted scope (decorator form).
+
+    ``probes(out, *args, **kwargs) -> dict`` optionally derives probe tensors
+    from the call; by default the output tensor is probed as 'out'.
+    """
+
+    def wrapped(*args, **kwargs):
+        with function(name):
+            out = fn(*args, **kwargs)
+            if current_collector() is not None:
+                if probes is not None:
+                    t = probes(out, *args, **kwargs)
+                else:
+                    t = {"out": out} if isinstance(out, jax.Array) else {}
+                if t:
+                    probe(**t)
+            return out
+
+    wrapped.__name__ = f"scalpel[{name}]"
+    return wrapped
+
+
+def capture(fn: Callable, calls_base=None):
+    """Run ``fn`` under a child collector; returns ``fn' -> (out, delta)``.
+
+    The bridge for ``lax.scan``: the scan body wraps its work in ``capture``
+    with ``calls_base = outer_base + carried_delta.calls`` so call-count
+    multiplexing stays exact across iterations.
+    """
+    parent = current_collector()
+
+    def run(*args, **kwargs):
+        if parent is None or isinstance(parent, DiscoveryCollector):
+            # Discovery or vanilla: no counters; keep structure cheap.
+            if isinstance(parent, DiscoveryCollector):
+                out = fn(*args, **kwargs)
+                return out, None
+            return fn(*args, **kwargs), None
+        base = calls_base if calls_base is not None else parent.total_calls()
+        child = Collector(parent.spec, parent.params, calls_base=base)
+        child.scope_path = list(parent.scope_path)
+        _stack().append(child)
+        try:
+            out = fn(*args, **kwargs)
+        finally:
+            _stack().pop()
+        return out, child.delta
+
+    return run
+
+
+def scan_with_counters(body: Callable, init, xs, length: int | None = None,
+                       unroll: int | bool = 1, remat=None):
+    """``lax.scan`` that threads ScALPEL counters through the carry.
+
+    ``body(carry, x) -> (carry, y)`` is ordinary scan-body code that may call
+    ``function``/``probe``.  Counter deltas from every iteration are summed
+    and folded into the ambient collector.  With no active collector this is
+    a plain ``lax.scan``.
+
+    ``remat`` (optional): a rematerialization decorator (e.g.
+    ``jax.checkpoint`` with a policy).  It is applied *inside* the counter
+    capture so the CounterState delta is an explicit output of the
+    checkpointed region — counters never leak across the remat boundary.
+    """
+    col = current_collector()
+    if col is None or isinstance(col, DiscoveryCollector):
+        b = body if remat is None else (lambda c, x: remat(body)(c, x))
+        return jax.lax.scan(b, init, xs, length=length, unroll=unroll)
+
+    spec = col.spec
+    base = col.total_calls()
+
+    def work(inner, x, calls_base):
+        run = capture(lambda: body(inner, x), calls_base=calls_base)
+        (inner2, y), d = run()
+        return inner2, y, d
+
+    if remat is not None:
+        work = remat(work)
+
+    def wrapped(carry, x):
+        inner, dsum = carry
+        inner2, y, d = work(inner, x, base + dsum.calls)
+        return (inner2, dsum.add(d)), y
+
+    (out, dtotal), ys = jax.lax.scan(
+        wrapped, (init, CounterState.zeros(spec)), xs, length=length,
+        unroll=unroll,
+    )
+    col.ingest(dtotal)
+    return out, ys
+
+
+# --------------------------------------------------------------------------
+# Discovery — build the compile-time set by walking the traced program.
+# --------------------------------------------------------------------------
+
+def discover(fn: Callable, *args, **kwargs) -> dict[str, tuple[str, ...]]:
+    """Trace ``fn`` abstractly and return {scope: probed tensor names}."""
+    with discovering() as col:
+        jax.eval_shape(fn, *args, **kwargs)
+    return dict(col.seen)
+
+
+DEFAULT_TENSOR_EVENTS = ("ACT_RMS", "ACT_MEAN_ABS")
+
+
+def spec_from_discovery(
+    seen: dict[str, tuple[str, ...]],
+    tensor_events: Sequence[str] = DEFAULT_TENSOR_EVENTS,
+    include: Callable[[str], bool] | None = None,
+) -> MonitorSpec:
+    """Auto-build a MonitorSpec: every discovered scope becomes interceptable,
+    every probed tensor gets the generic ``tensor_events`` — the analogue of
+    compiling with '-finstrument-functions' on everything."""
+    ctxs = []
+    for scope, tnames in sorted(seen.items()):
+        if include is not None and not include(scope):
+            continue
+        slots = [
+            EventSpec(event=ev, tensor=t)
+            for t in tnames
+            for ev in tensor_events
+        ]
+        ctxs.append(ScopeContext.exhaustive(scope, slots))
+    return MonitorSpec.of(ctxs)

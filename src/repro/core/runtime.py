@@ -1,0 +1,147 @@
+"""ScALPEL runtime — config reload via SIGUSR1, async counter access,
+adaptive hooks (paper §3.3 + C5).
+
+The runtime owns the live (MonitorSpec, MonitorParams, CounterState) triple.
+The jitted step receives ``params`` and the carried ``state`` as ordinary
+inputs, so everything the runtime mutates is swap-in-place between steps —
+never a re-trace.
+
+* ``SIGUSR1`` (or ``reload()``) re-reads the config file and rebuilds the
+  masks/periods — the paper's "a new configuration file may be loaded at any
+  time by sending a signal to the application".
+* ``snapshot()`` gives asynchronous host access to the counters (C5).
+* ``add_hook(fn)`` registers an adaptive callback ``fn(runtime, reports)``
+  invoked every ``hook_every`` steps — the mechanism the paper motivates for
+  "runtime decisions based on performance characteristics" (we use it for
+  straggler detection and NaN tripwires in train/loop.py).
+* at exit (or ``report()``) counters are written to stdout, the paper's
+  default sink.
+"""
+from __future__ import annotations
+
+import atexit
+import signal
+import threading
+import time
+from typing import Callable
+
+import jax
+
+from . import config_file, report as report_lib
+from .context import MonitorSpec
+from .counters import CounterState, MonitorParams
+
+
+class ScalpelRuntime:
+    def __init__(
+        self,
+        spec: MonitorSpec,
+        params: MonitorParams | None = None,
+        config_path: str | None = None,
+        install_signal: bool = False,
+        report_at_exit: bool = False,
+        jsonl_path: str | None = None,
+        hook_every: int = 1,
+    ):
+        self.spec = spec
+        self._lock = threading.Lock()
+        self.config_path = config_path
+        self.jsonl_path = jsonl_path
+        self.hook_every = max(1, hook_every)
+        self._hooks: list[Callable] = []
+        self._step = 0
+        self.state = CounterState.zeros(spec)
+        self.reload_count = 0
+        self.last_reload_errors: list[str] = []
+        self._wall: dict[str, float] = {}
+
+        if params is not None:
+            self.params = params
+        elif config_path is not None:
+            self.params = self._params_from_file(config_path)
+        else:
+            self.params = MonitorParams.all_on(spec)
+
+        if install_signal:
+            signal.signal(signal.SIGUSR1, self._on_sigusr1)
+        if report_at_exit:
+            atexit.register(self._exit_report)
+
+    # -- config reload ----------------------------------------------------
+    def _params_from_file(self, path: str) -> MonitorParams:
+        cfg = config_file.parse_file(path)
+        params, missing = config_file.apply_config(self.spec, cfg)
+        self.last_reload_errors = missing
+        return params
+
+    def _on_sigusr1(self, signum, frame):  # pragma: no cover - signal path
+        del signum, frame
+        self.reload()
+
+    def reload(self, path: str | None = None) -> None:
+        """Swap in a new config — masks/periods only, never a re-trace."""
+        path = path or self.config_path
+        if path is None:
+            raise ValueError("no config path to reload from")
+        with self._lock:
+            self.params = self._params_from_file(path)
+            self.config_path = path
+            self.reload_count += 1
+
+    def set_params(self, params: MonitorParams) -> None:
+        with self._lock:
+            self.params = params
+
+    # -- step bookkeeping ---------------------------------------------------
+    def on_step(self, new_state: CounterState) -> None:
+        """Called by the training/serving loop with the step's carried state."""
+        self.state = new_state
+        self._step += 1
+        if self._hooks and self._step % self.hook_every == 0:
+            reports = self.snapshot()
+            for h in list(self._hooks):
+                h(self, reports)
+        if self.jsonl_path and self._step % self.hook_every == 0:
+            report_lib.write_jsonl(self.jsonl_path, self._step, self.snapshot())
+
+    # -- async access (C5) --------------------------------------------------
+    def snapshot(self) -> list[report_lib.ScopeReport]:
+        state = jax.tree.map(jax.device_get, self.state)
+        return report_lib.build(self.spec, state)
+
+    def estimates(self) -> dict[str, dict[str, float]]:
+        state = jax.tree.map(jax.device_get, self.state)
+        return report_lib.estimates(self.spec, state)
+
+    def add_hook(self, fn: Callable) -> None:
+        self._hooks.append(fn)
+
+    # -- host-side wall-clock context (host_time backend feed) --------------
+    def time_block(self, name: str):
+        rt = self
+
+        class _Timer:
+            def __enter__(self_inner):
+                self_inner.t0 = time.perf_counter()
+                return self_inner
+
+            def __exit__(self_inner, *exc):
+                dt = time.perf_counter() - self_inner.t0
+                rt._wall[name] = rt._wall.get(name, 0.0) + dt
+                return False
+
+        return _Timer()
+
+    @property
+    def wall_times(self) -> dict[str, float]:
+        return dict(self._wall)
+
+    # -- reporting ----------------------------------------------------------
+    def report(self, title: str = "ScALPEL report") -> str:
+        return report_lib.format_text(self.snapshot(), title=title)
+
+    def _exit_report(self) -> None:  # pragma: no cover - atexit path
+        try:
+            print(self.report())
+        except Exception:
+            pass

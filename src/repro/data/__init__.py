@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLM, prefetch, shard_batch  # noqa: F401

@@ -1,0 +1,136 @@
+"""Pallas flash attention (tiled online-softmax) for TPU.
+
+Adaptation notes (GPU flash-attention -> TPU):
+  * the unit of tiling is the VMEM block, not an SM's shared-memory tile;
+    block shapes default to (block_q=512, block_kv=1024) so the score tile
+    [bq, bkv] and the f32 accumulator [bq, d] stay well inside ~16 MB VMEM
+    while keeping the MXU contraction dims >= 128;
+  * there are no warps; the grid is (batch*heads, q_blocks, kv_blocks) with
+    the KV axis innermost — Pallas pipelines the HBM->VMEM streams, and the
+    running (acc, m, l) state lives in VMEM scratch across KV iterations;
+  * causal block-skipping: fully-masked (q,kv) tiles are skipped with
+    pl.when — the TPU analogue of flash attention's early exit.
+
+Contract: plain MHA — q,k,v [bh, s, d] (GQA callers repeat KV heads in the
+ops.py wrapper).  Accumulation in f32, output in q.dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sq: int, sk: int, bq: int, bkv: int, n_kv: int,
+                  causal: bool, window: int, scale: float):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions (offs aligns the causal diagonal when sq != sk)
+    offs = sk - sq
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + offs
+    kpos = jk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # tile-level skip: is any (q,k) pair in this tile live?
+    q_hi = iq * bq + (bq - 1) + offs
+    k_lo = jk * bkv
+    live = True
+    if causal:
+        live = k_lo <= q_hi
+    if window:
+        k_hi = jk * bkv + (bkv - 1)
+        q_lo = iq * bq + offs
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _work():
+        q = q_ref[0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)          # [bkv, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # [bq, bkv]
+        mask = kpos < sk                           # pad keys masked off
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # [bq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+
+        v = v_ref[0].astype(jnp.float32)           # [bkv, d]
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                          # [bq, d]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv - 1)
+    def _flush():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 512, block_kv: int = 1024,
+                         scale: float | None = None,
+                         interpret: bool = False):
+    """q: [bh, sq, d]; k, v: [bh, sk, d] (sk may exceed sq: KV prefix)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, sq)
+    bkv = min(block_kv, sk)
+    assert sq % bq == 0, (sq, bq)
+    # pad keys to a bkv multiple; padded positions are masked by kpos < sk
+    sk_pad = ((sk + bkv - 1) // bkv) * bkv
+    if sk_pad != sk:
+        pad = ((0, 0), (0, sk_pad - sk), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    n_kv = sk_pad // bkv
+
+    kernel = functools.partial(
+        _flash_kernel, sq=sq, sk=sk, bq=bq, bkv=bkv, n_kv=n_kv,
+        causal=causal, window=window, scale=scale,
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,182 @@
+"""Pallas GEMM with two schedules — the subjects of the paper's case study.
+
+The paper compares ATLAS (cache-blocked GEMM) against GotoBLAS (TLB-driven
+panel streaming) *through hardware counters*, not through their source.  We
+adapt both schedules to the TPU memory hierarchy (HBM -> VMEM -> MXU) and
+expose per-schedule cost counters so the reproduced case study can make the
+same argument: the two schedules do identical FLOPs but move very different
+numbers of bytes between memory levels.
+
+Schedules
+---------
+cache_blocked (≙ ATLAS)
+    grid (M/bm, N/bn, K/bk), square-ish VMEM tiles, K innermost with an f32
+    VMEM accumulator.  Both A and B tiles are re-fetched along their
+    non-contracted grid axis: HBM traffic ≈ MK·(N/bn) + KN·(M/bm).
+
+panel_streaming (≙ GotoBLAS)
+    grid (M/bm, N/bn), the full A panel [bm, K] made VMEM-resident (the
+    TPU analogue of "fill most of the TLB-addressable memory with A"), B
+    streamed in [K, bn] panels with N innermost.  Pallas's pipelining skips
+    the A copy while the block index is unchanged, so A is fetched exactly
+    once: HBM traffic ≈ MK + KN·(M/bm).  The trade-off is a much larger
+    VMEM working set (bm·K), limiting bm — exactly Goto's trade-off.
+
+Both kernels compute identical C = A @ B (f32 accumulate), so allclose
+against ref.matmul; only the counters differ.  ops.py exposes the analytical
+counter model (schedule_cost) used as ScALPEL FLOPS/HBM_BYTES/... probes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# cache_blocked: (M/bm, N/bn, K/bk) grid, f32 VMEM accumulator
+# ---------------------------------------------------------------------------
+
+def _cache_blocked_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def cache_blocked_matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 256,
+                         out_dtype=jnp.float32, interpret: bool = False):
+    """ATLAS-like blocked GEMM. a: [M,K], b: [K,N] -> [M,N]."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, n, k), (bm, bn, bk))
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_cache_blocked_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[_vmem((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# panel_streaming: (M/bm, N/bn) grid, A panel resident across the N loop
+# ---------------------------------------------------------------------------
+
+def _panel_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def panel_streaming_matmul(a, b, *, bm: int = 128, bn: int = 256,
+                           out_dtype=jnp.float32, interpret: bool = False):
+    """GotoBLAS-like GEMM: A panel [bm, K] VMEM-resident, B streamed.
+
+    N is the innermost grid axis, and the A BlockSpec's index map does not
+    depend on it — Pallas's pipelining elides the re-copy, so each A panel
+    crosses HBM->VMEM exactly once (the Goto property).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0, ((m, n, k), (bm, bn))
+    return pl.pallas_call(
+        _panel_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),   # resident panel
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),   # streamed
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# analytical schedule counters (the case-study "hardware counters")
+# ---------------------------------------------------------------------------
+
+# TPU v5e constants (per chip) — single source for the roofline too.
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+CLOCK_HZ = 940e6  # v5e core clock (approx.)
+MXU_DIM = 128
+
+
+def schedule_cost(schedule: str, m: int, n: int, k: int,
+                  bm: int, bn: int, bk: int, dtype_bytes: int = 2) -> dict:
+    """Analytical per-call counters for a GEMM schedule.
+
+    Returns the ScALPEL case-study events:
+      FLOPS            — 2*M*N*K (identical across schedules)
+      HBM_BYTES        — schedule-dependent HBM->VMEM traffic (≙ L2_LINES_IN)
+      VMEM_TILE_REFILLS— number of HBM->VMEM tile copies (≙ DTLB_MISSES)
+      MXU_PASSES       — 128x128x128 systolic passes (≙ SIMD_INST_RETIRED)
+      EST_STALL_CYCLES — max(0, mem_time - compute_time) * clock
+                         (≙ RESOURCE_STALLS)
+    """
+    flops = 2.0 * m * n * k
+    gm, gn = m // bm, n // bn
+    if schedule == "cache_blocked":
+        gk = k // bk
+        a_bytes = gm * gk * (bm * bk) * gn * dtype_bytes   # A refetched per j
+        b_bytes = gk * gn * (bk * bn) * gm * dtype_bytes   # B refetched per i
+        refills = gm * gn * gk * 2
+    elif schedule == "panel_streaming":
+        a_bytes = m * k * dtype_bytes                      # A once (resident)
+        b_bytes = k * n * gm * dtype_bytes                 # B per A-panel
+        refills = gm + gm * gn                             # A panels + B tiles
+    else:
+        raise KeyError(schedule)
+    c_bytes = m * n * 4  # f32 out written once by both schedules
+    hbm = a_bytes + b_bytes + c_bytes
+    mxu = (
+        ((m + MXU_DIM - 1) // MXU_DIM)
+        * ((n + MXU_DIM - 1) // MXU_DIM)
+        * ((k + MXU_DIM - 1) // MXU_DIM)
+    )
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_mem = hbm / HBM_BW
+    stall = max(0.0, t_mem - t_compute) * CLOCK_HZ
+    return {
+        "FLOPS": flops,
+        "HBM_BYTES": float(hbm),
+        "VMEM_TILE_REFILLS": float(refills),
+        "MXU_PASSES": float(mxu),
+        "EST_STALL_CYCLES": stall,
+        "vmem_working_set_bytes": float(
+            (bm * bk + bk * bn + bm * bn * 2) * dtype_bytes
+            if schedule == "cache_blocked"
+            else (bm * k + k * bn + bm * bn * 2) * dtype_bytes
+        ),
+        "arithmetic_intensity": flops / hbm,
+    }

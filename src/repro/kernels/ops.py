@@ -1,0 +1,127 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) every kernel runs in interpret mode — the kernel
+body executes in Python for correctness validation; on a TPU backend the
+same calls lower to Mosaic.  Wrappers also adapt model-layer calling
+conventions (GQA [b,s,h,d]) to the kernel contracts ([bh,s,d]).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attn as _fa
+from . import gemm as _gemm
+from . import ssm_scan as _ssm
+
+SCHEDULES = ("cache_blocked", "panel_streaming")
+
+
+def _interpret(flag: bool | None) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# GEMM (case-study subject)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("schedule", "bm", "bn", "bk", "interpret")
+)
+def matmul(a, b, schedule: str = "panel_streaming", *, bm: int = 256,
+           bn: int = 256, bk: int = 256, interpret: bool | None = None):
+    """C = A @ B via the named Pallas schedule (f32 out)."""
+    interp = _interpret(interpret)
+    if schedule == "cache_blocked":
+        return _gemm.cache_blocked_matmul(
+            a, b, bm=bm, bn=bn, bk=bk, interpret=interp
+        )
+    if schedule == "panel_streaming":
+        return _gemm.panel_streaming_matmul(
+            a, b, bm=bm, bn=bn, interpret=interp
+        )
+    raise KeyError(f"unknown schedule {schedule!r}; have {SCHEDULES}")
+
+
+def matmul_cost(schedule: str, m: int, n: int, k: int, *, bm: int = 256,
+                bn: int = 256, bk: int = 256, dtype_bytes: int = 2) -> dict:
+    """Analytical counters for one matmul call (the case-study events)."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    return _gemm.schedule_cost(schedule, m, n, k, bm, bn, bk, dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 1024,
+                    interpret: bool | None = None):
+    """Model-layer convention: q [b,sq,h,d]; k,v [b,sk,kvh,d] (GQA ok)."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    out = _fa.flash_attention_bhsd(
+        qf, kf, vf, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=_interpret(interpret),
+    )
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def flash_attention_cost(b, sq, sk, h, d, *, causal=True, block_q=512,
+                         block_kv=1024, dtype_bytes=2) -> dict:
+    """Analytical counters: tiles actually computed after causal skipping."""
+    bq, bkv = min(block_q, sq), min(block_kv, sk)
+    nq, nk = sq // bq, (sk + bkv - 1) // bkv
+    offs = sk - sq
+    live = 0
+    for i in range(nq):
+        for j in range(nk):
+            if not causal or j * bkv <= i * bq + bq - 1 + offs:
+                live += 1
+    flops = 4.0 * b * h * live * bq * bkv * d  # qk^T + pv
+    hbm = (
+        b * h * (sq * d * dtype_bytes                # q read once
+                 + live * bkv * d * 2 * dtype_bytes  # k+v per live tile
+                 + sq * d * dtype_bytes)             # out write
+    )
+    return {
+        "FLOPS": flops,
+        "HBM_BYTES": float(hbm),
+        "VMEM_TILE_REFILLS": float(b * h * (nq + 2 * live)),
+        "MXU_PASSES": float(
+            b * h * live * (bq // 128 or 1) * (bkv // 128 or 1)
+            * 2 * max(1, d // 128)
+        ),
+        "live_tiles": live,
+        "total_tiles": nq * nk,
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSM scan
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "bd", "interpret")
+)
+def ssm_scan(log_a, b_in, *, chunk: int = 256, bd: int = 512,
+             interpret: bool | None = None):
+    """h_t = exp(log_a_t)*h_{t-1} + b_t over axis 1. [B,S,D] -> [B,S,D]."""
+    return _ssm.ssm_scan_chunked(
+        log_a, b_in, chunk=chunk, bd=bd, interpret=_interpret(interpret)
+    )

@@ -1,0 +1,9 @@
+from .registry import Arch, FAMILY_MODULES  # noqa: F401
+from .spec import (  # noqa: F401
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+)

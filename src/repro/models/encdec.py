@@ -1,0 +1,240 @@
+"""Encoder–decoder transformer (family 'encdec' — seamless-m4t backbone).
+
+The [audio] modality frontend is a STUB per the assignment: ``input_specs``
+provides precomputed speech-frame embeddings [b, s_src, d_model]; the
+encoder is a bidirectional transformer over those frames, the decoder is a
+causal transformer with cross-attention.  n_layers applies to each stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from repro.dist.partition import shard
+from . import layers as L
+from .params import P, stacked
+from .spec import ModelConfig
+
+
+def cross_attention_specs(cfg: ModelConfig) -> dict:
+    return L.attention_specs(cfg)
+
+
+def enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.rms_norm_spec(cfg.d_model),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.rms_norm_spec(cfg.d_model),
+        "ffn": L.mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.rms_norm_spec(cfg.d_model),
+        "attn": L.attention_specs(cfg),
+        "ln_x": L.rms_norm_spec(cfg.d_model),
+        "xattn": cross_attention_specs(cfg),
+        "ln2": L.rms_norm_spec(cfg.d_model),
+        "ffn": L.mlp_specs(cfg),
+    }
+
+
+def specs(cfg: ModelConfig) -> dict:
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    return {
+        "embed": L.embed_specs(cfg),
+        "frame_norm": L.rms_norm_spec(cfg.d_model),
+        "encoder": stacked(lambda: enc_layer_specs(cfg), n_enc),
+        "enc_norm": L.rms_norm_spec(cfg.d_model),
+        "decoder": stacked(lambda: dec_layer_specs(cfg), cfg.n_layers),
+        "final_norm": L.rms_norm_spec(cfg.d_model),
+    }
+
+
+def _cross_attend(cfg: ModelConfig, p, x, enc_kv, positions_q):
+    """Cross-attention: q from decoder x, k/v precomputed from encoder."""
+    with scalpel.function("xattn"):
+        k, v = enc_kv
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        q = L.rope(q, positions_q, cfg.rope_theta)
+        q = shard(q, "batch", None, "heads", None)
+        if q.shape[1] * k.shape[1] <= 256 * 256 or cfg.attn_impl == "reference":
+            out = L.reference_attention(cfg, q, k, v, causal=False)
+        else:
+            out = L.flash_attention_xla(cfg, q, k, v, causal=False)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        scalpel.probe(out=y)
+        return y
+
+
+def _enc_kv(cfg: ModelConfig, p, enc_out):
+    b, s, _ = enc_out.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    k = L.rope(k, pos, cfg.rope_theta)
+    return k, v
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: [b, s_src, d] precomputed frontend embeddings."""
+    with scalpel.function("encoder"):
+        x = L.rms_norm(frames.astype(L.dt(cfg)), params["frame_norm"])
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(carry, lp):
+            xx = carry
+            with scalpel.function("layer"):
+                h = L.rms_norm(xx, lp["ln1"])
+                xx = xx + L.attention(cfg, lp["attn"], h, positions,
+                                      causal=False)
+                h = L.rms_norm(xx, lp["ln2"])
+                xx = xx + L.mlp(cfg, lp["ffn"], h)
+            return xx, None
+
+        x, _ = scalpel.scan_with_counters(body, x, params["encoder"],
+                                          remat=L.remat_policy(cfg))
+        x = L.rms_norm(x, params["enc_norm"])
+        scalpel.probe(out=x)
+        return x
+
+
+def decode(cfg: ModelConfig, params, enc_out, tokens):
+    x = L.embed(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, lp):
+        xx = carry
+        with scalpel.function("layer"):
+            h = L.rms_norm(xx, lp["ln1"])
+            xx = xx + L.attention(cfg, lp["attn"], h, positions)
+            h = L.rms_norm(xx, lp["ln_x"])
+            xx = xx + _cross_attend(cfg, lp["xattn"], h,
+                                    _enc_kv(cfg, lp["xattn"], enc_out),
+                                    positions)
+            h = L.rms_norm(xx, lp["ln2"])
+            xx = xx + L.mlp(cfg, lp["ffn"], h)
+        return xx, None
+
+    x, _ = scalpel.scan_with_counters(body, x, params["decoder"],
+                                      remat=L.remat_policy(cfg))
+    x = L.rms_norm(x, params["final_norm"])
+    return L.unembed(cfg, params["embed"], x)
+
+
+def forward(cfg: ModelConfig, params, tokens, prefix_embeds=None,
+            frames=None):
+    enc_out = encode(cfg, params, frames)
+    return decode(cfg, params, enc_out, tokens)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits = forward(cfg, params, batch["tokens"],
+                     frames=batch["enc_frames"])
+    return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+# -- serving ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               abstract: bool = False, src_len: int | None = None):
+    kvd = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    src_len = src_len or cache_len
+    kv = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd)
+    xkv = (cfg.n_layers, batch, src_len, cfg.n_kv_heads, hd)
+    cache = {
+        "k": jax.ShapeDtypeStruct(kv, kvd),
+        "v": jax.ShapeDtypeStruct(kv, kvd),
+        "xk": jax.ShapeDtypeStruct(xkv, kvd),
+        "xv": jax.ShapeDtypeStruct(xkv, kvd),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if abstract:
+        return cache
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype), cache,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def cache_axes(cfg: ModelConfig):
+    kv = ("layers", "batch", "kv_seq", None, None)
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ()}
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
+            prefix_embeds=None, frames=None):
+    """Encode source; run decoder prompt; build self+cross KV caches."""
+    enc_out = encode(cfg, params, frames)
+    x = L.embed(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kvd = jnp.dtype(cfg.compute_dtype)
+
+    def body(carry, lp):
+        xx = carry
+        with scalpel.function("layer"):
+            h = L.rms_norm(xx, lp["ln1"])
+            with scalpel.function("attn"):
+                q, k, v = L._qkv(cfg, lp["attn"], h, positions)
+                if s <= 256 or cfg.attn_impl == "reference":
+                    a = L.reference_attention(cfg, q, k, v, True)
+                else:
+                    a = L.flash_attention_xla(cfg, q, k, v, True)
+                y = jnp.einsum("bshk,hkd->bsd", a,
+                               lp["attn"]["wo"].astype(xx.dtype))
+            xx = xx + y
+            h = L.rms_norm(xx, lp["ln_x"])
+            xk, xv = _enc_kv(cfg, lp["xattn"], enc_out)
+            xx = xx + _cross_attend(cfg, lp["xattn"], h, (xk, xv), positions)
+            h = L.rms_norm(xx, lp["ln2"])
+            xx = xx + L.mlp(cfg, lp["ffn"], h)
+        pad = cache_len - s
+        kc = jnp.pad(k.astype(kvd), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(kvd), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return xx, {"k": kc, "v": vc, "xk": xk.astype(kvd),
+                    "xv": xv.astype(kvd)}
+
+    x, kvs = scalpel.scan_with_counters(body, x, params["decoder"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x[:, -1:, :])
+    cache = {"k": kvs["k"], "v": kvs["v"], "xk": kvs["xk"],
+             "xv": kvs["xv"], "pos": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = L.embed(cfg, params["embed"], tokens)
+    pos = cache["pos"]
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    def body(carry, layer_in):
+        lp, kc, vc, xk, xv = layer_in
+        xx = carry
+        with scalpel.function("layer"):
+            h = L.rms_norm(xx, lp["ln1"])
+            y, kc, vc = L.decode_attention(cfg, lp["attn"], h, kc, vc, pos)
+            xx = xx + y
+            h = L.rms_norm(xx, lp["ln_x"])
+            xx = xx + _cross_attend(cfg, lp["xattn"], h,
+                                    (xk.astype(xx.dtype),
+                                     xv.astype(xx.dtype)), positions)
+            h = L.rms_norm(xx, lp["ln2"])
+            xx = xx + L.mlp(cfg, lp["ffn"], h)
+        return xx, {"k": kc, "v": vc}
+
+    x, kvs = scalpel.scan_with_counters(
+        body, x,
+        (params["decoder"], cache["k"], cache["v"], cache["xk"],
+         cache["xv"]),
+    )
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    new_cache = dict(cache, k=kvs["k"], v=kvs["v"], pos=pos + 1)
+    return logits, new_cache

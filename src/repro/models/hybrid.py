@@ -1,0 +1,330 @@
+"""Zamba2-style hybrid (family 'hybrid'): Mamba2 backbone + one *shared*
+attention+MLP block applied every ``hybrid.attn_every`` layers.
+
+Structure: ``n_sites = n_layers // attn_every`` groups, each = attn_every
+Mamba2 layers followed by one application of the shared block; remaining
+``n_layers % attn_every`` Mamba2 layers trail at the end.  The shared block
+operates at 2*d_model on concat(hidden, original_embedding) (Zamba2's
+global-skip concat) and projects back to d_model.
+
+Sub-quadratic backbone -> runs long_500k; the shared block's KV caches (one
+per application site) are sequence-sharded in decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from repro.dist.partition import shard
+from . import layers as L
+from . import ssm
+from .params import P, stacked
+from .spec import ModelConfig
+
+
+def _geometry(cfg: ModelConfig):
+    every = cfg.hybrid.attn_every
+    n_sites = cfg.n_layers // every
+    trailing = cfg.n_layers - n_sites * every
+    return every, n_sites, trailing
+
+
+def _shared_cfg(cfg: ModelConfig) -> ModelConfig:
+    """The shared block's attention runs at 2*d_model."""
+    return cfg.replace(
+        name=cfg.name + "-shared",
+        d_model=2 * cfg.d_model,
+        head_dim=2 * cfg.d_model // cfg.n_heads,
+        family="dense",
+    )
+
+
+def shared_block_specs(cfg: ModelConfig) -> dict:
+    scfg = _shared_cfg(cfg)
+    d2 = scfg.d_model
+    return {
+        "ln1": L.rms_norm_spec(d2),
+        "attn": L.attention_specs(scfg),
+        "ln2": L.rms_norm_spec(d2),
+        "mlp": L.mlp_specs(scfg, cfg.d_ff),
+        "down": P((d2, cfg.d_model), ("heads", "embed")),
+    }
+
+
+def specs(cfg: ModelConfig) -> dict:
+    every, n_sites, trailing = _geometry(cfg)
+    sp = {
+        "embed": L.embed_specs(cfg),
+        "groups": stacked(
+            lambda: {
+                "mamba": stacked(
+                    lambda: {
+                        "ln": L.rms_norm_spec(cfg.d_model),
+                        "mix": ssm.mamba2_specs(cfg),
+                    },
+                    every,
+                )
+            },
+            n_sites,
+        ),
+        "shared": shared_block_specs(cfg),
+        "final_norm": L.rms_norm_spec(cfg.d_model),
+    }
+    if trailing:
+        sp["trailing"] = stacked(
+            lambda: {
+                "ln": L.rms_norm_spec(cfg.d_model),
+                "mix": ssm.mamba2_specs(cfg),
+            },
+            trailing,
+        )
+    return sp
+
+
+def _mamba_layer(cfg: ModelConfig, lp, x, state=None):
+    with scalpel.function("layer"):
+        h = L.rms_norm(x, lp["ln"])
+        if state is None:
+            y, st = ssm.mamba2(cfg, lp["mix"], h)
+        else:
+            y, st = ssm.mamba2_decode(cfg, lp["mix"], h, *state)
+        return x + y, st
+
+
+def _apply_shared(cfg: ModelConfig, sp, x, x0, positions):
+    """Shared attention block at 2d on concat(x, x0)."""
+    scfg = _shared_cfg(cfg)
+    with scalpel.function("shared_attn"):
+        cat = jnp.concatenate([x, x0], axis=-1)
+        h = L.rms_norm(cat, sp["ln1"])
+        a = L.attention(scfg, sp["attn"], h, positions)
+        cat = cat + a
+        h = L.rms_norm(cat, sp["ln2"])
+        cat = cat + L.mlp(scfg, sp["mlp"], h)
+        y = jnp.einsum("bse,ed->bsd", cat, sp["down"].astype(x.dtype))
+        y = shard(y, "batch", None, None)
+        scalpel.probe(out=y)
+        return x + y
+
+
+def _apply_shared_decode(cfg: ModelConfig, sp, x, x0, kc, vc, pos):
+    scfg = _shared_cfg(cfg)
+    with scalpel.function("shared_attn"):
+        cat = jnp.concatenate([x, x0], axis=-1)
+        h = L.rms_norm(cat, sp["ln1"])
+        a, kc, vc = L.decode_attention(scfg, sp["attn"], h, kc, vc, pos)
+        cat = cat + a
+        h = L.rms_norm(cat, sp["ln2"])
+        cat = cat + L.mlp(scfg, sp["mlp"], h)
+        y = jnp.einsum("bse,ed->bsd", cat, sp["down"].astype(x.dtype))
+        scalpel.probe(out=y)
+        return x + y, kc, vc
+
+
+def forward(cfg: ModelConfig, params, tokens, prefix_embeds=None):
+    every, n_sites, trailing = _geometry(cfg)
+    x = L.embed(cfg, params["embed"], tokens)
+    x0 = x
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2]
+    )
+
+    def group(carry, gp):
+        xx = carry
+
+        def inner(c, lp):
+            out, _ = _mamba_layer(cfg, lp, c)
+            return out, None
+
+        xx, _ = scalpel.scan_with_counters(inner, xx, gp["mamba"])
+        xx = _apply_shared(cfg, params["shared"], xx, x0, positions)
+        return xx, None
+
+    x, _ = scalpel.scan_with_counters(group, x, params["groups"],
+                                      remat=L.remat_policy(cfg))
+    if trailing:
+        def inner(c, lp):
+            out, _ = _mamba_layer(cfg, lp, c)
+            return out, None
+
+        x, _ = scalpel.scan_with_counters(inner, x, params["trailing"])
+    x = L.rms_norm(x, params["final_norm"])
+    return L.unembed(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits = forward(cfg, params, batch["tokens"])
+    return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+# -- serving ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               abstract: bool = False):
+    every, n_sites, trailing = _geometry(cfg)
+    scfg = _shared_cfg(cfg)
+    kvd = jnp.dtype(cfg.compute_dtype)
+    m = ssm.mamba2_state_specs(cfg, batch)
+
+    def stack_n(sd, n):
+        return jax.ShapeDtypeStruct((n,) + sd.shape, sd.dtype)
+
+    cache = {
+        "mamba_ssm": stack_n(m["ssm"], n_sites * every + trailing),
+        "mamba_conv": stack_n(m["conv"], n_sites * every + trailing),
+        "shared_k": jax.ShapeDtypeStruct(
+            (n_sites, batch, cache_len, scfg.n_kv_heads,
+             scfg.resolved_head_dim), kvd
+        ),
+        "shared_v": jax.ShapeDtypeStruct(
+            (n_sites, batch, cache_len, scfg.n_kv_heads,
+             scfg.resolved_head_dim), kvd
+        ),
+        "x0": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), kvd),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if abstract:
+        return cache
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype), cache,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        "mamba_ssm": ("layers", "batch", "heads", None, None),
+        "mamba_conv": ("layers", "batch", None, None),
+        "shared_k": ("layers", "batch", "kv_seq", None, None),
+        "shared_v": ("layers", "batch", "kv_seq", None, None),
+        "x0": ("batch", None, None),
+        "pos": (),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    every, n_sites, trailing = _geometry(cfg)
+    x = L.embed(cfg, params["embed"], tokens)
+    # zamba's global skip uses the *current token's* embedding in decode
+    x0 = x
+    pos = cache["pos"]
+    n_m = n_sites * every + trailing
+    m_ssm, m_conv = cache["mamba_ssm"], cache["mamba_conv"]
+
+    def group(carry, inp):
+        xx = carry
+        gp, states_ssm, states_conv, kc, vc = inp
+
+        def inner(c, lp_state):
+            lp, s_ssm, s_conv = lp_state
+            out, (s2, c2) = _mamba_layer(cfg, lp, c, (s_ssm, s_conv))
+            return out, (s2, c2)
+
+        xx, (s2, c2) = scalpel.scan_with_counters(
+            inner, xx, (gp["mamba"], states_ssm, states_conv)
+        )
+        xx, kc, vc = _apply_shared_decode(cfg, params["shared"], xx, x0,
+                                          kc, vc, pos)
+        return xx, (s2, c2, kc, vc)
+
+    gs = n_sites * every
+    x, (s2, c2, k2, v2) = scalpel.scan_with_counters(
+        group, x,
+        (
+            params["groups"],
+            m_ssm[:gs].reshape((n_sites, every) + m_ssm.shape[1:]),
+            m_conv[:gs].reshape((n_sites, every) + m_conv.shape[1:]),
+            cache["shared_k"], cache["shared_v"],
+        ),
+    )
+    new_ssm = s2.reshape((gs,) + m_ssm.shape[1:])
+    new_conv = c2.reshape((gs,) + m_conv.shape[1:])
+    if trailing:
+        def inner(c, lp_state):
+            lp, s_ssm, s_conv = lp_state
+            out, (s2t, c2t) = _mamba_layer(cfg, lp, c, (s_ssm, s_conv))
+            return out, (s2t, c2t)
+
+        x, (st, ct) = scalpel.scan_with_counters(
+            inner, x, (params["trailing"], m_ssm[gs:], m_conv[gs:])
+        )
+        new_ssm = jnp.concatenate([new_ssm, st], axis=0)
+        new_conv = jnp.concatenate([new_conv, ct], axis=0)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    new_cache = {
+        "mamba_ssm": new_ssm, "mamba_conv": new_conv,
+        "shared_k": k2, "shared_v": v2, "x0": cache["x0"],
+        "pos": pos + 1,
+    }
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
+            prefix_embeds=None):
+    """Prompt pass building both mamba states and shared-attn KV caches."""
+    every, n_sites, trailing = _geometry(cfg)
+    scfg = _shared_cfg(cfg)
+    x = L.embed(cfg, params["embed"], tokens)
+    x0 = x
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kvd = jnp.dtype(cfg.compute_dtype)
+
+    def group(carry, gp):
+        xx = carry
+
+        def inner(c, lp):
+            out, st = _mamba_layer(cfg, lp, c)
+            return out, st
+
+        xx, (s_ssm, s_conv) = scalpel.scan_with_counters(inner, xx,
+                                                         gp["mamba"])
+        # shared block with KV capture
+        with scalpel.function("shared_attn"):
+            cat = jnp.concatenate([xx, x0], axis=-1)
+            h = L.rms_norm(cat, params["shared"]["ln1"])
+            q, k, v = L._qkv(scfg, params["shared"]["attn"], h, positions)
+            if s <= 256 or cfg.attn_impl == "reference":
+                a = L.reference_attention(scfg, q, k, v, True)
+            else:
+                a = L.flash_attention_xla(scfg, q, k, v, True)
+            y = jnp.einsum("bshk,hkd->bsd", a,
+                           params["shared"]["attn"]["wo"].astype(xx.dtype))
+            cat = cat + y
+            h = L.rms_norm(cat, params["shared"]["ln2"])
+            cat = cat + L.mlp(scfg, params["shared"]["mlp"], h)
+            y = jnp.einsum("bse,ed->bsd", cat,
+                           params["shared"]["down"].astype(xx.dtype))
+            xx = xx + y
+        pad = cache_len - s
+        kc = jnp.pad(k.astype(kvd), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(kvd), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return xx, (s_ssm, s_conv, kc, vc)
+
+    x, (s_ssm, s_conv, kcs, vcs) = scalpel.scan_with_counters(
+        group, x, params["groups"]
+    )
+    new_ssm = s_ssm.reshape((n_sites * every,) + s_ssm.shape[2:])
+    new_conv = s_conv.reshape((n_sites * every,) + s_conv.shape[2:])
+    if trailing:
+        def inner(c, lp):
+            out, st = _mamba_layer(cfg, lp, c)
+            return out, st
+
+        x, (st, ct) = scalpel.scan_with_counters(inner, x,
+                                                 params["trailing"])
+        new_ssm = jnp.concatenate([new_ssm, st], axis=0)
+        new_conv = jnp.concatenate([new_conv, ct], axis=0)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x[:, -1:, :])
+    cache = {
+        "mamba_ssm": new_ssm, "mamba_conv": new_conv,
+        "shared_k": kcs, "shared_v": vcs,
+        "x0": x0[:, -1:, :].astype(kvd),
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+    return cache, logits

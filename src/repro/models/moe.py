@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN with sort-based dispatch and GSPMD expert
+parallelism.
+
+Dispatch is the modern sort-based formulation (not GShard one-hot einsums,
+whose [G,N,E,C] combine tensors don't scale):
+
+  1. router top-k -> (expert_id, gate) per token copy
+  2. stable-sort token copies by expert id; rank-in-expert via a sorted scan
+  3. scatter into a capacity-bounded buffer [groups, E, C, D]; copies past
+     capacity are dropped (capacity_factor controls the drop rate; the
+     MOE_LOAD ScALPEL events monitor imbalance + drops)
+  4. resharding the buffer from group-sharded to expert-sharded is THE
+     expert-parallel all-to-all — expressed as a sharding constraint, GSPMD
+     emits the collective
+  5. expert GEMMs, inverse constraint, un-permute, weighted combine.
+
+Works on one CPU device (constraints no-op) and on the production meshes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from repro.dist.partition import shard
+from .params import P
+from .spec import ModelConfig
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    sp = {
+        "router": P((d, e), ("embed", "experts"), scale=0.02),
+        "wi": P((e, d, f), ("experts", "e_embed", "mlp")),
+        "wg": P((e, d, f), ("experts", "e_embed", "mlp")),
+        "wo": P((e, f, d), ("experts", "mlp", "e_embed")),
+    }
+    if cfg.moe.dense_residual:
+        from .layers import mlp_specs
+
+        sp["dense"] = mlp_specs(cfg, cfg.moe.dense_ff or cfg.d_ff)
+    return sp
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    e, k, cf = cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.capacity_factor
+    c = int(tokens_per_group * k * cf / e) + 1
+    # round to MXU-friendly multiple
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: [b, s, d] -> [b, s, d]."""
+    with scalpel.function("moe"):
+        b, s, d = x.shape
+        e, k = cfg.moe.n_experts, cfg.moe.top_k
+        # group = sequence: the [b,s,d]->[g,tpg,d] reshape is then the
+        # identity, so GSPMD keeps the batch sharding through dispatch.
+        # (A coarser g<b merged batch rows across shards and forced a full
+        # re-materialization + activation-grad all-reduce — the dominant
+        # collective in the arctic-480b baseline; EXPERIMENTS.md §Perf.)
+        g, tpg = b, s
+        cap = _capacity(cfg, tpg)
+
+        xt = x.reshape(g, tpg, d)
+        xt = shard(xt, "groups", None, None)
+
+        logits = jnp.einsum(
+            "gnd,de->gne", xt, p["router"].astype(jnp.float32).astype(x.dtype)
+        ).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eid = jax.lax.top_k(probs, k)  # [g,n,k]
+        gate = gate / jnp.maximum(
+            jnp.sum(gate, axis=-1, keepdims=True), 1e-9
+        )
+
+        # ---- flatten copies and sort by expert ------------------------
+        flat_e = eid.reshape(g, tpg * k)
+        flat_g = gate.reshape(g, tpg * k).astype(x.dtype)
+        src = jnp.arange(tpg * k, dtype=jnp.int32) // k  # copy -> token row
+        order = jnp.argsort(flat_e, axis=-1, stable=True)  # [g, n*k]
+        se = jnp.take_along_axis(flat_e, order, axis=-1)
+        sg = jnp.take_along_axis(flat_g, order, axis=-1)
+        st = jnp.take_along_axis(
+            jnp.broadcast_to(src, flat_e.shape), order, axis=-1
+        )
+        # rank within expert among sorted copies
+        same = se[:, 1:] == se[:, :-1]
+        incr = jnp.concatenate(
+            [jnp.zeros((g, 1), jnp.int32), same.astype(jnp.int32)], axis=-1
+        )
+
+        def seg_rank(carry, inc):
+            r = jnp.where(inc == 1, carry + 1, 0)
+            return r, r
+
+        _, ranks = jax.lax.scan(seg_rank, jnp.zeros((g,), jnp.int32),
+                                incr.T)
+        rank = ranks.T  # [g, n*k]
+        keep = rank < cap
+        slot = se * cap + jnp.where(keep, rank, cap - 1)  # clamp; masked later
+
+        # monitoring: expert load + drop fraction
+        load_mask = jax.nn.one_hot(
+            eid.reshape(g * tpg, k), e, dtype=jnp.float32
+        ).sum(1)
+        scalpel.probe(
+            router_probs=probs.reshape(g * tpg, e),
+            expert_mask=load_mask,
+            dropped=1.0 - keep.astype(jnp.float32),
+        )
+
+        # ---- dispatch: build [g, E*C, d] buffer ------------------------
+        toks = jnp.take_along_axis(xt, st[..., None], axis=1)  # [g,n*k,d]
+        w = jnp.where(keep, sg, 0.0)[..., None]
+        buf = jnp.zeros((g, e * cap, d), x.dtype)
+        buf = jax.vmap(
+            lambda bu, sl, tv: bu.at[sl].add(tv)
+        )(buf, slot, toks * jnp.where(keep, 1.0, 0.0)[..., None].astype(x.dtype))
+        buf = buf.reshape(g, e, cap, d)
+        # THE all-to-all: group-sharded -> (group, expert)-sharded
+        buf = shard(buf, "groups", "experts", None, None)
+
+        # ---- expert FFN -------------------------------------------------
+        hi = jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(x.dtype))
+        hg = jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(hg.astype(jnp.float32)).astype(x.dtype) * hi
+        h = shard(h, "groups", "experts", None, "mlp")
+        out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+        out = shard(out, "groups", "experts", None, None)
+
+        # ---- combine: gather copies back, weight, sum over k ------------
+        out = out.reshape(g, e * cap, d)
+        out = shard(out, "groups", None, None)
+        per_copy = jnp.take_along_axis(
+            out, slot[..., None], axis=1
+        ) * w.astype(x.dtype)
+        # sum the k copies of each token: un-sort then segment-sum by token
+        y = jnp.zeros((g, tpg, d), x.dtype)
+        y = jax.vmap(lambda yy, tt, vv: yy.at[tt].add(vv))(y, st, per_copy)
+        y = y.reshape(b, s, d)
+        y = shard(y, "batch", None, None)
+
+        if cfg.moe.dense_residual:
+            from .layers import mlp
+
+            y = y + mlp(cfg, p["dense"], x)
+        scalpel.probe(out=y)
+        return y

@@ -1,0 +1,90 @@
+"""Parameter trees: declarative specs -> init / abstract shapes / shardings.
+
+Params are plain nested dicts of arrays.  Every leaf is declared as a
+``P(shape, axes)`` where ``axes`` names one *logical* axis per dimension
+("embed", "mlp", "heads", "vocab", "layers", ...).  dist/partition.py maps
+logical axes -> mesh axes; the same spec tree therefore drives CPU smoke
+tests (no mesh), the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Param leaf spec: shape + logical axes + init scale."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | scaled
+    scale: float | None = None    # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes rank mismatch: {self}")
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # convention: last dim is fan-out, everything before contributes fan-in
+    return int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+
+
+def init_leaf(spec: P, key, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(
+        max(1, _fan_in(spec.shape))
+    )
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def init_tree(specs: Any, key, dtype) -> Any:
+    """Materialize a param tree from a spec tree (smoke tests / training)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(specs: Any, dtype) -> Any:
+    """ShapeDtypeStruct tree — dry-run stand-ins, no allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def axes_tree(specs: Any) -> Any:
+    """Logical-axes tree with the same structure as the param tree."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def count_params(specs: Any) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree.leaves(specs, is_leaf=is_spec)
+    )
+
+
+def stacked(spec_fn: Callable[[], dict], n: int, axis_name: str = "layers") -> dict:
+    """Stack a per-layer spec dict along a leading 'layers' dim (for scan)."""
+    layer = spec_fn()
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        layer,
+        is_leaf=is_spec,
+    )

@@ -1,0 +1,146 @@
+"""Model registry: family -> module, plus the uniform Arch facade used by
+train/serve/launch code.
+
+Every architecture supports:
+  specs/init/abstract_params — parameter tree (concrete or ShapeDtypeStruct)
+  loss_fn(params, batch)     — training loss
+  prefill(params, tokens, cache_len, **extras) -> (cache, logits)
+  decode_step(params, cache, tokens) -> (logits, cache)
+  input_specs(shape)         — ShapeDtypeStruct stand-ins per assigned shape
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, transformer, xlstm
+from . import params as params_lib
+from .spec import ModelConfig, ShapeConfig, SHAPES
+
+FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": xlstm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    cfg: ModelConfig
+
+    @property
+    def module(self):
+        return FAMILY_MODULES[self.cfg.family]
+
+    # -- params ----------------------------------------------------------
+    def param_specs(self):
+        return self.module.specs(self.cfg)
+
+    def init(self, rng):
+        return params_lib.init_tree(
+            self.param_specs(), rng, jnp.dtype(self.cfg.param_dtype)
+        )
+
+    def abstract_params(self):
+        return params_lib.abstract_tree(
+            self.param_specs(), jnp.dtype(self.cfg.param_dtype)
+        )
+
+    def param_axes(self):
+        return params_lib.axes_tree(self.param_specs())
+
+    def n_params(self) -> int:
+        return params_lib.count_params(self.param_specs())
+
+    # -- steps -----------------------------------------------------------
+    def loss_fn(self, params, batch):
+        return self.module.loss_fn(self.cfg, params, batch)
+
+    def forward(self, params, batch):
+        kw = {}
+        if self.cfg.family == "encdec":
+            kw["frames"] = batch["enc_frames"]
+        prefix = batch.get("img_embeds") if self.cfg.family == "vlm" else None
+        return self.module.forward(self.cfg, params, batch["tokens"],
+                                   prefix_embeds=prefix, **kw)
+
+    def prefill(self, params, batch, cache_len: int):
+        kw = {}
+        if self.cfg.family == "encdec":
+            kw["frames"] = batch["enc_frames"]
+        prefix = batch.get("img_embeds") if self.cfg.family == "vlm" else None
+        return self.module.prefill(self.cfg, params, batch["tokens"],
+                                   cache_len, prefix_embeds=prefix, **kw)
+
+    def decode_step(self, params, cache, tokens):
+        return self.module.decode_step(self.cfg, params, cache, tokens)
+
+    def init_cache(self, batch: int, cache_len: int, abstract: bool = False):
+        return self.module.init_cache(self.cfg, batch, cache_len,
+                                      abstract=abstract)
+
+    def cache_axes(self):
+        return self.module.cache_axes(self.cfg)
+
+    # -- shapes ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig | str,
+                    abstract: bool = True) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        cdt = jnp.dtype(cfg.compute_dtype)
+
+        def sd(shp, dtype=jnp.int32):
+            if abstract:
+                return jax.ShapeDtypeStruct(shp, dtype)
+            if jnp.issubdtype(dtype, jnp.integer):
+                return jnp.zeros(shp, dtype)
+            return jnp.zeros(shp, dtype)
+
+        if shape.kind == "decode":
+            return {"tokens": sd((b, 1))}
+
+        if cfg.family == "encdec":
+            out = {
+                "tokens": sd((b, s)),
+                "enc_frames": sd((b, s, cfg.d_model), cdt),
+            }
+        elif cfg.family == "vlm":
+            n_img = s // 4
+            out = {
+                "tokens": sd((b, s - n_img)),
+                "img_embeds": sd((b, n_img, cfg.d_model), cdt),
+            }
+        else:
+            out = {"tokens": sd((b, s))}
+        if shape.kind == "train":
+            out["targets"] = sd(out["tokens"].shape)
+        return out
+
+    def batch_axes(self, shape: ShapeConfig | str) -> dict[str, tuple]:
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        specs = self.input_specs(shape)
+        return {
+            k: ("batch",) + (None,) * (len(v.shape) - 1)
+            for k, v in specs.items()
+        }
+
+    def supports(self, shape: ShapeConfig | str) -> tuple[bool, str]:
+        """Cell applicability (long_500k needs sub-quadratic mixing)."""
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        if shape.name == "long_500k" and not self.cfg.subquadratic:
+            return False, (
+                "long_500k skipped: pure full-attention architecture "
+                "(quadratic); see DESIGN.md"
+            )
+        return True, ""

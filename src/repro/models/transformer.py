@@ -1,0 +1,182 @@
+"""Decoder-only transformer backbone (families: dense, moe, vlm).
+
+Layer stack is a ``lax.scan`` over layer-stacked parameters (compile-time
+O(1) in depth), with ScALPEL counters threaded through the scan carry
+(core.scan_with_counters) and configurable activation rematerialization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from repro.dist.partition import shard
+from . import layers as L
+from . import moe as moe_lib
+from .params import P, stacked
+from .spec import ModelConfig
+
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    sp = {
+        "ln1": L.rms_norm_spec(cfg.d_model),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.rms_norm_spec(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        sp["ffn"] = moe_lib.moe_specs(cfg)
+    else:
+        sp["ffn"] = L.mlp_specs(cfg)
+    return sp
+
+
+def specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embed_specs(cfg),
+        "layers": stacked(lambda: layer_specs(cfg), cfg.n_layers),
+        "final_norm": L.rms_norm_spec(cfg.d_model),
+    }
+
+
+def _ffn(cfg: ModelConfig, lp, x):
+    if cfg.family == "moe":
+        return moe_lib.moe_ffn(cfg, lp["ffn"], x)
+    return L.mlp(cfg, lp["ffn"], x)
+
+
+def block(cfg: ModelConfig, lp, x, positions):
+    with scalpel.function("layer"):
+        h = L.rms_norm(x, lp["ln1"])
+        x = x + L.attention(cfg, lp["attn"], h, positions,
+                            window=cfg.sliding_window)
+        h = L.rms_norm(x, lp["ln2"])
+        x = x + _ffn(cfg, lp, h)
+        x = shard(x, "batch", None, None)
+        return x
+
+
+def backbone(cfg: ModelConfig, params, x, positions):
+    """Run the layer stack. x: [b,s,d] -> [b,s,d] (pre-final-norm)."""
+
+    def body(carry, lp):
+        return block(cfg, lp, carry, positions), None
+
+    x, _ = scalpel.scan_with_counters(body, x, params["layers"],
+                                      remat=L.remat_policy(cfg))
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, prefix_embeds=None):
+    """Training/prefill forward. tokens: [b,s] -> logits [b,s(,+p),V]."""
+    x = L.embed(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2]
+    )
+    x = backbone(cfg, params, x, positions)
+    x = L.rms_norm(x, params["final_norm"])
+    return L.unembed(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    prefix = batch.get("img_embeds")
+    logits = forward(cfg, params, batch["tokens"], prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    mask = batch.get("mask")
+    return L.cross_entropy(logits, batch["targets"], mask)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
+            prefix_embeds=None):
+    """Run the full prompt, build a KV cache of size ``cache_len``.
+
+    Returns (cache, last_logits).  cache: {"k","v": [nL,b,S,kv,hd], "pos"}.
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kvd = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+
+    def body(carry, lp):
+        xx = carry
+        with scalpel.function("layer"):
+            h = L.rms_norm(xx, lp["ln1"])
+            with scalpel.function("attn"):
+                q, k, v = L._qkv(cfg, lp["attn"], h, positions)
+                a = L.run_attention(cfg, q, k, v, True, cfg.sliding_window)
+                y = jnp.einsum("bshk,hkd->bsd", a,
+                               lp["attn"]["wo"].astype(xx.dtype))
+                if cfg.use_bias:
+                    y = y + lp["attn"]["bo"].astype(xx.dtype)
+            xx = xx + y
+            h = L.rms_norm(xx, lp["ln2"])
+            xx = xx + _ffn(cfg, lp, h)
+        pad = cache_len - s
+        kc = jnp.pad(k.astype(kvd), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(kvd), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kc = shard(kc, "batch", "kv_seq", None, None)
+        vc = shard(vc, "batch", "kv_seq", None, None)
+        return xx, {"k": kc, "v": vc}
+
+    x, kvs = scalpel.scan_with_counters(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x[:, -1:, :])
+    cache = {"k": kvs["k"], "v": kvs["v"],
+             "pos": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               abstract: bool = False):
+    kvd = jnp.dtype(cfg.compute_dtype)
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, kvd)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        arr = jnp.zeros(shape, kvd)
+        pos = jnp.asarray(0, jnp.int32)
+    return {"k": arr, "v": arr, "pos": pos}
+
+
+def cache_axes(cfg: ModelConfig):
+    kv = ("layers", "batch", "kv_seq", None, None)
+    return {"k": kv, "v": kv, "pos": ()}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One decode step for the whole batch. tokens: [b,1] int32."""
+    x = L.embed(cfg, params["embed"], tokens)
+    pos = cache["pos"]
+
+    def body(carry, layer_in):
+        lp, kc, vc = layer_in
+        xx = carry
+        with scalpel.function("layer"):
+            h = L.rms_norm(xx, lp["ln1"])
+            y, kc, vc = L.decode_attention(cfg, lp["attn"], h, kc, vc, pos)
+            xx = xx + y
+            h = L.rms_norm(xx, lp["ln2"])
+            xx = xx + _ffn(cfg, lp, h)
+        return xx, {"k": kc, "v": vc}
+
+    x, kvs = scalpel.scan_with_counters(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    new_cache = {"k": kvs["k"], "v": kvs["v"], "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,139 @@
+"""xLSTM language model: alternating mLSTM / sLSTM blocks (family 'ssm').
+
+Blocks are scanned in (mLSTM, sLSTM) pairs with stacked params; d_ff=0 in
+the assigned config — the cells carry their own up/down projections.
+Sub-quadratic: runs the long_500k decode cell with O(1) recurrent state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from . import layers as L
+from . import ssm
+from .params import stacked
+from .spec import ModelConfig
+
+
+def _n_pairs(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % 2 == 0, "xlstm stack scans (mLSTM, sLSTM) pairs"
+    return cfg.n_layers // 2
+
+
+def specs(cfg: ModelConfig) -> dict:
+    n = _n_pairs(cfg)
+    return {
+        "embed": L.embed_specs(cfg),
+        "pairs": stacked(
+            lambda: {
+                "m_ln": L.rms_norm_spec(cfg.d_model),
+                "m": ssm.mlstm_specs(cfg),
+                "s_ln": L.rms_norm_spec(cfg.d_model),
+                "s": ssm.slstm_specs(cfg),
+            },
+            n,
+        ),
+        "final_norm": L.rms_norm_spec(cfg.d_model),
+    }
+
+
+def _pair(cfg: ModelConfig, lp, x, m_state=None, s_state=None):
+    with scalpel.function("layer"):
+        h = L.rms_norm(x, lp["m_ln"])
+        y, m_state = ssm.mlstm_block(cfg, lp["m"], h, m_state)
+        x = x + y
+        h = L.rms_norm(x, lp["s_ln"])
+        y, s_state = ssm.slstm_block(cfg, lp["s"], h, s_state)
+        x = x + y
+    return x, (m_state, s_state)
+
+
+def forward(cfg: ModelConfig, params, tokens, prefix_embeds=None):
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(carry, lp):
+        out, _ = _pair(cfg, lp, carry)
+        return out, None
+
+    x, _ = scalpel.scan_with_counters(body, x, params["pairs"],
+                                      remat=L.remat_policy(cfg))
+    x = L.rms_norm(x, params["final_norm"])
+    return L.unembed(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits = forward(cfg, params, batch["tokens"])
+    return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+# -- serving ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               abstract: bool = False):
+    """Recurrent 'cache' = per-pair (mLSTM state, sLSTM state); no KV."""
+    del cache_len  # O(1) state — the point of the ssm family
+    n = _n_pairs(cfg)
+
+    def stack_sds(sds):
+        return jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((n,) + sd.shape, sd.dtype), sds
+        )
+
+    m = stack_sds(ssm.mlstm_state_specs(cfg, batch))
+    s = stack_sds(ssm.slstm_state_specs(cfg, batch))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    out = {"m": m, "s": s, "pos": pos}
+    if abstract:
+        return out
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype), out,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def cache_axes(cfg: ModelConfig):
+    m = (
+        ("layers", "batch", "heads", None, None),
+        ("layers", "batch", "heads", None),
+        ("layers", "batch", "heads"),
+        ("layers", "batch", None, None),
+    )
+    s = tuple(("layers", "batch", "heads", None) for _ in range(4))
+    return {"m": m, "s": s, "pos": ()}
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
+            prefix_embeds=None):
+    """Run the prompt once, carrying recurrent states into the cache."""
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(carry, lp):
+        out, (m_state, s_state) = _pair(cfg, lp, carry)
+        return out, (m_state, s_state)
+
+    x, states = scalpel.scan_with_counters(body, x, params["pairs"])
+    m_states, s_states = states
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x[:, -1:, :])
+    cache = {"m": m_states, "s": s_states,
+             "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return cache, logits
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(carry, layer_in):
+        lp, m_state, s_state = layer_in
+        out, (m2, s2) = _pair(cfg, lp, carry, m_state, s_state)
+        return out, (m2, s2)
+
+    x, (m2, s2) = scalpel.scan_with_counters(
+        body, x, (params["pairs"], cache["m"], cache["s"])
+    )
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, {"m": m2, "s": s2, "pos": cache["pos"] + 1}

@@ -1,0 +1,9 @@
+from .adamw import (  # noqa: F401
+    OptConfig,
+    OptState,
+    apply_updates,
+    global_norm,
+    init_opt_state,
+    lr_at,
+    opt_state_axes,
+)

@@ -1,0 +1,111 @@
+"""Batched serving engine: jitted prefill + decode with ScALPEL counters.
+
+Static-batch engine (the production norm for TPU serving): a fixed batch of
+slots, one prefill per batch, token-synchronous decode steps.  Decode
+counters use the same MonitorSpec machinery as training, so a serving
+deployment gets per-scope KV/attention monitoring and the same runtime
+reconfiguration (mask/period swaps between decode steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as scalpel
+from repro.core.counters import CounterState
+from repro.models.registry import Arch
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    cache_len: int = 1024
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, arch: Arch, params, cfg: ServeConfig,
+                 spec=None, runtime=None):
+        self.arch = arch
+        self.params = params
+        self.cfg = cfg
+        if spec is None:
+            # discover scopes from an abstract prefill+decode
+            def probe_fn(p, toks):
+                cache, logits = arch.prefill(p, {"tokens": toks},
+                                             cache_len=cfg.cache_len)
+                return arch.decode_step(p, cache, toks[:, :1])
+
+            seen = scalpel.discover(
+                probe_fn, arch.abstract_params(),
+                jax.ShapeDtypeStruct((1, min(32, cfg.cache_len)), jnp.int32),
+            )
+            spec = scalpel.spec_from_discovery(seen)
+        self.spec = spec
+        self.runtime = runtime or scalpel.ScalpelRuntime(spec)
+        self.counters = CounterState.zeros(spec)
+        self.step_times: list[float] = []
+
+        def _prefill(params, batch, mparams, counters):
+            with scalpel.collecting(self.spec, mparams, counters) as col:
+                cache, logits = self.arch.prefill(
+                    params, batch, cache_len=self.cfg.cache_len
+                )
+            return cache, logits, counters.add(col.delta)
+
+        def _decode(params, cache, tokens, mparams, counters):
+            with scalpel.collecting(self.spec, mparams, counters) as col:
+                logits, cache = self.arch.decode_step(params, cache, tokens)
+            return logits, cache, counters.add(col.delta)
+
+        self._jit_prefill = jax.jit(_prefill)
+        self._jit_decode = jax.jit(_decode, donate_argnums=(1,))
+
+    def _sample(self, logits, rng):
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        logits = logits / self.cfg.temperature
+        return jax.random.categorical(rng, logits)[:, None].astype(jnp.int32)
+
+    def generate(self, batch: dict[str, Any], max_new: int | None = None):
+        """batch: {'tokens': [b, s], ...extras}. Returns [b, n_new] tokens."""
+        max_new = max_new or self.cfg.max_new_tokens
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        t0 = time.perf_counter()
+        cache, logits, self.counters = self._jit_prefill(
+            self.params, batch, self.runtime.params, self.counters
+        )
+        jax.block_until_ready(logits)
+        prefill_s = time.perf_counter() - t0
+        outs = []
+        tok = self._sample(logits, rng)
+        for i in range(max_new):
+            outs.append(tok)
+            t0 = time.perf_counter()
+            logits, cache, self.counters = self._jit_decode(
+                self.params, cache, tok, self.runtime.params, self.counters
+            )
+            jax.block_until_ready(logits)
+            self.step_times.append(time.perf_counter() - t0)
+            rng, sub = jax.random.split(rng)
+            tok = self._sample(logits, sub)
+        self.runtime.on_step(self.counters)
+        return (
+            jnp.concatenate(outs, axis=1),
+            {
+                "prefill_s": prefill_s,
+                "decode_p50_s": float(np.median(self.step_times))
+                if self.step_times else 0.0,
+            },
+        )
+
+    def report(self) -> str:
+        self.runtime.state = self.counters
+        return self.runtime.report("ScALPEL serving report")

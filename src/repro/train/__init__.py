@@ -1,0 +1,2 @@
+from .step import TrainState, build_monitor_spec, make_train_step  # noqa: F401
+from .loop import TrainLoopConfig, fit  # noqa: F401

@@ -1,0 +1,123 @@
+"""Training loop: data pipeline + jitted step + ScALPEL runtime + fault
+tolerance (checkpoint/restart, straggler detection via the host_time
+backend, NaN tripwire via in-graph counters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as scalpel
+from repro.checkpoint import CheckpointManager
+from repro.core.backends.host_time import HostTimer
+from repro.data import DataConfig, SyntheticLM, prefetch, shard_batch
+from repro.models.registry import Arch
+from repro.optim import OptConfig
+from .step import TrainState, build_monitor_spec, make_train_step
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    ckpt_keep: int = 3
+    microbatches: int = 1
+    seed: int = 0
+    straggler_sigma: float = 3.0
+    monitor_config_path: str | None = None  # ScALPEL config file (reloadable)
+    jsonl_path: str | None = None
+    hook_every: int = 10
+
+
+def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
+        loop_cfg: TrainLoopConfig, mesh=None,
+        on_report: Callable | None = None) -> dict[str, Any]:
+    """Train; returns summary dict (final loss, step times, reports)."""
+    data = SyntheticLM(data_cfg)
+    sample = data.batch_at(0)
+    spec = build_monitor_spec(arch, sample)
+
+    runtime = scalpel.ScalpelRuntime(
+        spec,
+        config_path=loop_cfg.monitor_config_path,
+        jsonl_path=loop_cfg.jsonl_path,
+        hook_every=loop_cfg.hook_every,
+    )
+    timer = HostTimer()
+    events: list[str] = []
+
+    # fault-tolerance hooks driven by live counters
+    def tripwire(rt, reports):
+        for r in reports:
+            for s in r.slots:
+                if s.slot_id.startswith("NAN_COUNT") and s.raw > 0:
+                    events.append(f"NaN detected in scope {r.scope}")
+        bad = timer.outliers("train_step", loop_cfg.straggler_sigma)
+        if bad:
+            events.append(f"straggler steps (>{loop_cfg.straggler_sigma}σ): "
+                          f"{bad[-3:]}")
+        if on_report is not None:
+            on_report(rt, reports)
+
+    runtime.add_hook(tripwire)
+
+    step_fn = make_train_step(arch, opt_cfg, spec,
+                              microbatches=loop_cfg.microbatches)
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    mgr = (CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.ckpt_keep)
+           if loop_cfg.ckpt_dir else None)
+
+    # -- init or restore (crash recovery / elastic resume) -----------------
+    tstate = TrainState.create(arch, opt_cfg, spec,
+                               jax.random.PRNGKey(loop_cfg.seed))
+    start_step = 0
+    if mgr is not None and mgr.latest() is not None:
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tstate
+        )
+        tstate, meta = mgr.restore(mgr.latest(), abstract)
+        start_step = int(meta["step"])
+        events.append(f"restored from step {start_step}")
+
+    losses = []
+    it = prefetch(
+        (data.batch_at(s) for s in range(start_step, loop_cfg.steps)), 2
+    )
+    for step, host_batch in enumerate(it, start=start_step):
+        batch = shard_batch(host_batch, mesh)
+        t0 = time.perf_counter()
+        tstate, out = jit_step(tstate, batch, runtime.params)
+        jax.block_until_ready(out["loss"])
+        timer.record("train_step", time.perf_counter() - t0)
+        runtime.on_step(tstate.counters)
+        losses.append(float(out["loss"]))
+        if loop_cfg.log_every and step % loop_cfg.log_every == 0:
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(out['grad_norm']):.3f} "
+                  f"lr {float(out['lr']):.2e} "
+                  f"dt {timer.stats('train_step').mean_s*1e3:.1f}ms")
+        if mgr is not None and loop_cfg.ckpt_every and \
+                (step + 1) % loop_cfg.ckpt_every == 0:
+            mgr.save(step + 1, tstate)
+    if mgr is not None:
+        mgr.save(loop_cfg.steps, tstate, block=True)
+        mgr.wait()
+
+    return {
+        "losses": losses,
+        "final_loss": losses[-1] if losses else float("nan"),
+        "step_stats": timer.stats("train_step"),
+        "events": events,
+        "report": runtime.report(),
+        "runtime": runtime,
+        "state": tstate,
+        "spec": spec,
+    }

@@ -1,0 +1,149 @@
+"""Training step: microbatched gradient accumulation with ScALPEL counters
+threaded through the whole step (forward probes via grad aux, gradient-level
+probes after accumulation, optimizer update inside the same jitted program).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as scalpel
+from repro.core.counters import CounterState, MonitorParams
+from repro.models.registry import Arch
+from repro.optim import OptConfig, apply_updates, global_norm, init_opt_state
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    counters: CounterState
+    step: Any
+
+    @staticmethod
+    def create(arch: Arch, opt_cfg: OptConfig, spec, rng):
+        params = arch.init(rng)
+        return TrainState(
+            params=params,
+            opt=init_opt_state(opt_cfg, params),
+            counters=CounterState.zeros(spec),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+
+GRAD_SCOPE_EVENTS = ["MEAN:gnorm", "MEAN:loss_value"]
+
+
+def build_monitor_spec(arch: Arch, batch,
+                       tensor_events=("ACT_RMS",),
+                       extra: dict | None = None):
+    """Discover the compile-time scope set from one abstract forward+loss.
+
+    The analogue of compiling with -finstrument-functions: every scope the
+    traced program touches becomes interceptable; generic tensor events are
+    attached to every probed tensor; callers can override per-scope contexts
+    afterwards (MonitorSpec.with_context) or via a ScALPEL config file.
+    """
+    abstract_batch = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype
+                                       if not hasattr(x, "dtype") else x.dtype),
+        batch,
+    )
+    params = arch.abstract_params()
+    seen = scalpel.discover(
+        lambda p, b: arch.loss_fn(p, b), params, abstract_batch
+    )
+    spec = scalpel.spec_from_discovery(seen, tensor_events=tensor_events)
+    from repro.core.context import EventSpec, ScopeContext
+
+    spec = spec.with_context(
+        ScopeContext.exhaustive(
+            "grads", [EventSpec.parse(e) for e in GRAD_SCOPE_EVENTS]
+        )
+    )
+    if extra:
+        from repro.core.context import spec_from_mapping
+
+        for ctx in spec_from_mapping(extra).contexts:
+            spec = spec.with_context(ctx)
+    return spec
+
+
+def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
+                    microbatches: int = 1, counter_axes=None):
+    """Build the jittable train_step(tstate, batch, mparams) -> (tstate, out).
+
+    ``counter_axes``: mesh axis names to psum counters over (multi-host
+    aggregation — the paper's MPI support); None on a single device.
+    """
+
+    def mb_loss(params, mb, calls_base, mparams):
+        cs = CounterState(
+            calls=calls_base,
+            values=jnp.zeros((spec.n_scopes, spec.max_slots), jnp.float32),
+            samples=jnp.zeros((spec.n_scopes, spec.max_slots), jnp.int32),
+        )
+        with scalpel.collecting(spec, mparams, cs) as col:
+            loss = arch.loss_fn(params, mb)
+        return loss, col.delta
+
+    vag = jax.value_and_grad(mb_loss, has_aux=True)
+
+    def train_step(tstate: TrainState, batch, mparams: MonitorParams):
+        base = tstate.counters
+        params = tstate.params
+
+        if microbatches == 1:
+            # grads stay in param dtype; the optimizer casts per-leaf
+            (loss, delta), grads = vag(params, batch, base.calls, mparams)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape(
+                    (microbatches, x.shape[0] // microbatches) + x.shape[1:]
+                ),
+                batch,
+            )
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(carry, mb):
+                gacc, dacc, lacc = carry
+                (l, d), g = vag(params, mb, base.calls + dacc.calls, mparams)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g
+                )
+                return (gacc, dacc.add(d), lacc + l), None
+
+            (grads, delta, loss), _ = jax.lax.scan(
+                body, (g0, CounterState.zeros(spec), jnp.zeros((), jnp.float32)),
+                split,
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+
+        # -- step-level scope: gradient statistics ------------------------
+        mid = base.add(delta)
+        with scalpel.collecting(spec, mparams, mid) as col:
+            with scalpel.function("grads"):
+                scalpel.probe(
+                    gnorm=global_norm(grads)[None],
+                    loss_value=loss[None],
+                )
+        new_params, new_opt, stats = apply_updates(
+            opt_cfg, tstate.opt, params, grads
+        )
+        counters = mid.add(col.delta)
+        if counter_axes:
+            counters = counters.psum(counter_axes)
+        new_state = TrainState(
+            params=new_params, opt=new_opt, counters=counters,
+            step=tstate.step + 1,
+        )
+        return new_state, {"loss": loss, **stats}
+
+    return train_step

@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 CPU device;
+only launch/dryrun.py (its own process) forces 512 placeholder devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+@pytest.fixture()
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; prefill/decode agreement for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as scalpel
+from repro.configs import ARCH_IDS, model_config
+from repro.core.counters import MonitorParams
+from repro.models import SHAPES
+from repro.models.registry import Arch
+from repro.optim import OptConfig
+from repro.train.step import TrainState, build_monitor_spec, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng=0, with_targets=True):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(rng), 3)
+    toks = jax.random.randint(k1, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jax.random.normal(
+            k3, (B, S, cfg.d_model)
+        ).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm":
+        n_img = S // 4
+        batch["tokens"] = toks[:, : S - n_img]
+        batch["img_embeds"] = jax.random.normal(
+            k3, (B, n_img, cfg.d_model)
+        ).astype(jnp.dtype(cfg.compute_dtype))
+    if with_targets:
+        batch["targets"] = jax.random.randint(
+            k2, batch["tokens"].shape, 0, cfg.vocab
+        )
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_and_params(request):
+    cfg = model_config(request.param, smoke=True)
+    arch = Arch(cfg)
+    params = arch.init(jax.random.PRNGKey(0))
+    return request.param, arch, params
+
+
+def test_exact_assigned_config_shapes(arch_and_params):
+    """The FULL config must carry the exact assigned hyperparameters."""
+    aid, arch, _ = arch_and_params
+    full = model_config(aid)
+    assigned = {
+        "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "mistral_nemo_12b": (40, 5120, 32, 8, 14336, 131072),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131072),
+    }[aid]
+    got = (full.n_layers, full.d_model, full.n_heads, full.n_kv_heads,
+           full.d_ff, full.vocab)
+    assert got == assigned, aid
+
+
+def test_forward_shapes_and_finite(arch_and_params):
+    aid, arch, params = arch_and_params
+    cfg = arch.cfg
+    batch = _batch(cfg, with_targets=False)
+    logits = arch.forward(params, batch)
+    ntok = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        ntok += batch["img_embeds"].shape[1]
+    assert logits.shape == (B, ntok, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_loss_near_uniform_at_init(arch_and_params):
+    aid, arch, params = arch_and_params
+    loss = arch.loss_fn(params, _batch(arch.cfg))
+    lnv = np.log(arch.cfg.vocab)
+    assert 0.5 * lnv < float(loss) < 1.6 * lnv, (aid, float(loss))
+
+
+def test_train_step_updates_and_counts(arch_and_params):
+    aid, arch, params = arch_and_params
+    batch = _batch(arch.cfg)
+    spec = build_monitor_spec(arch, batch)
+    opt = OptConfig(lr=1e-3, warmup_steps=0, clip_norm=1.0, min_lr_frac=1.0)
+    tstate = TrainState.create(arch, opt, spec, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(arch, opt, spec))
+    mp = MonitorParams.all_on(spec)
+    t1, out1 = step(tstate, batch, mp)
+    t2, out2 = step(t1, batch, mp)
+    assert np.isfinite(float(out1["loss"]))
+    # same batch twice with lr>0: loss must move (params updated)
+    assert float(out2["loss"]) != pytest.approx(float(out1["loss"]),
+                                                abs=1e-7)
+    assert int(t2.step) == 2
+    # every scope intercepted at least once per step
+    assert int(np.asarray(t2.counters.calls).min()) >= 1
+    # no NaN counters
+    assert np.isfinite(np.asarray(t2.counters.values)).all()
+
+
+def test_prefill_decode_matches_forward(arch_and_params):
+    """Greedy next-token from (prefill -> decode) must agree with the
+    training forward's last-position argmax (KV-cache correctness)."""
+    aid, arch, params = arch_and_params
+    cfg = arch.cfg
+    batch = _batch(cfg, with_targets=False)
+    logits_full = arch.forward(params, batch)
+    cache, logits_pre = arch.prefill(params, batch, cache_len=S + 8)
+    lf = np.asarray(logits_full[:, -1, :].astype(jnp.float32))
+    lp = np.asarray(logits_pre[:, -1, :].astype(jnp.float32))
+    np.testing.assert_allclose(lp, lf, atol=5e-2, rtol=5e-2)
+    # decode one token; logits finite, cache advances
+    nxt = jnp.argmax(logits_pre[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    logits_dec, cache2 = arch.decode_step(params, cache, nxt)
+    assert logits_dec.shape[0] == B
+    assert bool(jnp.all(jnp.isfinite(logits_dec.astype(jnp.float32))))
+
+
+def test_input_specs_match_assigned_shapes(arch_and_params):
+    aid, arch, _ = arch_and_params
+    full = Arch(model_config(aid))
+    for name, sh in SHAPES.items():
+        ok, why = full.supports(sh)
+        if not ok:
+            assert name == "long_500k" and not full.cfg.subquadratic
+            continue
+        specs = full.input_specs(sh)
+        if sh.kind == "decode":
+            assert specs["tokens"].shape == (sh.global_batch, 1)
+        else:
+            total = sum(
+                v.shape[1] for k, v in specs.items()
+                if k in ("tokens", "img_embeds", "enc_frames")
+                and (k != "enc_frames")
+            )
+            assert total == sh.seq_len, (aid, name)
+            assert specs["tokens"].shape[0] == sh.global_batch
+
+
+def test_decode_stream_matches_prefill(arch_and_params):
+    """Decoding tokens one-by-one must reproduce a longer prefill's logits
+    (recurrent-state / KV-cache equivalence across families)."""
+    aid, arch, params = arch_and_params
+    cfg = arch.cfg
+    if cfg.family in ("encdec",):
+        pytest.skip("encdec covered by prefill test (cross-attn fixed)")
+    if cfg.family == "moe":
+        # capacity-based token dropping is batch-composition dependent, so
+        # streamed decode only matches prefill when nothing is dropped
+        import dataclasses as _dc
+
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, capacity_factor=16.0))
+        arch = type(arch)(cfg)
+    batch = _batch(cfg, with_targets=False)
+    toks = batch["tokens"]
+    prefix = batch.get("img_embeds")
+    total = toks.shape[1] + (prefix.shape[1] if prefix is not None else 0)
+    n0 = toks.shape[1] - 4
+    b0 = dict(batch, tokens=toks[:, :n0])
+    cache, logits = arch.prefill(params, b0, cache_len=total + 4)
+    for i in range(n0, toks.shape[1]):
+        logits, cache = arch.decode_step(params, cache, toks[:, i:i + 1])
+    full_cache, logits_full = arch.prefill(
+        params, batch, cache_len=total + 4
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1].astype(jnp.float32)),
+        np.asarray(logits_full[:, -1].astype(jnp.float32)),
+        atol=8e-2, rtol=8e-2,
+    )

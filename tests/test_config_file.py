@@ -1,0 +1,201 @@
+"""Config-file grammar tests (paper Table 1) incl. hypothesis roundtrip."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import config_file as cf
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+
+PAPER_SAMPLE = """
+BINARY=my_a.out          // name of the binary
+NO_FUNCTIONS=1           // number of functions
+[FUNCTION]
+FUNC_NAME=foo            // name of the function
+NO_EVENTS=4              // total number of events
+[EVENT]
+ID=DATA_CACHE_MISSES     // the event name or id
+NO_SUBEVENTS=0           // number of subevents
+[/EVENT]
+[EVENT]
+ID=DISPATCHED_FPU
+NO_SUBEVENTS=3
+[SUBEVENT]               // list of subevents
+ID=OPS_ADD
+ID=OPS_ADD_PIPE_LOAD_OPS
+ID=OPS_MULTIPLY_PIPE_LOAD_OPS
+[/SUBEVENT]
+[/EVENT]
+[/FUNCTION]
+"""
+
+
+def test_parse_paper_sample():
+    cfg = cf.parse(PAPER_SAMPLE)
+    assert cfg.binary == "my_a.out"
+    assert len(cfg.functions) == 1
+    fn = cfg.functions[0]
+    assert fn.name == "foo"
+    # subevents expand into one slot each: 1 + 3
+    assert len(fn.events) == 4
+    assert fn.events[1].spec.subevent == "OPS_ADD"
+
+
+def test_comment_styles_and_blank_lines():
+    cfg = cf.parse("BINARY=x // c\n\n# full comment\nNO_FUNCTIONS=0\n")
+    assert cfg.binary == "x"
+
+
+@pytest.mark.parametrize(
+    "text,err",
+    [
+        ("[FUNCTION]\n[FUNCTION]\n", "nested"),
+        ("[/FUNCTION]\n", "without"),
+        ("[FUNCTION]\nFUNC_NAME=f\n", "unterminated"),
+        ("[FUNCTION]\n[/FUNCTION]\n", "missing FUNC_NAME"),
+        ("NO_FUNCTIONS=3\n", "NO_FUNCTIONS=3"),
+        ("[FUNCTION]\nFUNC_NAME=f\nNO_EVENTS=2\n[/FUNCTION]\n", "NO_EVENTS"),
+        ("garbage\n", "KEY=VALUE"),
+        ("WHAT=1\n", "unknown top-level"),
+    ],
+)
+def test_parse_errors(text, err):
+    with pytest.raises(cf.ConfigError, match=err):
+        cf.parse(text)
+
+
+def test_multiplex_sets_and_period():
+    text = """
+BINARY=b
+NO_FUNCTIONS=1
+[FUNCTION]
+FUNC_NAME=layer/attn
+MULTIPLEX_PERIOD=100
+NO_EVENTS=3
+[EVENT]
+ID=ACT_RMS
+TENSOR=out
+SET=0
+NO_SUBEVENTS=0
+[/EVENT]
+[EVENT]
+ID=NAN_COUNT:out
+SET=1
+NO_SUBEVENTS=0
+[/EVENT]
+[EVENT]
+ID=INF_COUNT:out
+SET=1
+NO_SUBEVENTS=0
+[/EVENT]
+[/FUNCTION]
+"""
+    cfg = cf.parse(text)
+    ctx = cfg.functions[0].to_scope_context()
+    assert ctx.n_sets == 2
+    assert ctx.default_period == 100
+    assert ctx.slots[0].slot_id == "ACT_RMS:out"
+
+
+def _spec():
+    return MonitorSpec.of([
+        ScopeContext.exhaustive(
+            "layer/attn",
+            [EventSpec("ACT_RMS", "out"), EventSpec("NAN_COUNT", "out")],
+        ),
+        ScopeContext.exhaustive("layer/mlp", [EventSpec("ACT_RMS", "out")]),
+    ])
+
+
+def test_apply_config_masks():
+    spec = _spec()
+    cfg = cf.parse(
+        "NO_FUNCTIONS=1\n[FUNCTION]\nFUNC_NAME=layer/attn\n"
+        "MULTIPLEX_PERIOD=5\nNO_EVENTS=1\n"
+        "[EVENT]\nID=ACT_RMS:out\nNO_SUBEVENTS=0\n[/EVENT]\n[/FUNCTION]\n"
+    )
+    params, missing = cf.apply_config(spec, cfg)
+    assert missing == []
+    sm = np.asarray(params.scope_mask)
+    assert sm[spec.scope_index("layer/attn")] == 1.0
+    assert sm[spec.scope_index("layer/mlp")] == 0.0
+    slots = np.asarray(params.slot_mask)
+    ai = spec.scope_index("layer/attn")
+    assert slots[ai, 0] == 1.0 and slots[ai, 1] == 0.0
+    assert np.asarray(params.period)[ai] == 5
+
+
+def test_apply_config_bare_function_enables_all_slots():
+    spec = _spec()
+    cfg = cf.parse(
+        "NO_FUNCTIONS=1\n[FUNCTION]\nFUNC_NAME=layer/attn\nNO_EVENTS=0\n"
+        "[/FUNCTION]\n"
+    )
+    params, missing = cf.apply_config(spec, cfg)
+    slots = np.asarray(params.slot_mask)
+    assert slots[spec.scope_index("layer/attn"), :2].sum() == 2.0
+
+
+def test_apply_config_outside_compile_time_set():
+    spec = _spec()
+    cfg = cf.parse(
+        "NO_FUNCTIONS=2\n"
+        "[FUNCTION]\nFUNC_NAME=not_compiled\nNO_EVENTS=0\n[/FUNCTION]\n"
+        "[FUNCTION]\nFUNC_NAME=layer/attn\nNO_EVENTS=1\n"
+        "[EVENT]\nID=L2NORM:out\nNO_SUBEVENTS=0\n[/EVENT]\n[/FUNCTION]\n"
+    )
+    params, missing = cf.apply_config(spec, cfg)
+    assert "scope:not_compiled" in missing
+    assert "slot:layer/attn:L2NORM:out" in missing
+    with pytest.raises(cf.ConfigError, match="re-trace"):
+        cf.apply_config(spec, cfg, strict=True)
+
+
+# '//' and '#' start comments in the grammar, so they cannot appear in names
+_name = st.text(
+    alphabet=st.sampled_from("abcdefgh_/"), min_size=1, max_size=12
+).filter(lambda s: "//" not in s and not s.startswith("/"))
+_event = st.sampled_from(
+    ["ACT_RMS", "NAN_COUNT", "MEAN", "L2NORM", "ACT_MAX_ABS"]
+)
+_tensor = st.sampled_from(["out", "x", "state", ""])
+
+
+@st.composite
+def _configs(draw):
+    fns = []
+    for name in draw(
+        st.lists(_name, min_size=0, max_size=4, unique=True)
+    ):
+        events = []
+        for i in range(draw(st.integers(0, 4))):
+            events.append(
+                cf.EventConfig(
+                    spec=EventSpec(draw(_event), draw(_tensor)),
+                    set_index=draw(st.integers(0, 2)),
+                )
+            )
+        fns.append(
+            cf.FunctionConfig(
+                name=name, events=events,
+                multiplex_period=draw(st.integers(1, 500)),
+            )
+        )
+    return cf.ScalpelConfig(binary=draw(_name), functions=fns)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_configs())
+def test_serialize_parse_roundtrip(cfg):
+    text = cf.serialize(cfg)
+    back = cf.parse(text)
+    assert back.binary == cfg.binary
+    assert [f.name for f in back.functions] == [f.name for f in cfg.functions]
+    for f1, f2 in zip(cfg.functions, back.functions):
+        assert [e.spec.slot_id for e in f1.events] == [
+            e.spec.slot_id for e in f2.events
+        ]
+        assert [e.set_index for e in f1.events] == [
+            e.set_index for e in f2.events
+        ]
+        assert f1.multiplex_period == f2.multiplex_period

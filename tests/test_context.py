@@ -1,0 +1,117 @@
+"""Unit tests: monitoring contexts (the compile-time set, paper C2/C3)."""
+import pytest
+
+from repro.core.context import (
+    EventSpec,
+    MonitorSpec,
+    ScopeContext,
+    spec_from_mapping,
+)
+
+
+def test_eventspec_slot_id_roundtrip():
+    for sid in ["ACT_RMS", "ACT_RMS:out", "MOE_LOAD:router_probs/CV",
+                "FLOPS/SUB"]:
+        assert EventSpec.parse(sid).slot_id == sid
+
+
+def test_eventspec_parse_fields():
+    e = EventSpec.parse("MOE_LOAD:router_probs/MAX_FRAC")
+    assert e.event == "MOE_LOAD"
+    assert e.tensor == "router_probs"
+    assert e.subevent == "MAX_FRAC"
+
+
+def test_exhaustive_context_single_set():
+    ctx = ScopeContext.exhaustive(
+        "attn", [EventSpec("ACT_RMS", "out"), EventSpec("NAN_COUNT", "out")]
+    )
+    assert ctx.n_sets == 1
+    assert ctx.event_sets == ((0, 1),)
+
+
+def test_multiplexed_context_sets_partition_slots():
+    ctx = ScopeContext.multiplexed(
+        "mlp",
+        [[EventSpec("ACT_RMS", "out")],
+         [EventSpec("NAN_COUNT", "out"), EventSpec("INF_COUNT", "out")]],
+        period=100,
+    )
+    assert ctx.n_sets == 2
+    assert ctx.event_sets == ((0,), (1, 2))
+    assert ctx.default_period == 100
+
+
+def test_event_set_overlap_rejected():
+    with pytest.raises(ValueError, match="more than one event set"):
+        ScopeContext(
+            scope="s",
+            slots=(EventSpec("ACT_RMS", "x"), EventSpec("MEAN", "x")),
+            event_sets=((0, 1), (1,)),
+        )
+
+
+def test_event_set_must_cover_all_slots():
+    with pytest.raises(ValueError, match="cover every slot"):
+        ScopeContext(
+            scope="s",
+            slots=(EventSpec("ACT_RMS", "x"), EventSpec("MEAN", "x")),
+            event_sets=((0,),),
+        )
+
+
+def test_event_set_index_out_of_range():
+    with pytest.raises(ValueError, match="out of range"):
+        ScopeContext(
+            scope="s", slots=(EventSpec("ACT_RMS", "x"),), event_sets=((3,),)
+        )
+
+
+def test_monitor_spec_lookup_and_membership():
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive("a", [EventSpec("ACT_RMS", "x")]),
+        ScopeContext.exhaustive("b", []),
+    ])
+    assert spec.n_scopes == 2
+    assert "a" in spec and "c" not in spec
+    assert spec.scope_index("b") == 1
+    assert spec.slot_index("a", "ACT_RMS:x") == 0
+    with pytest.raises(KeyError):
+        spec.scope_index("missing")
+    with pytest.raises(KeyError):
+        spec.slot_index("a", "nope")
+
+
+def test_monitor_spec_duplicate_scopes_rejected():
+    ctx = ScopeContext.exhaustive("a", [])
+    with pytest.raises(ValueError, match="duplicate"):
+        MonitorSpec.of([ctx, ctx])
+
+
+def test_with_context_replaces():
+    spec = MonitorSpec.of([ScopeContext.exhaustive("a", [])])
+    spec2 = spec.with_context(
+        ScopeContext.exhaustive("a", [EventSpec("MEAN", "x")])
+    )
+    assert spec2.n_scopes == 1
+    assert len(spec2.context("a").slots) == 1
+
+
+def test_spec_from_mapping_exhaustive_and_multiplexed():
+    spec = spec_from_mapping(
+        {
+            "attn": ["ACT_RMS:out", "NAN_COUNT:out"],
+            "mlp": [["ACT_RMS:out"], ["MEAN:out"]],
+        },
+        periods={"mlp": 7},
+    )
+    assert spec.context("attn").n_sets == 1
+    assert spec.context("mlp").n_sets == 2
+    assert spec.context("mlp").default_period == 7
+
+
+def test_max_slots():
+    spec = spec_from_mapping({"a": ["ACT_RMS:x"], "b": ["ACT_RMS:x",
+                                                        "MEAN:x",
+                                                        "L2NORM:x"]})
+    assert spec.max_slots == 3

@@ -1,0 +1,120 @@
+"""Event registry: every in-graph event vs a numpy reference."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events
+from repro.core.context import EventSpec
+
+
+@pytest.fixture()
+def x():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(4, 8)).astype(np.float32)
+    a[1, 2] = 0.0
+    return a
+
+
+def _ev(name, tensors, sub=""):
+    key = next(iter(tensors))
+    return float(
+        events.compute(EventSpec(name, tensor=key, subevent=sub), {
+            k: jnp.asarray(v) for k, v in tensors.items()
+        })
+    )
+
+
+def test_act_rms(x):
+    assert _ev("ACT_RMS", {"x": x}) == pytest.approx(
+        np.sqrt((x ** 2).mean()), rel=1e-5)
+
+
+def test_act_mean_abs(x):
+    assert _ev("ACT_MEAN_ABS", {"x": x}) == pytest.approx(
+        np.abs(x).mean(), rel=1e-5)
+
+
+def test_act_max_abs(x):
+    assert _ev("ACT_MAX_ABS", {"x": x}) == pytest.approx(
+        np.abs(x).max(), rel=1e-6)
+
+
+def test_zero_frac(x):
+    assert _ev("ACT_ZERO_FRAC", {"x": x}) == pytest.approx(
+        (x == 0).mean(), abs=1e-7)
+
+
+def test_nan_inf_count():
+    a = np.array([[np.nan, 1.0, np.inf], [-np.inf, 2.0, np.nan]], np.float32)
+    assert _ev("NAN_COUNT", {"x": a}) == 2.0
+    assert _ev("INF_COUNT", {"x": a}) == 2.0
+
+
+def test_numel(x):
+    assert _ev("NUMEL", {"x": x}) == x.size
+
+
+def test_l2norm_mean(x):
+    assert _ev("L2NORM", {"x": x}) == pytest.approx(
+        np.linalg.norm(x), rel=1e-5)
+    assert _ev("MEAN", {"x": x}) == pytest.approx(x.mean(), abs=1e-6)
+
+
+def test_attn_entropy_uniform():
+    p = np.full((2, 3, 4), 0.25, np.float32)  # uniform over last axis
+    assert _ev("ATTN_ENTROPY", {"p": p}) == pytest.approx(
+        np.log(4.0), rel=1e-4)
+
+
+def test_moe_load_subevents():
+    probs = np.array(
+        [[0.7, 0.2, 0.1], [0.6, 0.3, 0.1], [0.5, 0.4, 0.1]], np.float32
+    )
+    t = {"router_probs": jnp.asarray(probs)}
+    load = probs.mean(0)
+    spec = lambda s: EventSpec("MOE_LOAD", subevent=s)
+    assert float(events.compute(spec("MAX_FRAC"), t)) == pytest.approx(
+        load.max() * 3, rel=1e-5)
+    assert float(events.compute(spec("MIN_FRAC"), t)) == pytest.approx(
+        load.min() * 3, rel=1e-5)
+    assert float(events.compute(spec("CV"), t)) == pytest.approx(
+        load.std() / load.mean(), rel=1e-4)
+
+
+def test_moe_load_with_expert_mask():
+    probs = np.full((4, 2), 0.5, np.float32)
+    mask = np.array([[1, 0], [1, 0], [1, 0], [0, 1]], np.float32)
+    t = {"router_probs": jnp.asarray(probs), "expert_mask": jnp.asarray(mask)}
+    v = float(events.compute(EventSpec("MOE_LOAD", subevent="MAX_FRAC"), t))
+    assert v == pytest.approx(0.75 * 2, rel=1e-5)
+
+
+def test_extensive_vs_intensive_tags():
+    assert events.kind_of(EventSpec("NAN_COUNT")) == events.EXTENSIVE
+    assert events.kind_of(EventSpec("ACT_RMS")) == events.INTENSIVE
+
+
+def test_computable_logic():
+    # tensor-bound slot needs its tensor present
+    assert events.computable(EventSpec("ACT_RMS", "out"), {"out"})
+    assert not events.computable(EventSpec("ACT_RMS", "out"), {"x"})
+    # unbound slot only computable from a single-tensor probe
+    assert events.computable(EventSpec("ACT_RMS"), {"x"})
+    assert not events.computable(EventSpec("ACT_RMS"), {"x", "y"})
+    # dict event requires its named tensors
+    assert events.computable(
+        EventSpec("MOE_LOAD", subevent="CV"), {"router_probs"})
+    assert not events.computable(
+        EventSpec("MOE_LOAD", subevent="CV"), {"out"})
+
+
+def test_unknown_event_raises():
+    with pytest.raises(KeyError, match="unknown event"):
+        events.lookup("NOPE")
+
+
+def test_compute_requires_tensor_qualifier_when_ambiguous():
+    with pytest.raises(KeyError, match="qualifier"):
+        events.compute(
+            EventSpec("ACT_RMS"), {"a": jnp.ones(3), "b": jnp.ones(3)}
+        )

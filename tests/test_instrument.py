@@ -1,0 +1,340 @@
+"""Instrumentation semantics: interception, masking, call-count multiplexing
+(the paper's central mechanism), scan threading, recursion, discovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import core as scalpel
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.core.counters import CounterState, MonitorParams
+
+
+def _spec_one(scope="f", sets=None, period=1):
+    if sets is None:
+        return MonitorSpec.of(
+            [ScopeContext.exhaustive(scope, [EventSpec("MEAN", "x")])]
+        )
+    return MonitorSpec.of([
+        ScopeContext.multiplexed(
+            scope, [[EventSpec(e, "x") for e in s] for s in sets],
+            period=period,
+        )
+    ])
+
+
+def run_step(spec, params, state, fn, *args):
+    with scalpel.collecting(spec, params, state) as col:
+        out = fn(*args)
+    return out, state.add(col.delta)
+
+
+def test_vanilla_no_collector_is_identity():
+    def f(x):
+        with scalpel.function("f"):
+            scalpel.probe(x=x)
+            return x * 2
+
+    x = jnp.arange(4.0)
+    # no collector anywhere: results identical, no tracing overhead paths
+    np.testing.assert_array_equal(f(x), x * 2)
+
+
+def test_interception_counts_calls():
+    spec = _spec_one()
+    params = MonitorParams.all_on(spec)
+    state = CounterState.zeros(spec)
+
+    def prog(x):
+        for _ in range(5):
+            with scalpel.function("f"):
+                scalpel.probe(x=x)
+        return x
+
+    _, state = run_step(spec, params, state, prog, jnp.ones(3))
+    assert int(state.calls[0]) == 5
+    assert int(state.samples[0, 0]) == 5
+
+
+def test_scope_mask_off_intercepts_but_skips_events():
+    """The paper's 'all' mode: interception without monitoring."""
+    spec = _spec_one()
+    params = MonitorParams.all_off(spec)
+    state = CounterState.zeros(spec)
+
+    def prog(x):
+        with scalpel.function("f"):
+            scalpel.probe(x=x)
+        return x
+
+    _, state = run_step(spec, params, state, prog, jnp.ones(3))
+    assert int(state.calls[0]) == 1          # intercepted
+    assert int(state.samples[0, 0]) == 0     # not monitored
+    assert float(state.values[0, 0]) == 0.0
+
+
+def test_mask_change_does_not_retrace():
+    spec = _spec_one()
+    traces = []
+
+    @jax.jit
+    def step(state, params, x):
+        traces.append(1)
+        with scalpel.collecting(spec, params, state) as col:
+            with scalpel.function("f"):
+                scalpel.probe(x=x)
+        return state.add(col.delta)
+
+    x = jnp.ones(3)
+    s = CounterState.zeros(spec)
+    s = step(s, MonitorParams.all_on(spec), x)
+    s = step(s, MonitorParams.all_off(spec), x)  # flip mask: same trace
+    p = MonitorParams.all_on(spec).set_period(spec, "f", 7)
+    s = step(s, p, x)                            # change period: same trace
+    assert len(traces) == 1
+    assert int(s.calls[0]) == 3
+    assert int(s.samples[0, 0]) == 2  # one masked-off call
+
+
+def test_slot_mask_disables_single_event():
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive(
+            "f", [EventSpec("MEAN", "x"), EventSpec("L2NORM", "x")]
+        )
+    ])
+    params = MonitorParams.all_on(spec).set_slot(spec, "f", "L2NORM:x", False)
+    state = CounterState.zeros(spec)
+
+    def prog(x):
+        with scalpel.function("f"):
+            scalpel.probe(x=x)
+        return x
+
+    _, state = run_step(spec, params, state, prog, 2.0 * jnp.ones(4))
+    assert float(state.values[0, 0]) == pytest.approx(2.0)
+    assert int(state.samples[0, 0]) == 1
+    assert int(state.samples[0, 1]) == 0
+
+
+def _multiplex_sim(call_values, period, n_sets):
+    """Expected (per-set sums, per-set sample counts) for MEAN events."""
+    sums = [0.0] * n_sets
+    counts = [0] * n_sets
+    for c, v in enumerate(call_values):
+        k = (c // period) % n_sets
+        sums[k] += v
+        counts[k] += 1
+    return sums, counts
+
+
+def test_multiplex_schedule_exact():
+    """Set index must follow (calls // period) % n_sets exactly (paper C4)."""
+    sets = [["MEAN"], ["L2NORM"], ["ACT_MAX_ABS"]]
+    period = 2
+    spec = _spec_one(sets=sets, period=period)
+    params = MonitorParams.all_on(spec)
+    state = CounterState.zeros(spec)
+    n_calls = 13
+
+    def prog(x):
+        for i in range(n_calls):
+            with scalpel.function("f"):
+                scalpel.probe(x=x * (i + 1))
+        return x
+
+    _, state = run_step(spec, params, state, prog, jnp.ones(2))
+    vals = [float(v) for v in (i + 1.0 for i in range(n_calls))]
+    # MEAN of x*(i+1) over 2 elements = i+1; L2NORM = (i+1)*sqrt(2);
+    # MAX_ABS = i+1
+    per_call = {
+        0: vals,
+        1: [v * np.sqrt(2) for v in vals],
+        2: vals,
+    }
+    for k in range(3):
+        want_sum = sum(
+            per_call[k][c] for c in range(n_calls)
+            if (c // period) % 3 == k
+        )
+        want_n = sum(1 for c in range(n_calls) if (c // period) % 3 == k)
+        assert float(state.values[0, k]) == pytest.approx(want_sum, rel=1e-5)
+        assert int(state.samples[0, k]) == want_n
+
+
+def test_multiplex_continues_across_steps():
+    """Call counts carry across jit boundaries: the schedule never resets."""
+    sets = [["MEAN"], ["L2NORM"]]
+    spec = _spec_one(sets=sets, period=1)
+    params = MonitorParams.all_on(spec)
+
+    @jax.jit
+    def step(state, x):
+        with scalpel.collecting(spec, params, state) as col:
+            with scalpel.function("f"):
+                scalpel.probe(x=x)
+        return state.add(col.delta)
+
+    s = CounterState.zeros(spec)
+    for _ in range(4):
+        s = step(s, jnp.ones(2))
+    # alternating sets: calls 0,2 -> set0; 1,3 -> set1
+    assert int(s.samples[0, 0]) == 2
+    assert int(s.samples[0, 1]) == 2
+
+
+def test_nested_scopes_and_recursion_paths():
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive("outer", [EventSpec("MEAN", "x")]),
+        ScopeContext.exhaustive("outer/inner", [EventSpec("MEAN", "x")]),
+    ])
+    params = MonitorParams.all_on(spec)
+    state = CounterState.zeros(spec)
+
+    def rec(x, depth):
+        with scalpel.function("outer"):
+            scalpel.probe(x=x)
+            with scalpel.function("inner"):
+                scalpel.probe(x=x + 1)
+            if depth:
+                return rec(x, depth - 1)
+            return x
+
+    _, state = run_step(spec, params, state, lambda x: rec(x, 2),
+                        jnp.zeros(2))
+    # both parent and child are monitored on every level (3 calls each)
+    assert int(state.calls[spec.scope_index("outer")]) == 3
+    assert int(state.calls[spec.scope_index("outer/inner")]) == 3
+
+
+def test_scan_with_counters_matches_unrolled():
+    spec = _spec_one(sets=[["MEAN"], ["L2NORM"]], period=1)
+    params = MonitorParams.all_on(spec)
+    xs = jnp.arange(6.0).reshape(6, 1)
+
+    def body(carry, x):
+        with scalpel.function("f"):
+            scalpel.probe(x=x + carry)
+        return carry + 1.0, x
+
+    # scan version
+    state = CounterState.zeros(spec)
+    with scalpel.collecting(spec, params, state) as col:
+        scalpel.scan_with_counters(body, jnp.zeros(()), xs)
+    scan_state = state.add(col.delta)
+
+    # unrolled version
+    state2 = CounterState.zeros(spec)
+    with scalpel.collecting(spec, params, state2) as col2:
+        c = jnp.zeros(())
+        for i in range(6):
+            c, _ = body(c, xs[i])
+    unrolled = state2.add(col2.delta)
+
+    np.testing.assert_allclose(scan_state.calls, unrolled.calls)
+    np.testing.assert_allclose(
+        scan_state.values, unrolled.values, rtol=1e-6)
+    np.testing.assert_allclose(scan_state.samples, unrolled.samples)
+
+
+def test_scan_with_counters_no_collector_plain_scan():
+    def body(c, x):
+        return c + x, c
+
+    out, ys = scalpel.scan_with_counters(body, jnp.zeros(()), jnp.arange(4.0))
+    assert float(out) == 6.0
+
+
+def test_scan_with_counters_remat():
+    spec = _spec_one()
+    params = MonitorParams.all_on(spec)
+    xs = jnp.ones((4, 2))
+
+    def body(carry, x):
+        with scalpel.function("f"):
+            scalpel.probe(x=x)
+        return carry * 2.0, x
+
+    def loss(c0):
+        state = CounterState.zeros(spec)
+        with scalpel.collecting(spec, params, state) as col:
+            c, _ = scalpel.scan_with_counters(
+                body, c0, xs, remat=jax.checkpoint
+            )
+        return (c * state.add(col.delta).values[0, 0]).sum()
+
+    g = jax.grad(loss)(jnp.ones(()))
+    assert np.isfinite(float(g))
+
+
+def test_instrument_decorator_and_probe_scope():
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive("g", [EventSpec("MEAN", "out")]),
+        ScopeContext.exhaustive("h", [EventSpec("MEAN", "y")]),
+    ])
+    params = MonitorParams.all_on(spec)
+    state = CounterState.zeros(spec)
+
+    g = scalpel.instrument(lambda x: x * 3, "g")
+
+    def prog(x):
+        out = g(x)
+        scalpel.probe_scope("h", y=out + 1)
+        return out
+
+    _, state = run_step(spec, params, state, prog, jnp.ones(2))
+    assert float(state.values[0, 0]) == pytest.approx(3.0)
+    assert float(state.values[1, 0]) == pytest.approx(4.0)
+
+
+def test_discovery_enumerates_scopes_and_tensors():
+    def prog(x):
+        with scalpel.function("a"):
+            scalpel.probe(x=x)
+            with scalpel.function("b"):
+                scalpel.probe(y=x, z=x)
+        return x
+
+    seen = scalpel.discover(prog, jnp.ones((2, 2)))
+    assert seen["a"] == ("x",)
+    assert set(seen["a/b"]) == {"y", "z"}
+    spec = scalpel.spec_from_discovery(seen, tensor_events=("ACT_RMS",))
+    assert spec.n_scopes == 2
+    assert spec.context("a/b").slot_ids == ("ACT_RMS:y", "ACT_RMS:z")
+
+
+def test_counters_cross_shard_psum_shape():
+    spec = _spec_one()
+    s = CounterState.zeros(spec)
+    # psum outside pmap raises; just validate add/zeros algebra instead
+    s2 = s.add(s)
+    assert s2.calls.shape == s.calls.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 9),        # period
+    st.integers(1, 4),        # n_sets
+    st.integers(1, 30),       # calls
+)
+def test_multiplex_property(period, n_sets, n_calls):
+    """Property: per-set sample counts follow the schedule for ANY
+    (period, n_sets, calls) combination."""
+    sets = [["MEAN"], ["L2NORM"], ["ACT_MAX_ABS"], ["ACT_MEAN_ABS"]][:n_sets]
+    spec = _spec_one(sets=sets, period=period)
+    params = MonitorParams.all_on(spec)
+    state = CounterState.zeros(spec)
+
+    def prog(x):
+        for _ in range(n_calls):
+            with scalpel.function("f"):
+                scalpel.probe(x=x)
+        return x
+
+    _, state = run_step(spec, params, state, prog, jnp.ones(2))
+    for k in range(n_sets):
+        want = sum(
+            1 for c in range(n_calls) if (c // period) % n_sets == k
+        )
+        assert int(state.samples[0, k]) == want, (period, n_sets, k)

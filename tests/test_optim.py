@@ -1,0 +1,125 @@
+"""Optimizer tiers: f32 / int8-quantized / factored; schedule; clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    OptConfig,
+    apply_updates,
+    global_norm,
+    init_opt_state,
+    lr_at,
+    opt_state_axes,
+)
+from repro.optim.adamw import _dequant, _quant
+
+
+def _rosenbrock_params():
+    return {"w": jnp.array([1.5, -0.5], jnp.float32),
+            "b": jnp.zeros((3, 4), jnp.float32)}
+
+
+def _quad_loss(p):
+    return jnp.sum((p["w"] - 2.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("state", ["f32", "int8", "factored"])
+def test_optimizer_converges_on_quadratic(state):
+    cfg = OptConfig(lr=5e-2, warmup_steps=0, total_steps=400,
+                    weight_decay=0.0, clip_norm=0.0, state=state,
+                    min_lr_frac=1.0)
+    params = _rosenbrock_params()
+    opt = init_opt_state(cfg, params)
+    loss0 = float(_quad_loss(params))
+
+    @jax.jit
+    def step(p, o):
+        g = jax.grad(_quad_loss)(p)
+        return apply_updates(cfg, o, p, g)
+
+    for _ in range(300):
+        params, opt, stats = step(params, opt)
+    assert float(_quad_loss(params)) < 0.05 * loss0, state
+
+
+def test_int8_quant_roundtrip_accuracy():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32)) * 0.01
+    q = _quant(x)
+    assert q["q"].dtype == jnp.int8
+    back = _dequant(q)
+    # quadratic code: relative error small near the row max, tiny near zero
+    err = np.abs(np.asarray(back - x))
+    scale = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    assert (err / scale).max() < 0.02
+
+
+def test_int8_state_memory_is_int8():
+    cfg = OptConfig(state="int8")
+    params = {"w": jnp.zeros((16, 32), jnp.float32)}
+    st = init_opt_state(cfg, params)
+    assert st.m["w"]["q"].dtype == jnp.int8
+    assert st.v["w"]["q"].dtype == jnp.int8
+
+
+def test_factored_second_moment_shapes():
+    cfg = OptConfig(state="factored")
+    params = {"w": jnp.zeros((16, 32), jnp.float32),
+              "b": jnp.zeros((8,), jnp.float32)}
+    st = init_opt_state(cfg, params)
+    assert st.v["w"]["vr"].shape == (16,)
+    assert st.v["w"]["vc"].shape == (32,)
+    assert st.v["b"].shape == (8,)  # 1-D leaves stay unfactored
+
+
+@pytest.mark.parametrize("state", ["f32", "int8", "factored"])
+def test_opt_state_axes_structure_matches(state):
+    cfg = OptConfig(state=state)
+    params = {"w": jnp.zeros((16, 32), jnp.float32),
+              "b": jnp.zeros((8,), jnp.float32)}
+    axes = {"w": ("embed", "mlp"), "b": (None,)}
+    st = init_opt_state(cfg, params)
+    ax = opt_state_axes(cfg, axes)
+    jax.tree.map(
+        lambda a, b: None, st, ax,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )  # raises on structure mismatch
+
+
+def test_lr_schedule_warmup_and_cosine():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                    min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert float(lr_at(cfg, 5)) == pytest.approx(0.5)
+    assert float(lr_at(cfg, 10)) == pytest.approx(1.0)
+    assert float(lr_at(cfg, 110)) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_grad_clipping_caps_update_norm():
+    cfg = OptConfig(lr=1.0, warmup_steps=0, clip_norm=1e-3,
+                    weight_decay=0.0, min_lr_frac=1.0)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    opt = init_opt_state(cfg, params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, stats = apply_updates(cfg, opt, params, g)
+    assert float(stats["clip_scale"]) == pytest.approx(
+        1e-3 / float(global_norm(g)), rel=1e-4)
+
+
+def test_master_weights_keep_precision_with_bf16_params():
+    cfg = OptConfig(lr=1e-4, warmup_steps=0, weight_decay=0.0,
+                    min_lr_frac=1.0)
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    opt = init_opt_state(cfg, params)
+    # one tiny step: bf16 params could not represent the delta, master must
+    g = {"w": jnp.full((8,), 1e-3, jnp.bfloat16)}
+    p2, o2, _ = apply_updates(cfg, opt, params, g)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert float(jnp.max(jnp.abs(o2.master["w"] - 1.0))) > 0.0
+    # master moved even though bf16 param may round back to 1.0
+    assert not np.array_equal(
+        np.asarray(o2.master["w"]), np.ones(8, np.float32)
+    )
