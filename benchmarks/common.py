@@ -40,6 +40,8 @@ def bench(fn, *args, iters: int = 5, warmup: int = 2) -> dict:
 
 
 def fmt_table(rows: list[dict], cols: list[str], title: str = "") -> str:
+    if not rows:
+        return (f"== {title} ==\n(no rows)" if title else "(no rows)")
     w = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
     lines = []
     if title:

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, probe_reduce, ref
 
 from .common import bench, fmt_table, save_json
 
@@ -79,6 +79,16 @@ def correctness_and_speed(fast: bool):
     t = bench(lambda: ops.ssm_scan(la, bb, chunk=256, bd=64),
               iters=3 if fast else 5)
     rows.append({"kernel": "ssm_scan", "shape": f"B{B} S{S} D{D}",
+                 "max_err": f"{err:.1e}",
+                 "ms_interpret": round(t["min_s"] * 1e3, 2)})
+    # fused probe-moment reduction (the monitoring hot path)
+    x = jax.random.normal(jax.random.PRNGKey(7), (1 << 16,), jnp.float32)
+    want = np.asarray(probe_reduce.moments_ref(x))
+    got = np.asarray(ops.probe_moments(x, interpret=True))
+    err = float(np.max(np.abs(got - want)))
+    t = bench(lambda: ops.probe_moments(x, interpret=True),
+              iters=3 if fast else 5)
+    rows.append({"kernel": "probe_reduce", "shape": f"{x.size} elems",
                  "max_err": f"{err:.1e}",
                  "ms_interpret": round(t["min_s"] * 1e3, 2)})
     return rows

@@ -147,6 +147,11 @@ def fmt_seconds(x: float) -> str:
 def main(mesh: str = "16x16"):
     recs = [analyze_record(r) for r in load_records()]
     recs = [r for r in recs if r is not None]
+    if not recs:
+        print(f"roofline {mesh}: no dry-run artifacts under "
+              "experiments/dryrun — run `python -m repro.launch.dryrun` "
+              "first; skipping")
+        return []
     rows = []
     for r in recs:
         if r.get("mesh") != mesh and "skipped" not in r:

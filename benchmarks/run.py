@@ -1,15 +1,34 @@
 """Benchmark driver: python -m benchmarks.run [--fast]
 
 One benchmark per paper table/figure + the scale deliverables:
-  overhead    — paper Figs. 2-3 (vanilla/perfmon/all/selective)
+  overhead    — paper Figs. 2-3 (vanilla/perfmon/all/selective, fused vs
+                legacy probe paths).  Its structured result is written to
+                ``BENCH_overhead.json`` at the repo root so the monitoring
+                overhead trajectory is machine-readable across PRs.
   case_study  — paper Table 2 + Fig. 4 (two GEMM schedules through counters)
   kernels     — Pallas kernel vs oracle timings + cost-model table
   roofline    — per (arch x shape) three-term roofline from the dry-run
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+# anchored to the repo root (parent of benchmarks/), not the CWD, so the
+# trajectory file lands where CI and git expect it from any launch dir
+OVERHEAD_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_overhead.json",
+)
+
+
+def _write_overhead_json(payload: dict) -> None:
+    with open(OVERHEAD_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"\nwrote {OVERHEAD_JSON} "
+          f"(fused_vs_legacy: {payload.get('fused_vs_legacy')})")
 
 
 def main() -> int:
@@ -21,8 +40,11 @@ def main() -> int:
 
     from . import case_study, kernels_bench, overhead, roofline
 
+    def run_overhead():
+        _write_overhead_json(overhead.main(fast=fast))
+
     for name, fn in [
-        ("overhead (paper Figs. 2-3)", lambda: overhead.main(fast=fast)),
+        ("overhead (paper Figs. 2-3)", run_overhead),
         ("case study (paper Table 2 / Fig. 4)",
          lambda: case_study.main(fast=fast)),
         ("kernel microbench", lambda: kernels_bench.main(fast=fast)),

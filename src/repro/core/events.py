@@ -1,4 +1,4 @@
-"""In-graph event library — the TPU analogue of hardware performance counters.
+"""In-graph event library — two-stage: raw moments, then scalar finalizers.
 
 The paper reads MSR-backed counters (DTLB_MISSES, L2_LINES_IN, RESOURCE_STALLS
 ...) through libpfm.  On a TPU there is no user-readable MSR file, but the
@@ -7,8 +7,30 @@ collective traffic — see backends/xla_cost.py) and to the program itself:
 statistics of the live tensors flowing through each scope.  This module is the
 registry of those in-graph events.
 
-Every event is a pure function ``(tensors: dict[str, Array]) -> f32 scalar``
-and is tagged EXTENSIVE (accumulates by summation across calls: counts,
+Architecture (stage 1 → stage 2)
+--------------------------------
+Most events are statistics of ONE probed tensor, and every one of them is a
+cheap scalar function of the shared raw *moment vector*
+
+    [sum, sum_sq, sum_abs, max_abs, zero_count, nan_count, inf_count, numel]
+
+(kernels/probe_reduce.py — one fused pass over the tensor, Pallas on TPU).
+Such *moment-derived* events declare the moments they need (``moments=``)
+plus a *finalizer* ``(moments: dict) -> f32 scalar``, e.g.
+``ACT_RMS = sqrt(sum_sq / numel)``.  The instrumentation core
+(instrument.Collector.probe) computes the union of required moments once per
+probed tensor and evaluates every live slot from that shared vector — a
+scope probing six activation statistics reads its tensor from HBM once, not
+six times.  Events that are NOT per-tensor statistics (ATTN_ENTROPY,
+MOE_LOAD, SSM_STATE_RMS, ...) keep their bespoke ``fn`` path unchanged.
+
+Every event also keeps a direct (legacy/unfused) implementation ``fn: (tensor
+| tensors-dict) -> f32 scalar`` — the reference the fused path is checked
+against (allclose: accumulation order differs between the fused single pass
+and independent reductions — benchmarks/overhead.py, tests/test_probe_reduce)
+and the path a collector takes with ``fused=False``.
+
+Events are tagged EXTENSIVE (accumulates by summation across calls: counts,
 bytes, flops) or INTENSIVE (accumulates as a mean across monitored calls:
 rms, entropy, fractions).  report.py uses the tag to turn multiplexed samples
 back into exhaustive estimates, reproducing the paper's Fig. 4 methodology.
@@ -16,7 +38,7 @@ back into exhaustive estimates, reproducing the paper's Fig. 4 methodology.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Mapping
 
 import jax.numpy as jnp
 import numpy as np
@@ -28,6 +50,19 @@ Array = jnp.ndarray
 EXTENSIVE = "extensive"
 INTENSIVE = "intensive"
 
+# Canonical raw-moment names, in kernel order (kernels/probe_reduce.MOMENTS
+# mirrors this tuple; keep the two in sync — tests assert they match).
+MOMENTS = (
+    "sum",
+    "sum_sq",
+    "sum_abs",
+    "max_abs",
+    "zero_count",
+    "nan_count",
+    "inf_count",
+    "numel",
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class EventDef:
@@ -37,6 +72,10 @@ class EventDef:
     wants_dict: bool = False  # True: fn(tensors, subevent); False: fn(tensor)
     subevents: tuple[str, ...] = ()
     requires: tuple[str, ...] = ()  # probe tensor names a dict-event needs
+    # stage-2 half of moment-derived events: which raw moments stage 1 must
+    # provide, and the scalar finalizer over them.  Empty/None = bespoke.
+    moments: tuple[str, ...] = ()
+    finalize: Callable[[Mapping[str, Array]], Array] | None = None
     doc: str = ""
 
 
@@ -50,14 +89,27 @@ def register(
     wants_dict: bool = False,
     subevents: tuple[str, ...] = (),
     requires: tuple[str, ...] = (),
+    moments: tuple[str, ...] = (),
+    finalize: Callable[[Mapping[str, Array]], Array] | None = None,
     doc: str = "",
 ):
+    unknown = set(moments) - set(MOMENTS)
+    if unknown:
+        raise ValueError(f"event {name!r}: unknown moments {sorted(unknown)}")
+    if bool(moments) != (finalize is not None):
+        raise ValueError(
+            f"event {name!r}: moments and finalize must be given together"
+        )
+    if moments and wants_dict:
+        raise ValueError(f"event {name!r}: dict events cannot be moment-derived")
+
     def deco(fn):
         if name in _REGISTRY:
             raise ValueError(f"event {name!r} already registered")
         _REGISTRY[name] = EventDef(
             name=name, kind=kind, fn=fn, wants_dict=wants_dict,
-            subevents=subevents, requires=requires, doc=doc,
+            subevents=subevents, requires=requires, moments=moments,
+            finalize=finalize, doc=doc,
         )
         return fn
 
@@ -121,6 +173,46 @@ def compute(spec: EventSpec, tensors: dict[str, Array]) -> Array:
 
 
 # --------------------------------------------------------------------------
+# Two-stage (fused) evaluation helpers — used by instrument.Collector.probe.
+# --------------------------------------------------------------------------
+
+def moment_based(spec: EventSpec) -> bool:
+    """Is this slot a stage-2 finalizer over the shared moment vector?"""
+    ev = lookup(spec.event)
+    return ev.finalize is not None and not ev.wants_dict
+
+
+def probe_tensor(spec: EventSpec, tensor_names) -> str:
+    """The probe tensor a per-tensor slot binds to (assumes computable)."""
+    if spec.tensor:
+        return spec.tensor
+    (name,) = tuple(tensor_names)
+    return name
+
+
+def required_moments(specs) -> tuple[str, ...]:
+    """Union of raw moments the given slots need, in canonical order."""
+    need: set[str] = set()
+    for s in specs:
+        need.update(lookup(s.event).moments)
+    return tuple(m for m in MOMENTS if m in need)
+
+
+def finalize_event(spec: EventSpec, moments: Mapping[str, Array]) -> Array:
+    """Stage 2: one event value from the shared moment vector (traced)."""
+    ev = lookup(spec.event)
+    if ev.finalize is None:
+        raise TypeError(f"event {spec.event!r} is not moment-derived")
+    missing = [m for m in ev.moments if m not in moments]
+    if missing:
+        raise KeyError(
+            f"event {spec.event}: moments {missing} not provided "
+            f"(have {sorted(moments)})"
+        )
+    return jnp.asarray(ev.finalize(moments), jnp.float32)
+
+
+# --------------------------------------------------------------------------
 # Generic per-tensor events (apply to any probed tensor via "NAME:tensor").
 # --------------------------------------------------------------------------
 
@@ -128,47 +220,83 @@ def _f32(x: Array) -> Array:
     return x.astype(jnp.float32)
 
 
-@register("ACT_RMS", INTENSIVE, doc="root-mean-square of the tensor")
+@register(
+    "ACT_RMS", INTENSIVE, moments=("sum_sq", "numel"),
+    finalize=lambda m: jnp.sqrt(m["sum_sq"] / m["numel"] + 1e-30),
+    doc="root-mean-square of the tensor",
+)
 def _act_rms(x):
     return jnp.sqrt(jnp.mean(jnp.square(_f32(x))) + 1e-30)
 
 
-@register("ACT_MEAN_ABS", INTENSIVE, doc="mean |x|")
+@register(
+    "ACT_MEAN_ABS", INTENSIVE, moments=("sum_abs", "numel"),
+    finalize=lambda m: m["sum_abs"] / m["numel"],
+    doc="mean |x|",
+)
 def _act_mean_abs(x):
     return jnp.mean(jnp.abs(_f32(x)))
 
 
-@register("ACT_MAX_ABS", INTENSIVE, doc="max |x| (overflow watch)")
+@register(
+    "ACT_MAX_ABS", INTENSIVE, moments=("max_abs",),
+    finalize=lambda m: m["max_abs"],
+    doc="max |x| (overflow watch)",
+)
 def _act_max_abs(x):
     return jnp.max(jnp.abs(_f32(x)))
 
 
-@register("ACT_ZERO_FRAC", INTENSIVE, doc="fraction of exact zeros (sparsity)")
+@register(
+    "ACT_ZERO_FRAC", INTENSIVE, moments=("zero_count", "numel"),
+    finalize=lambda m: m["zero_count"] / m["numel"],
+    doc="fraction of exact zeros (sparsity)",
+)
 def _act_zero_frac(x):
     return jnp.mean((x == 0).astype(jnp.float32))
 
 
-@register("NAN_COUNT", EXTENSIVE, doc="number of NaN entries")
+@register(
+    "NAN_COUNT", EXTENSIVE, moments=("nan_count",),
+    finalize=lambda m: m["nan_count"],
+    doc="number of NaN entries",
+)
 def _nan_count(x):
     return jnp.sum(jnp.isnan(_f32(x)).astype(jnp.float32))
 
 
-@register("INF_COUNT", EXTENSIVE, doc="number of +-Inf entries")
+@register(
+    "INF_COUNT", EXTENSIVE, moments=("inf_count",),
+    finalize=lambda m: m["inf_count"],
+    doc="number of +-Inf entries",
+)
 def _inf_count(x):
     return jnp.sum(jnp.isinf(_f32(x)).astype(jnp.float32))
 
 
-@register("NUMEL", EXTENSIVE, doc="number of elements seen (token/elt count)")
+@register(
+    "NUMEL", EXTENSIVE, moments=("numel",),
+    finalize=lambda m: m["numel"],
+    doc="number of elements seen (token/elt count)",
+)
 def _numel(x):
     return jnp.float32(np.prod(x.shape) if x.shape else 1)
 
 
-@register("L2NORM", INTENSIVE, doc="L2 norm of the tensor")
+@register(
+    "L2NORM", INTENSIVE, moments=("sum_sq",),
+    finalize=lambda m: jnp.sqrt(m["sum_sq"] + 1e-30),
+    doc="L2 norm of the tensor",
+)
 def _l2norm(x):
     return jnp.sqrt(jnp.sum(jnp.square(_f32(x))) + 1e-30)
 
 
-@register("MEAN", INTENSIVE, doc="mean value")
+@register(
+    "MEAN", INTENSIVE, moments=("sum", "numel"),
+    finalize=lambda m: m["sum"] / m["numel"],
+    doc="mean value",
+)
 def _mean(x):
     return jnp.mean(_f32(x))
 
@@ -223,7 +351,8 @@ def _ssm_state_rms(x):
 
 
 @register(
-    "GRAD_GLOBAL_NORM", INTENSIVE,
+    "GRAD_GLOBAL_NORM", INTENSIVE, moments=("sum_sq",),
+    finalize=lambda m: jnp.sqrt(m["sum_sq"] + 1e-30),
     doc="global norm of a gradient tensor (probe per-group flattened grads)",
 )
 def _grad_global_norm(x):
@@ -237,32 +366,39 @@ def _grad_global_norm(x):
 # case study: the *cause* metrics of a kernel schedule.
 # --------------------------------------------------------------------------
 
-@register("FLOPS", EXTENSIVE, doc="floating-point ops (probe provides scalar)")
+def _sum_finalizer(m):
+    return m["sum"]
+
+
+@register("FLOPS", EXTENSIVE, moments=("sum",), finalize=_sum_finalizer,
+          doc="floating-point ops (probe provides scalar)")
 def _flops(x):
     return jnp.sum(_f32(x))
 
 
-@register("HBM_BYTES", EXTENSIVE,
+@register("HBM_BYTES", EXTENSIVE, moments=("sum",), finalize=_sum_finalizer,
           doc="bytes moved HBM<->VMEM by the schedule (scalar probe) — "
               "analogue of L2_LINES_IN")
 def _hbm_bytes(x):
     return jnp.sum(_f32(x))
 
 
-@register("VMEM_TILE_REFILLS", EXTENSIVE,
+@register("VMEM_TILE_REFILLS", EXTENSIVE, moments=("sum",),
+          finalize=_sum_finalizer,
           doc="number of HBM->VMEM tile fetches — analogue of DTLB_MISSES")
 def _vmem_refills(x):
     return jnp.sum(_f32(x))
 
 
-@register("MXU_PASSES", EXTENSIVE,
+@register("MXU_PASSES", EXTENSIVE, moments=("sum",), finalize=_sum_finalizer,
           doc="number of 128x128 MXU systolic passes — analogue of "
               "SIMD_INST_RETIRED")
 def _mxu_passes(x):
     return jnp.sum(_f32(x))
 
 
-@register("EST_STALL_CYCLES", EXTENSIVE,
+@register("EST_STALL_CYCLES", EXTENSIVE, moments=("sum",),
+          finalize=_sum_finalizer,
           doc="estimated memory-stall cycles (max(0, mem_time-compute_time) "
               "* clock) — analogue of RESOURCE_STALLS")
 def _stall_cycles(x):

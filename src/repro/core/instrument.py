@@ -15,7 +15,11 @@ Execution model
   on the runtime scope mask (un-monitored scopes pay only the predicated
   branch — the paper's cheap interception), then a ``lax.switch`` over the
   scope's event sets keyed by ``(calls // period) % n_sets`` — call-count
-  multiplexing, phase-exact even inside ``lax.scan`` loops.
+  multiplexing, phase-exact even inside ``lax.scan`` loops.  Inside the
+  monitored branch each probed tensor is swept ONCE (the union of raw
+  moments all live moment-derived slots need — kernels/probe_reduce.py) and
+  every slot lands via one batched scatter per branch; see events.py for
+  the two-stage moments→finalizer design.
 * ``capture(fn, ...)`` runs ``fn`` under a child collector and returns
   ``(out, CounterState delta)`` — the bridge that lets ``lax.scan`` carry
   counters through stacked layers.
@@ -63,10 +67,16 @@ class Collector:
     costs k event computations but only one dynamic-update-slice — without
     this, the per-call scatters dominated the monitoring overhead
     (EXPERIMENTS.md §Perf, instrumentation iteration 1).
+
+    Event evaluation is FUSED by default: moment-derived slots (events.py
+    stage 1/2) share one moment-vector sweep per probed tensor and land in
+    the slot vector through one batched scatter per branch.  ``fused=False``
+    keeps the legacy one-reduction-per-event path — the numerical reference
+    that benchmarks/overhead.py compares against.
     """
 
     def __init__(self, spec: MonitorSpec, params: MonitorParams,
-                 calls_base, backends: tuple = ()):
+                 calls_base, backends: tuple = (), fused: bool = True):
         self.spec = spec
         self.params = params
         # calls_base: i32[n_scopes] — global call counts *before* this
@@ -76,6 +86,7 @@ class Collector:
         self.scope_path: list[str] = []
         self._extended: list[bool] = []
         self.backends = backends
+        self.fused = fused
         # deferred accumulators (trace-time)
         self._counts: dict[int, int] = {}
         self._vals: dict[int, list] = {}
@@ -157,27 +168,74 @@ class Collector:
         if not live:
             return
 
+        # Stage-1 plan (fused path): which live slots are finalizers over the
+        # shared moment vector, which probe tensor each binds to, and the
+        # UNION of raw moments every probed tensor must provide.  The union
+        # spans all event sets so a multiplexed scope still performs exactly
+        # one sweep per tensor per probe call.
+        fused_tensor: dict[int, str] = {}
+        needed: dict[str, tuple[str, ...]] = {}
+        if self.fused:
+            for i in sorted(live):
+                s = ctx.slots[i]
+                if events_lib.moment_based(s):
+                    fused_tensor[i] = events_lib.probe_tensor(s, avail)
+            for t in sorted(set(fused_tensor.values())):
+                needed[t] = events_lib.required_moments(
+                    ctx.slots[i] for i, ti in fused_tensor.items() if ti == t
+                )
+
         def _set_branch(k: int):
             members = [i for i in ctx.event_sets[k] if i in live]
 
-            def br(ts):
+            def br(operand):
+                ts, moms = operand
                 vals = jnp.zeros((m,), jnp.float32)
                 smp = jnp.zeros((m,), jnp.int32)
+                if not members:
+                    return vals, smp
+                if not self.fused:
+                    # legacy baseline: per-slot compute + per-slot scatter
+                    # chains, exactly the pre-fusion hot path (what the
+                    # overhead benchmark's *_legacy twin measures).
+                    for i in members:
+                        sm = params.slot_mask[idx, i]
+                        v = events_lib.compute(ctx.slots[i], ts) * sm
+                        vals = vals.at[i].set(v)
+                        smp = smp.at[i].set((sm > 0).astype(jnp.int32))
+                    return vals, smp
+                vs = []
                 for i in members:
-                    sm = params.slot_mask[idx, i]
-                    v = events_lib.compute(ctx.slots[i], ts) * sm
-                    vals = vals.at[i].set(v)
-                    smp = smp.at[i].set((sm > 0).astype(jnp.int32))
+                    if i in fused_tensor:
+                        v = events_lib.finalize_event(
+                            ctx.slots[i], moms[fused_tensor[i]]
+                        )
+                    else:
+                        v = events_lib.compute(ctx.slots[i], ts)
+                    vs.append(v)
+                # one batched scatter per branch instead of per-slot chains
+                idxs = jnp.asarray(members, jnp.int32)
+                sms = params.slot_mask[idx, idxs]
+                vals = vals.at[idxs].set(jnp.stack(vs) * sms)
+                smp = smp.at[idxs].set((sms > 0).astype(jnp.int32))
                 return vals, smp
 
             return br
 
         def _monitored(ts):
+            # ONE sweep per probed tensor, shared by every moment-derived
+            # slot in every event set (evaluated only when the scope mask is
+            # on — un-monitored scopes never touch the tensor).
+            from repro.kernels import ops as _kops
+
+            moms = {t: _kops.tensor_moments(ts[t], mom) for t, mom in
+                    needed.items()}
             if ctx.n_sets == 1:
-                return _set_branch(0)(ts)
+                return _set_branch(0)((ts, moms))
             set_idx = (calls_here // jnp.maximum(params.period[idx], 1)) % ctx.n_sets
             return jax.lax.switch(
-                set_idx, [_set_branch(k) for k in range(ctx.n_sets)], ts
+                set_idx, [_set_branch(k) for k in range(ctx.n_sets)],
+                (ts, moms),
             )
 
         def _skipped(ts):
@@ -276,16 +334,18 @@ class DiscoveryCollector:
 
 @contextlib.contextmanager
 def collecting(spec: MonitorSpec, params: MonitorParams,
-               state: CounterState | None = None):
+               state: CounterState | None = None, *, fused: bool = True):
     """Open a root collection region; yields the Collector.
 
     ``state`` supplies the call-count base so multiplex schedules continue
     across steps; pass the carried CounterState of the training loop.
+    ``fused=False`` selects the legacy one-reduction-per-event probe path
+    (numerical reference / overhead baseline).
     """
     base = state.calls if state is not None else jnp.zeros(
         (spec.n_scopes,), jnp.int32
     )
-    col = Collector(spec, params, calls_base=base)
+    col = Collector(spec, params, calls_base=base, fused=fused)
     _stack().append(col)
     try:
         yield col
@@ -416,7 +476,8 @@ def capture(fn: Callable, calls_base=None):
                 return out, None
             return fn(*args, **kwargs), None
         base = calls_base if calls_base is not None else parent.total_calls()
-        child = Collector(parent.spec, parent.params, calls_base=base)
+        child = Collector(parent.spec, parent.params, calls_base=base,
+                          fused=parent.fused)
         child.scope_path = list(parent.scope_path)
         _stack().append(child)
         try:

@@ -1,0 +1,12 @@
+"""Distribution / SPMD helpers: logical-axis partitioning over named meshes."""
+from .partition import (  # noqa: F401
+    DEFAULT_RULES,
+    axis_size,
+    current_mesh,
+    input_sharding,
+    logical_to_pspec,
+    relaxed_pspec,
+    shard,
+    sharding_ctx,
+    tree_shardings,
+)

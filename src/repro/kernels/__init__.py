@@ -1,11 +1,19 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
-gemm       — blocked matmul, two schedules (the paper's case-study subjects)
-flash_attn — tiled online-softmax attention (long-context cells)
-ssm_scan   — chunked linear-recurrence scan (xlstm / zamba2 state updates)
+gemm         — blocked matmul, two schedules (the paper's case-study subjects)
+flash_attn   — tiled online-softmax attention (long-context cells)
+ssm_scan     — chunked linear-recurrence scan (xlstm / zamba2 state updates)
+probe_reduce — fused single-pass probe-moment reduction (monitoring hot path)
 
 ops.py is the public jit'd surface; ref.py the pure-jnp oracles the tests
 sweep against (interpret=True on CPU).
 """
-from . import ops, ref  # noqa: F401
-from .ops import flash_attention, matmul, matmul_cost, ssm_scan  # noqa: F401
+from . import ops, probe_reduce, ref  # noqa: F401
+from .ops import (  # noqa: F401
+    flash_attention,
+    matmul,
+    matmul_cost,
+    probe_moments,
+    ssm_scan,
+    tensor_moments,
+)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import flash_attn as _fa
 from . import gemm as _gemm
+from . import probe_reduce as _pr
 from . import ssm_scan as _ssm
 
 SCHEDULES = ("cache_blocked", "panel_streaming")
@@ -23,6 +24,45 @@ def _interpret(flag: bool | None) -> bool:
     if flag is not None:
         return flag
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# fused probe-moment reduction (the monitoring hot path)
+# ---------------------------------------------------------------------------
+
+# Below this many elements the grid/pad bookkeeping outweighs the fused
+# sweep; the probe path uses the jnp fallback instead.
+MIN_PALLAS_MOMENT_NUMEL = 1 << 15
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def probe_moments(x, *, block_rows: int = 256, interpret: bool | None = None):
+    """Raw probe-moment vector f32[8] (see probe_reduce.MOMENTS) of ``x``.
+
+    Single tiled pass over the tensor: interpret mode on CPU, Mosaic on TPU.
+    """
+    return _pr.moments_pallas(
+        x, block_rows=block_rows, interpret=_interpret(interpret)
+    )
+
+
+def tensor_moments(x, names, *, use_pallas: bool | None = None) -> dict:
+    """{moment: f32 scalar} for the probe path — the ONE sweep per tensor.
+
+    Policy: the Pallas kernel on TPU for large float tensors; the fused-jnp
+    fallback for tiny/oddly-shaped/non-float tensors and on CPU, where
+    interpret-mode Pallas would be a correctness tool, not a fast path.
+    """
+    if use_pallas is None:
+        use_pallas = (
+            jax.default_backend() == "tpu"
+            and jnp.issubdtype(x.dtype, jnp.floating)
+            and x.size >= MIN_PALLAS_MOMENT_NUMEL
+        )
+    if use_pallas:
+        vec = probe_moments(x)
+        return dict(zip(_pr.MOMENTS, vec))
+    return _pr.named_moments_jnp(x, names)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,130 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed here).
+
+Registered by conftest.py into sys.modules only when the real library is
+missing.  Implements just the surface the test-suite uses — ``@given`` over
+``strategies.{integers, sampled_from, text, lists, composite}`` plus a
+no-op ``settings`` — drawing examples from a fixed-seed PRNG so runs are
+reproducible.  Shrinking, databases and the rest of hypothesis are out of
+scope: on failure you simply see the drawn arguments in the traceback.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self._gen = gen
+
+    def example(self, rng: random.Random):
+        return self._gen(rng)
+
+    def filter(self, pred, _tries: int = 100):
+        def gen(r):
+            for _ in range(_tries):
+                v = self._gen(r)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+
+        return _Strategy(gen)
+
+    def map(self, fn):
+        return _Strategy(lambda r: fn(self._gen(r)))
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def text(alphabet=None, min_size=0, max_size=10):
+    def gen(r):
+        n = r.randint(min_size, max_size)
+        if isinstance(alphabet, _Strategy):
+            chars = [alphabet.example(r) for _ in range(n)]
+        elif alphabet:
+            chars = [r.choice(list(alphabet)) for _ in range(n)]
+        else:
+            chars = [chr(r.randint(97, 122)) for _ in range(n)]
+        return "".join(chars)
+
+    return _Strategy(gen)
+
+
+def lists(elements, min_size=0, max_size=10, unique=False):
+    def gen(r):
+        n = r.randint(min_size, max_size)
+        out, tries = [], 0
+        while len(out) < n and tries < 50 * (n + 1):
+            v = elements.example(r)
+            tries += 1
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+    return _Strategy(gen)
+
+
+def composite(fn):
+    def builder(*args, **kwargs):
+        def gen(r):
+            return fn((lambda s: s.example(r)), *args, **kwargs)
+
+        return _Strategy(gen)
+
+    return builder
+
+
+def given(*strats, **kwstrats):
+    def deco(fn):
+        def wrapper():
+            rng = random.Random(1234)
+            n = getattr(wrapper, "_max_examples", 10)
+            for _ in range(n):
+                args = [s.example(rng) for s in strats]
+                kw = {k: s.example(rng) for k, s in kwstrats.items()}
+                fn(*args, **kw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = 10, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def build_modules() -> tuple[types.ModuleType, types.ModuleType]:
+    """(hypothesis, hypothesis.strategies) module objects for sys.modules."""
+    st = types.ModuleType("hypothesis.strategies")
+    for f in (integers, sampled_from, floats, booleans, text, lists,
+              composite):
+        setattr(st, f.__name__, f)
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__stub__ = True
+    return hyp, st

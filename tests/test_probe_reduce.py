@@ -1,0 +1,181 @@
+"""Fused probe reductions: Pallas moment kernel vs jnp reference, and
+fused vs legacy event evaluation through a real collecting() region."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as scalpel
+from repro.core import events
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.core.counters import CounterState, MonitorParams
+from repro.kernels import ops, probe_reduce as pr
+
+MOMENT_EVENTS = (
+    "ACT_RMS", "ACT_MEAN_ABS", "ACT_MAX_ABS", "ACT_ZERO_FRAC",
+    "NAN_COUNT", "INF_COUNT", "NUMEL", "L2NORM", "MEAN",
+)
+
+
+def test_moment_vocabulary_in_sync():
+    assert pr.MOMENTS == events.MOMENTS
+
+
+# ---------------------------------------------------------------------------
+# stage 1: the kernel vs the unfused jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (1024,),          # 1-D, tile-aligned
+    (1000,),          # 1-D, non-tile-aligned
+    (64, 129),        # 2-D, ragged lanes
+    (7, 33, 65),      # 3-D, nothing aligned
+    (1, 1),           # degenerate
+])
+def test_pallas_moments_match_reference(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**32)
+    x = rng.normal(size=shape).astype(np.float32)
+    x.flat[:: max(1, x.size // 17)] = 0.0  # some exact zeros
+    xj = jnp.asarray(x).astype(dtype)
+    got = np.asarray(ops.probe_moments(xj, block_rows=8, interpret=True))
+    want = np.asarray(pr.moments_ref(xj))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+    # numel is exact (static constant, never a rounded f32 accumulation);
+    # zero_count doubles as the mask check — zero padding would inflate it
+    assert got[pr.M_NUMEL] == x.size
+    assert got[pr.M_ZERO] == want[pr.M_ZERO]
+
+
+def test_pallas_moments_nan_inf_propagation():
+    a = np.array([np.nan, 1.5, np.inf, -np.inf, 0.0] * 64, np.float32)
+    got = np.asarray(ops.probe_moments(jnp.asarray(a), block_rows=1,
+                                       interpret=True))
+    want = np.asarray(pr.moments_ref(jnp.asarray(a)))
+    np.testing.assert_allclose(got, want, equal_nan=True)
+    assert got[pr.M_NAN] == 64 and got[pr.M_INF] == 128
+
+
+def test_named_moments_jnp_subset_matches_reference():
+    x = jax.random.normal(jax.random.PRNGKey(3), (513,))
+    ref = pr.moments_ref(x)
+    d = ops.tensor_moments(x, ("sum_sq", "max_abs", "zero_count"),
+                           use_pallas=False)
+    for name in ("sum_sq", "max_abs", "zero_count", "numel"):
+        np.testing.assert_allclose(
+            float(d[name]), float(ref[pr.MOMENTS.index(name)]), rtol=1e-5
+        )
+    assert "sum_abs" not in d  # only the union that was asked for
+
+
+# ---------------------------------------------------------------------------
+# stage 2: finalizers reproduce every moment-derived event
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", MOMENT_EVENTS)
+def test_finalizer_matches_direct_event(name):
+    x = jax.random.normal(jax.random.PRNGKey(7), (37, 11))
+    x = x.at[0, 0].set(0.0)
+    spec = EventSpec(name, tensor="x")
+    assert events.moment_based(spec)
+    moms = ops.tensor_moments(x, events.required_moments([spec]),
+                              use_pallas=False)
+    got = float(events.finalize_event(spec, moms))
+    want = float(events.compute(spec, {"x": x}))
+    assert got == pytest.approx(want, rel=1e-5, abs=1e-7)
+
+
+def test_bespoke_events_not_moment_based():
+    for name in ("ATTN_ENTROPY", "MOE_LOAD", "SSM_STATE_RMS"):
+        assert not events.moment_based(EventSpec(name))
+
+
+# ---------------------------------------------------------------------------
+# end to end: fused vs legacy under a real collecting() region
+# ---------------------------------------------------------------------------
+
+def _run(spec, params, prog, *args, fused):
+    state = CounterState.zeros(spec)
+    with scalpel.collecting(spec, params, state, fused=fused) as col:
+        prog(*args)
+    return state.add(col.delta)
+
+
+def test_fused_equals_legacy_exhaustive_scope():
+    slots = [EventSpec(e, "x") for e in MOMENT_EVENTS]
+    spec = MonitorSpec.of([ScopeContext.exhaustive("f", slots)])
+    params = MonitorParams.all_on(spec)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 33))
+    x = x.at[0, 0].set(0.0).at[1, 1].set(jnp.inf)
+
+    def prog(x):
+        for i in range(4):
+            with scalpel.function("f"):
+                scalpel.probe(x=x * (i + 1))
+
+    a = _run(spec, params, prog, x, fused=True)
+    b = _run(spec, params, prog, x, fused=False)
+    np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.samples),
+                                  np.asarray(b.samples))
+
+
+def test_fused_equals_legacy_multiplexed_mixed_events():
+    """Moment-derived and bespoke slots interleaved across event sets."""
+    spec = MonitorSpec.of([
+        ScopeContext.multiplexed("g", [
+            [EventSpec("ACT_RMS", "y"), EventSpec("ACT_MAX_ABS", "y")],
+            [EventSpec("ATTN_ENTROPY", "p"), EventSpec("MEAN", "y")],
+        ], period=2),
+    ])
+    params = MonitorParams.all_on(spec)
+    y = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (8, 16)), -1)
+
+    def prog(y, p):
+        for _ in range(7):
+            with scalpel.function("g"):
+                scalpel.probe(y=y, p=p)
+
+    a = _run(spec, params, prog, y, p, fused=True)
+    b = _run(spec, params, prog, y, p, fused=False)
+    np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.samples),
+                                  np.asarray(b.samples))
+
+
+def test_fused_equals_legacy_under_jit_and_masks():
+    slots = [EventSpec(e, "x") for e in ("ACT_RMS", "ACT_ZERO_FRAC",
+                                         "NAN_COUNT")]
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive("hot", slots),
+        ScopeContext.exhaustive("cold", slots),
+    ])
+    params = MonitorParams.selective(spec, ["hot"]).set_slot(
+        spec, "hot", "ACT_ZERO_FRAC:x", False
+    )
+    x = jax.random.normal(jax.random.PRNGKey(5), (256,))
+
+    def make(fused):
+        def step(x, s, mp):
+            with scalpel.collecting(spec, mp, s, fused=fused) as col:
+                with scalpel.function("hot"):
+                    scalpel.probe(x=x)
+                with scalpel.function("cold"):
+                    scalpel.probe(x=x * 2)
+            return s.add(col.delta)
+
+        return jax.jit(step)
+
+    s0 = CounterState.zeros(spec)
+    a = make(True)(x, s0, params)
+    b = make(False)(x, s0, params)
+    np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.samples),
+                                  np.asarray(b.samples))
+    # masked slot stayed dark, un-monitored scope stayed dark
+    assert int(a.samples[0, 1]) == 0
+    assert not np.any(np.asarray(a.values[1]))
