@@ -18,7 +18,6 @@ live tensors.  The multiplex period is the paper's 100 calls.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

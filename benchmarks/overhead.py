@@ -24,8 +24,17 @@ Workloads mirror the paper's two axes:
     mode, up to 1024 in full mode — the unrolled 6-event graphs there cost
     minutes of XLA CPU compile): a small function called k times per step,
     probing the motivation's six activation statistics.
+
+Additionally, a readback-stall sweep (``run_readback_sweep``) measures the
+cost of CONSUMING counters: a synchronous full-CounterState ``device_get``
+every ``hook_every`` steps (the pre-telemetry runtime) vs the telemetry
+plane's device-side snapshot ring drained by a background thread, across
+``hook_every`` and ring-depth settings, with an allclose check that drained
+counters equal synchronous snapshots.
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +42,7 @@ import numpy as np
 
 from repro import core as scalpel
 from repro.configs import model_config
+from repro.core import telemetry as telemetry_lib
 from repro.core.backends import host_callback as hc
 from repro.core.context import EventSpec, MonitorSpec, ScopeContext
 from repro.core.counters import CounterState, MonitorParams
@@ -304,6 +314,140 @@ def run_callcount_sweep(counts=(64, 256, 512), iters: int = 7,
     return rows
 
 
+def run_readback_sweep(hook_everys=(1, 4), depths=(4, 16), steps: int = 32,
+                       rounds: int = 3, k: int = 16, probe_size: int = 4096):
+    """Readback-stall sweep (telemetry plane): synchronous full-CounterState
+    ``device_get`` every ``hook_every`` steps vs an in-graph snapshot-ring
+    append drained by the background telemetry thread.
+
+    ``readback_sync`` is what the pre-telemetry runtime paid per report/adapt
+    decision; ``readback_ring`` is the async plane.  The ring rows also check
+    that the drained cumulative counters are allclose to the synchronous
+    snapshot at the same step.
+    """
+    slots = [EventSpec(e, "x") for e in PROBE_EVENTS]
+    spec = MonitorSpec.of([ScopeContext.exhaustive("hot", slots)])
+    mp = MonitorParams.all_on(spec)
+    x0 = jnp.ones((probe_size,))
+
+    def work(x):
+        for _ in range(k):
+            with scalpel.function("hot"):
+                x = x * 1.0001 + 0.1
+                scalpel.probe(x=x)
+        return x
+
+    def step_sync(x, s, mp):
+        with scalpel.collecting(spec, mp, s) as col:
+            y = work(x)
+        return y, s.add(col.delta)
+
+    def step_ring(x, s, ring, step, mp, tp):
+        with scalpel.collecting(spec, mp, s) as col:
+            y = work(x)
+        s2 = s.add(col.delta)
+        step = step + 1  # stamp carried on device: no per-step host traffic
+        return y, s2, telemetry_lib.ring_append(ring, s2, tp, step), step
+
+    f_sync = jax.jit(step_sync)
+    f_ring = jax.jit(step_ring)
+
+    rows = []
+    for he in hook_everys:
+
+        def run_sync():
+            x, s = x0, CounterState.zeros(spec)
+            for i in range(1, steps + 1):
+                x, s = f_sync(x, s, mp)
+                if i % he == 0:
+                    s_host = jax.tree.map(jax.device_get, s)  # the stall
+            jax.block_until_ready(x)
+            return s_host
+
+        sync_state = run_sync()  # warmup (compile) + reference counters
+        ts = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            run_sync()
+            ts.append(time.perf_counter() - t0)
+        sync_ms = min(ts) * 1e3
+        rows.append({
+            "workload": f"readback he={he}", "case": "readback_sync",
+            "hook_every": he, "ring_depth": 0, "steps": steps,
+            "min_ms": round(sync_ms, 3),
+            "per_step_us": round(1e3 * sync_ms / steps, 3),
+        })
+
+        for depth in depths:
+            plane = telemetry_lib.TelemetryPlane(
+                spec, depth=depth, cadence=he, interval_s=0.002,
+            )
+            drained = []
+            plane.add_sink(
+                telemetry_lib.CallbackSink(lambda s: drained.append(s.step))
+            )
+
+            def run_ring():
+                x, s = x0, CounterState.zeros(spec)
+                ring = plane.make_ring()
+                i = jnp.zeros((), jnp.int32)
+                for _ in range(steps):
+                    x, s, ring, i = f_ring(x, s, ring, i, mp, plane.params)
+                    plane.publish(ring)  # ref swap; drain is off-thread
+                jax.block_until_ready(x)
+                return s
+
+            run_ring()  # warmup (compile per ring depth)
+            ts = []
+            for _ in range(rounds):
+                t0 = time.perf_counter()
+                run_ring()
+                ts.append(time.perf_counter() - t0)
+            ring_ms = min(ts) * 1e3
+            plane.flush()
+            last = plane.last_state
+            ok = last is not None and bool(
+                np.allclose(np.asarray(last.values),
+                            np.asarray(sync_state.values),
+                            rtol=1e-5, atol=1e-7)
+                and np.array_equal(np.asarray(last.calls),
+                                   np.asarray(sync_state.calls))
+            )
+            plane.close()
+            rows.append({
+                "workload": f"readback he={he}", "case": "readback_ring",
+                "hook_every": he, "ring_depth": depth, "steps": steps,
+                "min_ms": round(ring_ms, 3),
+                "per_step_us": round(1e3 * ring_ms / steps, 3),
+                "sync_min_ms": round(sync_ms, 3),
+                "readback_gain_pct": round(
+                    100.0 * (sync_ms - ring_ms) / sync_ms, 1),
+                "readback_allclose": ok,
+                "snapshots_drained": len(drained),
+                "snapshots_dropped": plane.dropped_snapshots,
+            })
+    return rows
+
+
+def _readback_summary(rows: list[dict]) -> dict:
+    """Aggregate sync-vs-ring verdicts for the trajectory JSON."""
+    ring = [r for r in rows if r.get("case") == "readback_ring"]
+    at1 = [r for r in ring if r.get("hook_every") == 1]
+    return {
+        "compared": len(ring),
+        "ring_faster": sum(
+            1 for r in ring if r["min_ms"] < r["sync_min_ms"]
+        ),
+        "ring_faster_at_hook1": bool(at1) and all(
+            r["min_ms"] < r["sync_min_ms"] for r in at1
+        ),
+        "allclose_all": all(r.get("readback_allclose", False) for r in ring),
+        "max_gain_pct": max(
+            (r["readback_gain_pct"] for r in ring), default=None
+        ),
+    }
+
+
 def _fused_summary(rows: list[dict]) -> dict:
     """Aggregate fused-vs-legacy verdicts for the trajectory JSON."""
     compared = [r for r in rows if "legacy_min_ms" in r]
@@ -336,6 +480,12 @@ def main(fast: bool = False):
         counts=(64, 256) if fast else (64, 256, 1024),
         iters=5 if fast else 7,
     )
+    rows += run_readback_sweep(
+        hook_everys=(1, 4) if fast else (1, 2, 8),
+        depths=(4, 16),
+        steps=24 if fast else 32,
+        rounds=2 if fast else 3,
+    )
     save_json("overhead.json", rows, sub="bench")
     print(fmt_table(
         rows,
@@ -344,24 +494,40 @@ def main(fast: bool = False):
         title="ScALPEL overhead: vanilla / selective / all / perfmon, "
               "fused vs legacy probes (paper Figs. 2-3)",
     ))
-    # the paper's hierarchy, asserted softly
+    print(fmt_table(
+        [r for r in rows if str(r.get("case", "")).startswith("readback_")],
+        ["workload", "case", "hook_every", "ring_depth", "min_ms",
+         "per_step_us", "readback_gain_pct", "readback_allclose",
+         "snapshots_drained", "snapshots_dropped"],
+        title="Readback stall: sync CounterState device_get vs telemetry "
+              "ring + background drain",
+    ))
+    # the paper's hierarchy, asserted softly (readback rows have no perfmon)
     by = {}
     for r in rows:
         by.setdefault(r["workload"], {})[r["case"]] = r["min_ms"]
+    hier = {w: c for w, c in by.items() if "perfmon" in c}
     ok = sum(
-        1 for w, c in by.items()
+        1 for w, c in hier.items()
         if c["perfmon"] >= max(c["selective"], c["all"]) * 0.9
     )
     fused = _fused_summary(rows)
-    print(f"\nhierarchy check: perfmon slowest in {ok}/{len(by)} workloads")
+    readback = _readback_summary(rows)
+    print(f"\nhierarchy check: perfmon slowest in {ok}/{len(hier)} workloads")
     print(
         f"fused vs legacy: faster in {fused['fused_faster']}/"
         f"{fused['compared']} comparisons "
         f"(sweep {fused['sweep_fused_faster']}/{fused['sweep_compared']}); "
         f"values allclose: {fused['values_allclose_all']}"
     )
+    print(
+        f"readback: ring faster in {readback['ring_faster']}/"
+        f"{readback['compared']} configs "
+        f"(strict at hook_every=1: {readback['ring_faster_at_hook1']}); "
+        f"drained counters allclose: {readback['allclose_all']}"
+    )
     return {
-        "schema": "scalpel-overhead-v2",
+        "schema": "scalpel-overhead-v3",
         "backend": jax.default_backend(),
         "probe_events": list(PROBE_EVENTS),
         "rows": rows,
@@ -371,6 +537,7 @@ def main(fast: bool = False):
             for w, cs in by.items() if cs.get("vanilla")
         },
         "fused_vs_legacy": fused,
+        "readback": readback,
         "hierarchy_ok": ok,
     }
 

@@ -19,7 +19,7 @@ import glob
 import json
 import os
 
-from repro.configs import ARCH_IDS, load as load_cfg, model_config
+from repro.configs import ARCH_IDS, model_config
 from repro.models import SHAPES
 from repro.models.params import is_spec
 from repro.models.registry import Arch

@@ -28,7 +28,8 @@ def _write_overhead_json(payload: dict) -> None:
     with open(OVERHEAD_JSON, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"\nwrote {OVERHEAD_JSON} "
-          f"(fused_vs_legacy: {payload.get('fused_vs_legacy')})")
+          f"(fused_vs_legacy: {payload.get('fused_vs_legacy')}; "
+          f"readback: {payload.get('readback')})")
 
 
 def main() -> int:

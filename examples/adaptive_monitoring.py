@@ -1,13 +1,19 @@
 """Adaptive monitoring (paper §3.3 + C5): config-file driven contexts,
-SIGUSR1 hot-reload mid-training, call-count multiplexing, and an adaptive
-hook that reacts to live counters.
+SIGUSR1 hot-reload mid-training, call-count multiplexing, and adaptive
+hooks that react to live counters.
+
+Hooks run on *drained telemetry snapshots*: the jitted train step appends
+counters to a device-side ring at the runtime cadence, a background thread
+drains and delta-decodes them, and the hook fires on the drain thread —
+the step loop never stalls for monitoring.  The hook below also closes the
+adaptive loop on the telemetry plane itself, retuning the ring cadence
+(``runtime.telemetry.set_cadence`` — a dynamic-input swap, no re-trace)
+once the monitored statistics settle.
 
     PYTHONPATH=src python examples/adaptive_monitoring.py
 """
 import os
 import signal
-
-import jax
 
 from repro import core as scalpel
 from repro.configs import model_config
@@ -63,15 +69,21 @@ def main():
         f.write(CONFIG_PHASE1)
 
     phase_log = []
+    drained_log = []
 
     def hook(runtime, reports):
-        """Adaptive logic on live counters (paper C5: runtime decisions)."""
+        """Adaptive logic on drained snapshots (paper C5: runtime decisions).
+
+        Runs on the telemetry drain thread with the ring snapshot's reports —
+        the train step that produced these counters has long since returned.
+        """
         est = {r.scope: {s.slot_id: s.estimate for s in r.slots}
                for r in reports}
         g = est.get("grads", {}).get("MEAN:gnorm")
         if g is not None:
-            phase_log.append(f"step-hook: grad-norm estimate {g:.3f} "
-                             f"(reloads so far: {runtime.reload_count})")
+            phase_log.append(f"drained-hook: grad-norm estimate {g:.3f} "
+                             f"(reloads so far: {runtime.reload_count}, "
+                             f"cadence: {runtime.telemetry.cadence})")
         # after the first hook, hot-swap the config via SIGUSR1 — exactly
         # the paper's 'new configuration file may be loaded at any time by
         # sending a signal to the application'
@@ -79,7 +91,21 @@ def main():
             with open(cfg_path, "w") as f:
                 f.write(CONFIG_PHASE2)
             os.kill(os.getpid(), signal.SIGUSR1)
+        elif len(drained_log) >= 2 and runtime.telemetry.cadence < 8:
+            # adaptive telemetry: once phase-2 statistics are flowing,
+            # monitoring has told us what we need — back the ring-append
+            # cadence off (a dynamic-input swap: the step never re-traces)
+            runtime.telemetry.set_cadence(8)
+            phase_log.append("adaptive: relaxed telemetry cadence to 8")
 
+    def on_snapshot(snap):
+        """Raw-sink view of the same plane: per-snapshot delta decoding."""
+        drained_log.append(
+            f"snapshot seq={snap.seq} step={snap.step} "
+            f"delta-calls={int(snap.delta.calls.sum())}"
+        )
+
+    scalpel.ScalpelRuntime._example_sink = on_snapshot
     out = fit(
         arch,
         OptConfig(lr=1e-3, warmup_steps=5),
@@ -92,7 +118,11 @@ def main():
     # install_signal is off by default in fit(); emulate the signal path:
     # (the runtime object exposes reload() which the handler calls)
     print("\n".join(phase_log))
+    print("\n".join(drained_log))
     print(f"\nconfig reloads during run: {rt.reload_count}")
+    print(f"final telemetry cadence: {rt.telemetry.cadence} "
+          f"(ring writes drained: {len(drained_log)}, "
+          f"dropped: {rt.telemetry.dropped_snapshots})")
     print(rt.report("final report (phase-2 contexts, multiplexed)"))
     est = rt.estimates()
     attn = next((s for s in est if s.endswith("attn")), None)
@@ -101,13 +131,17 @@ def main():
 
 
 if __name__ == "__main__":
-    # fit() builds its own runtime; install the SIGUSR1 handler globally by
-    # monkeypatching ScalpelRuntime defaults for this example
+    # fit() builds its own runtime; install the SIGUSR1 handler globally
+    # (and this example's raw snapshot sink) by monkeypatching
+    # ScalpelRuntime defaults for this example
     orig = scalpel.ScalpelRuntime.__init__
 
     def patched(self, *a, **kw):
         kw["install_signal"] = True
         orig(self, *a, **kw)
+        sink_fn = getattr(scalpel.ScalpelRuntime, "_example_sink", None)
+        if sink_fn is not None:
+            self.telemetry.add_sink(scalpel.CallbackSink(sink_fn))
 
     scalpel.ScalpelRuntime.__init__ = patched
     try:

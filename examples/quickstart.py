@@ -7,7 +7,6 @@
 3. Pick a runtime subset + events; run; read the per-scope report.
 """
 import jax
-import jax.numpy as jnp
 
 from repro import core as scalpel
 from repro.configs import model_config

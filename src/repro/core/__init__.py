@@ -42,5 +42,23 @@ from .instrument import (  # noqa: F401
     scan_with_counters,
     spec_from_discovery,
 )
-from .report import build, estimates, format_text, to_json, write_jsonl  # noqa: F401
+from .report import (  # noqa: F401
+    JsonlWriter,
+    build,
+    estimates,
+    format_text,
+    to_json,
+    write_jsonl,
+)
 from .runtime import ScalpelRuntime  # noqa: F401
+from .telemetry import (  # noqa: F401
+    CallbackSink,
+    JsonlSink,
+    Sink,
+    SnapshotRing,
+    TelemetryParams,
+    TelemetryPlane,
+    TelemetrySnapshot,
+    TextSink,
+    ring_append,
+)

@@ -304,7 +304,6 @@ class HloModule:
                 full = 1
                 for d in kd:
                     full *= d
-                od = _first_shape_dims(op.out_type) or [1]
                 # divide by output-feature dim (last of kernel by default)
                 k_elems = full / max(1, kd[-1])
         return 2.0 * out_elems * k_elems

@@ -51,6 +51,19 @@ class CounterState:
             samples=self.samples + other.samples,
         )
 
+    def sub(self, other: "CounterState") -> "CounterState":
+        """Delta-decode: counters accumulated since ``other`` (elementwise).
+
+        Works on device arrays and on host numpy trees alike — the telemetry
+        plane uses it to turn consecutive cumulative ring snapshots into
+        per-interval increments.
+        """
+        return CounterState(
+            calls=self.calls - other.calls,
+            values=self.values - other.values,
+            samples=self.samples - other.samples,
+        )
+
     def psum(self, axis_names) -> "CounterState":
         """Cross-shard reduction (the paper's 'MPI support')."""
         return CounterState(

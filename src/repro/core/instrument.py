@@ -30,7 +30,6 @@ When no collector is active every call here is a no-op: an uninstrumented
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 import threading
 from typing import Any, Callable, Sequence
 
@@ -42,6 +41,18 @@ from .context import EventSpec, MonitorSpec, ScopeContext
 from .counters import CounterState, MonitorParams
 
 _TLS = threading.local()
+_KOPS = None
+
+
+def _kernel_ops():
+    """repro.kernels.ops, resolved once (imported lazily: kernels are an
+    optional heavyweight import and must not load at repro.core import
+    time), then cached so the per-probe trace path skips the module lookup.
+    """
+    global _KOPS
+    if _KOPS is None:
+        from repro.kernels import ops as _KOPS  # noqa: N811
+    return _KOPS
 
 
 def _stack() -> list:
@@ -226,8 +237,7 @@ class Collector:
             # ONE sweep per probed tensor, shared by every moment-derived
             # slot in every event set (evaluated only when the scope mask is
             # on — un-monitored scopes never touch the tensor).
-            from repro.kernels import ops as _kops
-
+            _kops = _kernel_ops()
             moms = {t: _kops.tensor_moments(ts[t], mom) for t, mom in
                     needed.items()}
             if ctx.n_sets == 1:

@@ -92,10 +92,24 @@ def to_json(reports: list[ScopeReport]) -> str:
                       default=enc)
 
 
-def write_jsonl(path: str, step: int, reports: list[ScopeReport]) -> None:
-    with open(path, "a") as f:
+class JsonlWriter:
+    """Buffered JSONL report writer: one open handle, amortized writes.
+
+    ``write_jsonl``'s open-per-call made the report path part of the step
+    loop's critical path; the telemetry plane's JsonlSink keeps one of these
+    on the drain thread instead.  Lines are buffered until ``buffer_lines``
+    accumulate (0 = write through), flushed on ``flush()``/``close()``.
+    """
+
+    def __init__(self, path: str, buffer_lines: int = 64):
+        self.path = path
+        self.buffer_lines = max(0, int(buffer_lines))
+        self._buf: list[str] = []
+        self._f = open(path, "a")
+
+    def write(self, step: int, reports: list[ScopeReport]) -> None:
         for r in reports:
-            f.write(
+            self._buf.append(
                 json.dumps(
                     {
                         "step": step,
@@ -104,8 +118,39 @@ def write_jsonl(path: str, step: int, reports: list[ScopeReport]) -> None:
                         "slots": [dataclasses.asdict(s) for s in r.slots],
                     }
                 )
-                + "\n"
             )
+        if len(self._buf) > self.buffer_lines:
+            self._drain()
+
+    def _drain(self) -> None:
+        if self._buf:
+            self._f.write("\n".join(self._buf) + "\n")
+            self._buf.clear()
+
+    def flush(self) -> None:
+        if self._f.closed:
+            return
+        self._drain()
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self.flush()
+            self._f.close()
+
+    def __enter__(self) -> "JsonlWriter":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+def write_jsonl(path: str, step: int, reports: list[ScopeReport]) -> None:
+    """One-shot convenience (opens/closes the file per call); prefer
+    ``JsonlWriter``/``telemetry.JsonlSink`` anywhere near a hot path."""
+    with JsonlWriter(path, buffer_lines=0) as w:
+        w.write(step, reports)
 
 
 def estimates(spec: MonitorSpec, state: CounterState) -> dict[str, dict[str, float]]:

@@ -1,19 +1,26 @@
 """ScALPEL runtime — config reload via SIGUSR1, async counter access,
-adaptive hooks (paper §3.3 + C5).
+adaptive hooks (paper §3.3 + C5), now pull-based on the telemetry plane.
 
-The runtime owns the live (MonitorSpec, MonitorParams, CounterState) triple.
-The jitted step receives ``params`` and the carried ``state`` as ordinary
-inputs, so everything the runtime mutates is swap-in-place between steps —
-never a re-trace.
+The runtime owns the live (MonitorSpec, MonitorParams, CounterState) triple
+plus a ``TelemetryPlane`` (telemetry.py).  The jitted step receives
+``params`` (and optionally ``telemetry.params`` + a carried ``SnapshotRing``)
+as ordinary inputs, so everything the runtime mutates is swap-in-place
+between steps — never a re-trace.
 
 * ``SIGUSR1`` (or ``reload()``) re-reads the config file and rebuilds the
   masks/periods — the paper's "a new configuration file may be loaded at any
   time by sending a signal to the application".
-* ``snapshot()`` gives asynchronous host access to the counters (C5).
+* ``on_step(state[, ring])`` records the step WITHOUT host synchronization:
+  it swaps the state reference and either publishes the carried ring or
+  dispatches a device-side ring append.  All device→host transfers happen on
+  the plane's background drain thread.
 * ``add_hook(fn)`` registers an adaptive callback ``fn(runtime, reports)``
-  invoked every ``hook_every`` steps — the mechanism the paper motivates for
-  "runtime decisions based on performance characteristics" (we use it for
-  straggler detection and NaN tripwires in train/loop.py).
+  that now runs on *drained snapshots* (a CallbackSink on the drain thread)
+  instead of stalling the step loop — the mechanism the paper motivates for
+  "runtime decisions based on performance characteristics" (straggler
+  detection and NaN tripwires in train/loop.py).
+* ``snapshot()``/``report()`` remain synchronous conveniences: they flush
+  the ring (so sinks and hooks catch up) and read the current state.
 * at exit (or ``report()``) counters are written to stdout, the paper's
   default sink.
 """
@@ -27,7 +34,7 @@ from typing import Callable
 
 import jax
 
-from . import config_file, report as report_lib
+from . import config_file, report as report_lib, telemetry as telemetry_lib
 from .context import MonitorSpec
 from .counters import CounterState, MonitorParams
 
@@ -42,18 +49,27 @@ class ScalpelRuntime:
         report_at_exit: bool = False,
         jsonl_path: str | None = None,
         hook_every: int = 1,
+        ring_depth: int = 8,
+        sinks: tuple = (),
+        drain_interval_s: float = 0.01,
     ):
         self.spec = spec
         self._lock = threading.Lock()
         self.config_path = config_path
         self.jsonl_path = jsonl_path
-        self.hook_every = max(1, hook_every)
         self._hooks: list[Callable] = []
         self._step = 0
         self.state = CounterState.zeros(spec)
         self.reload_count = 0
         self.last_reload_errors: list[str] = []
         self._wall: dict[str, float] = {}
+
+        self.telemetry = telemetry_lib.TelemetryPlane(
+            spec, depth=ring_depth, cadence=max(1, hook_every),
+            sinks=sinks, interval_s=drain_interval_s,
+        )
+        if jsonl_path:
+            self.telemetry.add_sink(telemetry_lib.JsonlSink(jsonl_path))
 
         if params is not None:
             self.params = params
@@ -74,7 +90,7 @@ class ScalpelRuntime:
         self.last_reload_errors = missing
         return params
 
-    def _on_sigusr1(self, signum, frame):  # pragma: no cover - signal path
+    def _on_sigusr1(self, signum, frame):
         del signum, frame
         self.reload()
 
@@ -92,20 +108,46 @@ class ScalpelRuntime:
         with self._lock:
             self.params = params
 
+    # -- telemetry cadence (dynamic — swapping it never re-traces) --------
+    @property
+    def hook_every(self) -> int:
+        return self.telemetry.cadence
+
+    @hook_every.setter
+    def hook_every(self, n: int) -> None:
+        self.telemetry.set_cadence(max(1, int(n)))
+
     # -- step bookkeeping ---------------------------------------------------
-    def on_step(self, new_state: CounterState) -> None:
-        """Called by the training/serving loop with the step's carried state."""
+    def on_step(self, new_state: CounterState,
+                ring: telemetry_lib.SnapshotRing | None = None) -> None:
+        """Record a step's carried state — no host synchronization.
+
+        ``ring``: the loop-carried SnapshotRing if the jitted step appends
+        in-graph (train/loop.py, serve/engine.py); its buffers are handed to
+        the drain thread, so the ring argument must never be donated.
+        Without one, a device-side append is dispatched against a
+        plane-owned ring (host-driven mode).
+        """
         self.state = new_state
         self._step += 1
-        if self._hooks and self._step % self.hook_every == 0:
-            reports = self.snapshot()
-            for h in list(self._hooks):
-                h(self, reports)
-        if self.jsonl_path and self._step % self.hook_every == 0:
-            report_lib.write_jsonl(self.jsonl_path, self._step, self.snapshot())
+        if ring is not None:
+            self.telemetry.publish(ring)
+        else:
+            self.telemetry.append(new_state, step=self._step)
+
+    def observe(self, state: CounterState) -> None:
+        """Update the live state reference without ticking telemetry (used
+        by consumers that accumulate counters outside on_step cadence)."""
+        self.state = state
 
     # -- async access (C5) --------------------------------------------------
-    def snapshot(self) -> list[report_lib.ScopeReport]:
+    def flush(self) -> list[telemetry_lib.TelemetrySnapshot]:
+        """Drain every pending ring slot through the sinks, synchronously."""
+        return self.telemetry.flush()
+
+    def snapshot(self, flush: bool = True) -> list[report_lib.ScopeReport]:
+        if flush:
+            self.flush()
         state = jax.tree.map(jax.device_get, self.state)
         return report_lib.build(self.spec, state)
 
@@ -114,7 +156,21 @@ class ScalpelRuntime:
         return report_lib.estimates(self.spec, state)
 
     def add_hook(self, fn: Callable) -> None:
+        """Register ``fn(runtime, reports)`` to run on drained snapshots."""
+        if not self._hooks:
+            self.telemetry.add_sink(
+                telemetry_lib.CallbackSink(self._dispatch_hooks)
+            )
         self._hooks.append(fn)
+
+    def _dispatch_hooks(self, snap: telemetry_lib.TelemetrySnapshot) -> None:
+        reports = snap.reports
+        for fn in list(self._hooks):
+            fn(self, reports)
+
+    def close(self) -> None:
+        """Stop the drain thread and flush/close every sink."""
+        self.telemetry.close()
 
     # -- host-side wall-clock context (host_time backend feed) --------------
     def time_block(self, name: str):

@@ -1,0 +1,467 @@
+"""Asynchronous telemetry plane — decouple counter collection from consumption.
+
+The paper's runtime pays a synchronous full-``CounterState`` device→host
+transfer every time a report/adapt decision is made (the "host readback
+cadence" cost in ROADMAP's probe cost model).  Production monitoring stacks
+split measurement from collection with an agent/transport/collector design
+(LIKWID Monitoring Stack, PerSyst); this module brings that split to the
+jitted hot path:
+
+* **Device side** — ``SnapshotRing``: ``[depth, ...]`` copies of the counter
+  pytree plus a step stamp, written by a ``lax.cond``-guarded
+  ``ring_append`` at a runtime-configurable cadence.  The cadence lives in
+  ``TelemetryParams`` — a dynamic input to the jitted step (MonitorParams
+  style), so changing it never re-traces.  Appends are pure device work: the
+  step loop never blocks on the ring.
+
+* **Host side** — ``TelemetryPlane``: a background drain thread pulls ring
+  slots with non-blocking transfers (``copy_to_host_async`` then a
+  ``device_get`` on the *drain* thread, never the step loop), delta-decodes
+  consecutive snapshots, and fans each one out to pluggable ``Sink``s
+  (stdout text, buffered JSONL, in-process callbacks — the mechanism behind
+  ``ScalpelRuntime.add_hook``).
+
+Two integration modes:
+
+* carried ring — the jitted step threads a ``SnapshotRing`` through its
+  carry (``ring_append`` in-graph) and the loop hands the fresh ring to
+  ``plane.publish``; the ring argument must NOT be donated so the drain
+  thread can read the previous buffers while the next step runs.
+* host-driven — ``plane.append(counters)`` dispatches a tiny jitted append
+  against a plane-owned ring (what ``ScalpelRuntime.on_step`` uses when the
+  caller does not carry a ring).
+"""
+from __future__ import annotations
+
+import atexit
+import dataclasses
+import sys
+import threading
+import weakref
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import report as report_lib
+from .context import MonitorSpec
+from .counters import CounterState
+
+Array = Any
+
+
+# ---------------------------------------------------------------------------
+# Device side: snapshot ring + dynamic telemetry params
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TelemetryParams:
+    """Runtime-mutable telemetry knobs (dynamic jit inputs — no re-trace).
+
+    cadence  scalar i32 — ring-append every ``cadence`` steps; 0 disables.
+    """
+
+    cadence: Array
+
+    @staticmethod
+    def of(cadence: int) -> "TelemetryParams":
+        return TelemetryParams(cadence=jnp.asarray(max(0, int(cadence)),
+                                                   jnp.int32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SnapshotRing:
+    """Device-side ring of CounterState snapshots + step stamps.
+
+    steps    [depth]                    i32 — step stamp per slot (-1 empty)
+    calls    [depth, n_scopes]          i32
+    values   [depth, n_scopes, slots]   f32
+    samples  [depth, n_scopes, slots]   i32
+    head     scalar i32 — total writes ever (monotonic; slot = seq % depth)
+    """
+
+    steps: Array
+    calls: Array
+    values: Array
+    samples: Array
+    head: Array
+
+    @staticmethod
+    def zeros(spec: MonitorSpec, depth: int = 8) -> "SnapshotRing":
+        d, n, m = int(depth), spec.n_scopes, spec.max_slots
+        if d < 1:
+            raise ValueError(f"ring depth must be >= 1, got {depth}")
+        return SnapshotRing(
+            steps=jnp.full((d,), -1, jnp.int32),
+            calls=jnp.zeros((d, n), jnp.int32),
+            values=jnp.zeros((d, n, m), jnp.float32),
+            samples=jnp.zeros((d, n, m), jnp.int32),
+            head=jnp.zeros((), jnp.int32),
+        )
+
+    @property
+    def depth(self) -> int:
+        return int(self.steps.shape[0])
+
+    def slot_state(self, slot: int) -> CounterState:
+        """The CounterState stored in ring slot ``slot`` (host or device)."""
+        return CounterState(
+            calls=self.calls[slot],
+            values=self.values[slot],
+            samples=self.samples[slot],
+        )
+
+
+def ring_append(ring: SnapshotRing, counters: CounterState,
+                tparams: TelemetryParams, step) -> SnapshotRing:
+    """``lax.cond``-guarded ring append — pure device work, jit/scan safe.
+
+    Writes a snapshot of ``counters`` stamped ``step`` when ``step`` is a
+    multiple of the (dynamic) cadence; otherwise a no-op.  ``step`` is a
+    traced i32 scalar (e.g. ``tstate.step + 1``), so neither the cadence nor
+    the step value ever re-traces the caller.
+    """
+    step = jnp.asarray(step, jnp.int32)
+    cadence = jnp.maximum(tparams.cadence, 1)
+    do = (tparams.cadence > 0) & (step % cadence == 0)
+
+    def write(r: SnapshotRing) -> SnapshotRing:
+        slot = r.head % r.steps.shape[0]
+        return SnapshotRing(
+            steps=jax.lax.dynamic_update_index_in_dim(
+                r.steps, step, slot, 0),
+            calls=jax.lax.dynamic_update_index_in_dim(
+                r.calls, counters.calls, slot, 0),
+            values=jax.lax.dynamic_update_index_in_dim(
+                r.values, counters.values, slot, 0),
+            samples=jax.lax.dynamic_update_index_in_dim(
+                r.samples, counters.samples, slot, 0),
+            head=r.head + 1,
+        )
+
+    return jax.lax.cond(do, write, lambda r: r, ring)
+
+
+# ---------------------------------------------------------------------------
+# Host side: snapshots and sinks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TelemetrySnapshot:
+    """One drained ring slot, delta-decoded against its predecessor.
+
+    state/delta are host (numpy) CounterStates: ``state`` is the cumulative
+    counters at ``step``; ``delta`` is the increment since the previously
+    drained snapshot (== ``state`` for the first one).
+    """
+
+    step: int
+    seq: int                    # monotonic ring sequence number
+    state: CounterState
+    delta: CounterState
+    spec: MonitorSpec
+
+    def __post_init__(self):
+        self._reports: list | None = None
+
+    @property
+    def reports(self) -> list[report_lib.ScopeReport]:
+        """Cumulative per-scope reports (built lazily, cached)."""
+        if self._reports is None:
+            self._reports = report_lib.build(self.spec, self.state)
+        return self._reports
+
+    @property
+    def delta_reports(self) -> list[report_lib.ScopeReport]:
+        return report_lib.build(self.spec, self.delta)
+
+
+class Sink:
+    """Pluggable consumer of drained snapshots (emit on the drain thread)."""
+
+    def emit(self, snap: TelemetrySnapshot) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        self.flush()
+
+
+class TextSink(Sink):
+    """Paper's default sink — human-readable text, one block per snapshot."""
+
+    def __init__(self, stream=None, title: str = "ScALPEL telemetry"):
+        self.stream = stream
+        self.title = title
+
+    def emit(self, snap: TelemetrySnapshot) -> None:
+        out = self.stream or sys.stdout
+        text = report_lib.format_text(
+            snap.reports, title=f"{self.title} @ step {snap.step}"
+        )
+        print(text, file=out)
+
+
+class JsonlSink(Sink):
+    """Buffered JSONL sink — one open file handle, writes off the hot path
+    (replaces ``report_lib.write_jsonl``'s per-call ``open()``)."""
+
+    def __init__(self, path: str, buffer_lines: int = 64):
+        self._writer = report_lib.JsonlWriter(path, buffer_lines=buffer_lines)
+
+    def emit(self, snap: TelemetrySnapshot) -> None:
+        self._writer.write(snap.step, snap.reports)
+
+    def flush(self) -> None:
+        self._writer.flush()
+
+    def close(self) -> None:
+        self._writer.close()
+
+
+class CallbackSink(Sink):
+    """In-process adaptive hook: ``fn(snapshot)`` per drained snapshot."""
+
+    def __init__(self, fn: Callable[[TelemetrySnapshot], None]):
+        self.fn = fn
+
+    def emit(self, snap: TelemetrySnapshot) -> None:
+        self.fn(snap)
+
+
+# ---------------------------------------------------------------------------
+# The plane: background drain + fan-out
+# ---------------------------------------------------------------------------
+
+_PLANES: "weakref.WeakSet[TelemetryPlane]" = weakref.WeakSet()
+_ATEXIT_INSTALLED = False
+
+
+def _close_all_planes() -> None:  # pragma: no cover - atexit path
+    for p in list(_PLANES):
+        try:
+            p.close()
+        except Exception:
+            pass
+
+
+class TelemetryPlane:
+    """Owns the telemetry cadence, the drain thread, and the sink fan-out.
+
+    The step loop only ever (a) dispatches a device-side ring append and
+    (b) swaps a ring reference into the plane — no host synchronization.
+    The drain thread performs every device→host transfer.
+    """
+
+    def __init__(self, spec: MonitorSpec, depth: int = 8, cadence: int = 1,
+                 sinks: tuple = (), interval_s: float = 0.02):
+        self.spec = spec
+        self.depth = max(1, int(depth))
+        self.interval_s = float(interval_s)
+        self.sinks: list[Sink] = list(sinks)
+        self._cadence = max(0, int(cadence))
+        self.params = TelemetryParams.of(self._cadence)
+
+        self._ring: SnapshotRing | None = None      # latest published ring
+        self._own_ring: SnapshotRing | None = None  # host-driven mode
+        self._append_fn = jax.jit(ring_append)
+        self._appends = 0
+
+        self._drained_head = 0
+        self._prev_state: CounterState | None = None  # last drained (host)
+        self._last_step = -1
+        self.dropped_snapshots = 0
+        self.drain_count = 0
+
+        self._lock = threading.Lock()          # ring ref + counters
+        # RLock: a hook/sink may call runtime.report()/flush() from inside
+        # its own emit (on the drain thread) — the re-entrant drain sees an
+        # up-to-date cursor and returns empty instead of deadlocking.
+        self._drain_lock = threading.RLock()   # serializes drains
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._closed = False
+
+        global _ATEXIT_INSTALLED
+        _PLANES.add(self)
+        if not _ATEXIT_INSTALLED:
+            atexit.register(_close_all_planes)
+            _ATEXIT_INSTALLED = True
+
+    # -- configuration ----------------------------------------------------
+    @property
+    def cadence(self) -> int:
+        return self._cadence
+
+    def set_cadence(self, cadence: int) -> None:
+        """Swap the ring-append cadence — a dynamic-input swap, no re-trace."""
+        self._cadence = max(0, int(cadence))
+        self.params = TelemetryParams.of(self._cadence)
+
+    def add_sink(self, sink: Sink) -> Sink:
+        self.sinks.append(sink)
+        return sink
+
+    def make_ring(self) -> SnapshotRing:
+        """A fresh device ring for loops that carry it through their step.
+
+        Starts a new ring *epoch*: pending slots of the previously published
+        ring are drained first, then the drain cursor and delta base reset —
+        a fresh ring's ``head`` restarts at 0, so carrying the old cursor
+        over would silently stop draining.  The plane tracks one ring
+        lineage at a time; producers that need independent lineages (e.g.
+        two serve engines) should each own a runtime/plane.
+        """
+        self._drain_once()
+        with self._lock:
+            self._ring = None
+            self._own_ring = None
+            self._drained_head = 0
+            self._prev_state = None
+        return SnapshotRing.zeros(self.spec, self.depth)
+
+    # -- producer side (step loop; never blocks on device) ----------------
+    def publish(self, ring: SnapshotRing) -> None:
+        """Hand the latest carried ring to the drain thread (ref swap only).
+
+        Deliberately does NOT wake the drain thread: draining is paced by
+        ``interval_s`` (and by explicit ``flush()``), so a hot step loop
+        publishing every step never induces per-step drain work.  The ring's
+        buffers must not be donated to a later step — the drain thread reads
+        them concurrently with subsequent dispatches.
+        """
+        with self._lock:
+            self._ring = ring
+        self._ensure_thread()
+
+    def append(self, counters: CounterState, step: int | None = None) -> None:
+        """Host-driven mode: dispatch a jitted ring append (async, device)."""
+        if self._own_ring is None:
+            # outside the lock: make_ring drains (its own locks) then resets
+            ring = self.make_ring()
+            with self._lock:
+                self._own_ring = ring
+        with self._lock:
+            self._appends += 1
+            stamp = self._appends if step is None else int(step)
+            self._own_ring = self._append_fn(
+                self._own_ring, counters, self.params,
+                jnp.asarray(stamp, jnp.int32),
+            )
+            self._ring = self._own_ring
+        self._ensure_thread()
+
+    # -- consumer side ----------------------------------------------------
+    @property
+    def last_state(self) -> CounterState | None:
+        """Most recently drained cumulative CounterState (host numpy)."""
+        return self._prev_state
+
+    @property
+    def last_step(self) -> int:
+        return self._last_step
+
+    def flush(self) -> list[TelemetrySnapshot]:
+        """Synchronously drain every pending ring slot and flush sinks."""
+        snaps = self._drain_once()
+        for s in list(self.sinks):
+            s.flush()
+        return snaps
+
+    def close(self) -> None:
+        """Stop the drain thread, flush remaining slots, close sinks."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        self._wake.set()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout=5.0)
+        self._drain_once()
+        for s in list(self.sinks):
+            try:
+                s.close()
+            except Exception:
+                pass
+
+    # -- drain machinery ---------------------------------------------------
+    def _ensure_thread(self) -> None:
+        if self._closed or (self._thread is not None and
+                            self._thread.is_alive()):
+            return
+        self._thread = threading.Thread(
+            target=self._drain_loop, name="scalpel-telemetry-drain",
+            daemon=True,
+        )
+        self._thread.start()
+
+    def _drain_loop(self) -> None:
+        while not self._stop.is_set():
+            self._wake.wait(timeout=self.interval_s)
+            self._wake.clear()
+            try:
+                self._drain_once()
+            except Exception:  # pragma: no cover - keep draining on errors
+                pass
+
+    def _drain_once(self) -> list[TelemetrySnapshot]:
+        with self._drain_lock:
+            with self._lock:
+                ring = self._ring
+            if ring is None:
+                return []
+            # Probe the scalar head first: an idle tick (nothing appended
+            # since the last drain) costs one scalar transfer, not a full
+            # depth x CounterState ring copy.
+            head = int(jax.device_get(ring.head))
+            if head < self._drained_head:
+                # a fresh ring lineage was published without make_ring():
+                # its head restarted below our cursor — start a new epoch
+                # rather than silently never draining again.
+                self._drained_head = 0
+                self._prev_state = None
+            if head <= self._drained_head:
+                return []
+            # Non-blocking device→host: start the copies, then gather on
+            # THIS (drain) thread — the step loop never waits on them.
+            try:
+                jax.tree.map(
+                    lambda x: x.copy_to_host_async()
+                    if hasattr(x, "copy_to_host_async") else None,
+                    ring,
+                )
+            except Exception:  # pragma: no cover - backend-dependent
+                pass
+            host = jax.tree.map(np.asarray, ring)
+            head = int(host.head)
+            depth = host.depth
+            first = max(self._drained_head, head - depth)
+            self.dropped_snapshots += first - self._drained_head
+            out: list[TelemetrySnapshot] = []
+            for seq in range(first, head):
+                state = host.slot_state(seq % depth)
+                prev = self._prev_state
+                delta = state if prev is None else state.sub(prev)
+                snap = TelemetrySnapshot(
+                    step=int(host.steps[seq % depth]), seq=seq,
+                    state=state, delta=delta, spec=self.spec,
+                )
+                self._prev_state = state
+                self._last_step = snap.step
+                out.append(snap)
+            self._drained_head = head
+            self.drain_count += 1
+            for snap in out:
+                for s in list(self.sinks):
+                    try:
+                        s.emit(snap)
+                    except Exception:  # pragma: no cover - sink bug guard
+                        pass
+            return out

@@ -19,7 +19,6 @@ exp() bounded.  f32 throughout (state quality matters more than bytes here).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

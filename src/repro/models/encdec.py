@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro import core as scalpel
 from repro.dist.partition import shard
 from . import layers as L
-from .params import P, stacked
+from .params import stacked
 from .spec import ModelConfig
 
 

@@ -12,7 +12,6 @@ per application site) are sequence-sharded in decode.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -211,7 +210,6 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
     # zamba's global skip uses the *current token's* embedding in decode
     x0 = x
     pos = cache["pos"]
-    n_m = n_sites * every + trailing
     m_ssm, m_conv = cache["mamba_ssm"], cache["mamba_conv"]
 
     def group(carry, inp):

@@ -6,8 +6,6 @@ O(1) in depth), with ScALPEL counters threaded through the scan carry
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +14,7 @@ from repro import core as scalpel
 from repro.dist.partition import shard
 from . import layers as L
 from . import moe as moe_lib
-from .params import P, stacked
+from .params import stacked
 from .spec import ModelConfig
 
 
@@ -107,7 +105,6 @@ def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     kvd = jnp.dtype(cfg.compute_dtype)
-    hd = cfg.resolved_head_dim
 
     def body(carry, lp):
         xx = carry

@@ -6,7 +6,6 @@ Sub-quadratic: runs the long_500k decode cell with O(1) recurrent state.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

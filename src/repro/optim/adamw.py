@@ -219,7 +219,6 @@ def apply_updates(cfg: OptConfig, state: OptState, params, grads):
         new_m = (_quant(m_f) if _is_quant(m) else m_f) if cfg.momentum else m
         return new_master, new_m, new_v
 
-    m_tree = state.m if cfg.momentum else jax.tree.map(lambda p: (), params)
     triples = jax.tree.map(
         upd, grads, masters,
         state.m if cfg.momentum else grads,  # placeholder, unused w/o momentum

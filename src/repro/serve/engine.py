@@ -5,6 +5,12 @@ slots, one prefill per batch, token-synchronous decode steps.  Decode
 counters use the same MonitorSpec machinery as training, so a serving
 deployment gets per-scope KV/attention monitoring and the same runtime
 reconfiguration (mask/period swaps between decode steps).
+
+Monitoring is asynchronous: each decode step appends its counters to a
+device-side telemetry ring in-graph (lax.cond-guarded on the runtime
+cadence) and the ring is drained by the telemetry plane's background
+thread.  The engine only synchronizes with the device for its outputs —
+prefill logits and the final sampled tokens — never for monitoring.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core as scalpel
+from repro.core import telemetry as telemetry_lib
 from repro.core.counters import CounterState
 from repro.models.registry import Arch
 
@@ -50,7 +57,14 @@ class Engine:
         self.spec = spec
         self.runtime = runtime or scalpel.ScalpelRuntime(spec)
         self.counters = CounterState.zeros(spec)
+        self.ring = self.runtime.telemetry.make_ring()
         self.step_times: list[float] = []
+        # the RNG carries across generate() calls — reseeding per call would
+        # make every generation sample identically (see generate()).
+        self._rng = jax.random.PRNGKey(cfg.seed)
+        # decode-step stamp lives on device: the token loop never ships a
+        # host scalar per step just to stamp telemetry snapshots.
+        self._decode_step = jnp.zeros((), jnp.int32)
 
         def _prefill(params, batch, mparams, counters):
             with scalpel.collecting(self.spec, mparams, counters) as col:
@@ -59,10 +73,17 @@ class Engine:
                 )
             return cache, logits, counters.add(col.delta)
 
-        def _decode(params, cache, tokens, mparams, counters):
+        def _decode(params, cache, tokens, mparams, counters, ring, tparams,
+                    step):
             with scalpel.collecting(self.spec, mparams, counters) as col:
                 logits, cache = self.arch.decode_step(params, cache, tokens)
-            return logits, cache, counters.add(col.delta)
+            counters = counters.add(col.delta)
+            # in-graph telemetry: snapshot the cumulative counters at the
+            # dynamic cadence; the ring is NOT donated (the drain thread
+            # reads previous buffers while later decode steps run).
+            step = step + 1
+            ring = telemetry_lib.ring_append(ring, counters, tparams, step)
+            return logits, cache, counters, ring, step
 
         self._jit_prefill = jax.jit(_prefill)
         self._jit_decode = jax.jit(_decode, donate_argnums=(1,))
@@ -74,38 +95,55 @@ class Engine:
         logits = logits / self.cfg.temperature
         return jax.random.categorical(rng, logits)[:, None].astype(jnp.int32)
 
-    def generate(self, batch: dict[str, Any], max_new: int | None = None):
-        """batch: {'tokens': [b, s], ...extras}. Returns [b, n_new] tokens."""
+    def generate(self, batch: dict[str, Any], max_new: int | None = None,
+                 seed: int | None = None):
+        """batch: {'tokens': [b, s], ...extras}. Returns [b, n_new] tokens.
+
+        ``seed``: per-request seed; by default the engine's RNG is split and
+        carried across calls so repeated sampled generations differ.
+        """
         max_new = max_new or self.cfg.max_new_tokens
-        rng = jax.random.PRNGKey(self.cfg.seed)
+        if seed is not None:
+            rng = jax.random.PRNGKey(seed)
+        else:
+            self._rng, rng = jax.random.split(self._rng)
         t0 = time.perf_counter()
         cache, logits, self.counters = self._jit_prefill(
             self.params, batch, self.runtime.params, self.counters
         )
-        jax.block_until_ready(logits)
+        jax.block_until_ready(logits)  # output sync: sampling needs logits
         prefill_s = time.perf_counter() - t0
         outs = []
         tok = self._sample(logits, rng)
+        t0 = time.perf_counter()
         for i in range(max_new):
             outs.append(tok)
-            t0 = time.perf_counter()
-            logits, cache, self.counters = self._jit_decode(
-                self.params, cache, tok, self.runtime.params, self.counters
+            (logits, cache, self.counters, self.ring,
+             self._decode_step) = self._jit_decode(
+                self.params, cache, tok, self.runtime.params, self.counters,
+                self.ring, self.runtime.telemetry.params, self._decode_step,
             )
-            jax.block_until_ready(logits)
-            self.step_times.append(time.perf_counter() - t0)
+            # async monitoring: swap the ring ref to the drain thread and
+            # keep decoding — no block_until_ready inside the token loop.
+            self.runtime.on_step(self.counters, ring=self.ring)
             rng, sub = jax.random.split(rng)
             tok = self._sample(logits, sub)
-        self.runtime.on_step(self.counters)
+        out = jnp.concatenate(outs, axis=1)
+        jax.block_until_ready(out)  # output sync: the sampled tokens
+        decode_s = time.perf_counter() - t0
+        per_tok = decode_s / max_new if max_new else 0.0
+        self.step_times.append(per_tok)
         return (
-            jnp.concatenate(outs, axis=1),
+            out,
             {
                 "prefill_s": prefill_s,
+                "decode_total_s": decode_s,
+                "decode_per_tok_s": per_tok,
                 "decode_p50_s": float(np.median(self.step_times))
                 if self.step_times else 0.0,
             },
         )
 
     def report(self) -> str:
-        self.runtime.state = self.counters
+        self.runtime.observe(self.counters)
         return self.runtime.report("ScALPEL serving report")

@@ -1,16 +1,22 @@
 """Training loop: data pipeline + jitted step + ScALPEL runtime + fault
 tolerance (checkpoint/restart, straggler detection via the host_time
 backend, NaN tripwire via in-graph counters).
+
+The monitored hot path is fully asynchronous: the jitted step appends its
+counters to a device-side SnapshotRing in-graph (telemetry plane), the loop
+keeps a bounded window of in-flight steps instead of blocking every step,
+and the adaptive hooks (NaN tripwire, straggler detection) run on drained
+snapshots on the telemetry drain thread — never a synchronous
+full-CounterState device→host transfer inside the step loop.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import core as scalpel
 from repro.checkpoint import CheckpointManager
@@ -33,7 +39,9 @@ class TrainLoopConfig:
     straggler_sigma: float = 3.0
     monitor_config_path: str | None = None  # ScALPEL config file (reloadable)
     jsonl_path: str | None = None
-    hook_every: int = 10
+    hook_every: int = 10       # telemetry ring-append cadence (steps)
+    ring_depth: int = 8        # device-side snapshot ring depth
+    max_in_flight: int = 2     # bounded dispatch window (steps)
 
 
 def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
@@ -49,18 +57,30 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
         config_path=loop_cfg.monitor_config_path,
         jsonl_path=loop_cfg.jsonl_path,
         hook_every=loop_cfg.hook_every,
+        ring_depth=loop_cfg.ring_depth,
     )
     timer = HostTimer()
     events: list[str] = []
 
-    # fault-tolerance hooks driven by live counters
+    # fault-tolerance hooks driven by drained telemetry snapshots (the hook
+    # runs on the drain thread — it must not touch in-flight device buffers)
+    nan_seen: set[str] = set()
+    stragglers_seen: set[int] = set()
+
     def tripwire(rt, reports):
         for r in reports:
             for s in r.slots:
-                if s.slot_id.startswith("NAN_COUNT") and s.raw > 0:
+                if (s.slot_id.startswith("NAN_COUNT") and s.raw > 0
+                        and r.scope not in nan_seen):
+                    nan_seen.add(r.scope)
                     events.append(f"NaN detected in scope {r.scope}")
-        bad = timer.outliers("train_step", loop_cfg.straggler_sigma)
+        # HostTimer.outliers re-reports the same indices every invocation;
+        # dedupe so `events` records each straggler step once.
+        bad = [i for i in timer.outliers("train_step",
+                                         loop_cfg.straggler_sigma)
+               if i not in stragglers_seen]
         if bad:
+            stragglers_seen.update(bad)
             events.append(f"straggler steps (>{loop_cfg.straggler_sigma}σ): "
                           f"{bad[-3:]}")
         if on_report is not None:
@@ -70,6 +90,8 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
 
     step_fn = make_train_step(arch, opt_cfg, spec,
                               microbatches=loop_cfg.microbatches)
+    # donate the train state only — the telemetry ring is read by the drain
+    # thread while later steps run, so its buffers must stay valid.
     jit_step = jax.jit(step_fn, donate_argnums=(0,))
 
     mgr = (CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.ckpt_keep)
@@ -87,36 +109,65 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
         start_step = int(meta["step"])
         events.append(f"restored from step {start_step}")
 
-    losses = []
+    ring = runtime.telemetry.make_ring()
+    losses: list[float] = []
+    last_logged: dict[str, float] = {}
+    max_in_flight = max(1, loop_cfg.max_in_flight)
+    inflight: collections.deque = collections.deque()
+
+    def retire(window: int) -> None:
+        """Block on steps beyond the in-flight window, oldest first."""
+        while len(inflight) > window:
+            rstep, out = inflight.popleft()
+            jax.block_until_ready(out["loss"])
+            losses.append(float(out["loss"]))
+            last_logged.update(
+                step=rstep, loss=losses[-1],
+                gnorm=float(out["grad_norm"]), lr=float(out["lr"]),
+            )
+
     it = prefetch(
         (data.batch_at(s) for s in range(start_step, loop_cfg.steps)), 2
     )
     for step, host_batch in enumerate(it, start=start_step):
         batch = shard_batch(host_batch, mesh)
         t0 = time.perf_counter()
-        tstate, out = jit_step(tstate, batch, runtime.params)
-        jax.block_until_ready(out["loss"])
+        tstate, out, ring = jit_step(tstate, batch, runtime.params,
+                                     runtime.telemetry.params, ring)
+        inflight.append((step, out))
+        # bounded in-flight dispatch: only the step leaving the window is
+        # synchronized, so device and host overlap up to max_in_flight steps
+        # (amortized, the recorded time still equals the true step time).
+        retire(max_in_flight - 1)
+        runtime.on_step(tstate.counters, ring=ring)
         timer.record("train_step", time.perf_counter() - t0)
-        runtime.on_step(tstate.counters)
-        losses.append(float(out["loss"]))
-        if loop_cfg.log_every and step % loop_cfg.log_every == 0:
-            print(f"step {step:5d} loss {losses[-1]:.4f} "
-                  f"gnorm {float(out['grad_norm']):.3f} "
-                  f"lr {float(out['lr']):.2e} "
-                  f"dt {timer.stats('train_step').mean_s*1e3:.1f}ms")
+        if loop_cfg.log_every and step % loop_cfg.log_every == 0 \
+                and last_logged:
+            # metrics belong to the most recently RETIRED step (the window
+            # lags dispatch) — label them with that step, not the current
+            print(f"step {last_logged['step']:5d} "
+                  f"loss {last_logged['loss']:.4f} "
+                  f"gnorm {last_logged['gnorm']:.3f} "
+                  f"lr {last_logged['lr']:.2e} "
+                  f"dt {timer.stats('train_step').mean_s*1e3:.1f}ms "
+                  f"(dispatched {step}, window {len(inflight)})")
         if mgr is not None and loop_cfg.ckpt_every and \
                 (step + 1) % loop_cfg.ckpt_every == 0:
+            retire(0)
             mgr.save(step + 1, tstate)
+    retire(0)
     if mgr is not None:
         mgr.save(loop_cfg.steps, tstate, block=True)
         mgr.wait()
 
+    report = runtime.report()  # flushes the ring through every sink
+    runtime.close()  # stop the drain thread; sinks are flushed + closed
     return {
         "losses": losses,
         "final_loss": losses[-1] if losses else float("nan"),
         "step_stats": timer.stats("train_step"),
         "events": events,
-        "report": runtime.report(),
+        "report": report,
         "runtime": runtime,
         "state": tstate,
         "spec": spec,

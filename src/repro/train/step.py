@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core as scalpel
+from repro.core import telemetry as telemetry_lib
 from repro.core.counters import CounterState, MonitorParams
 from repro.models.registry import Arch
 from repro.optim import OptConfig, apply_updates, global_norm, init_opt_state
@@ -79,6 +80,14 @@ def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
 
     ``counter_axes``: mesh axis names to psum counters over (multi-host
     aggregation — the paper's MPI support); None on a single device.
+
+    The step optionally carries a telemetry ``SnapshotRing``: call it as
+    ``train_step(tstate, batch, mparams, tparams, ring)`` and the step's
+    final counters are ring-appended in-graph (lax.cond-guarded on the
+    dynamic cadence in ``tparams`` — changing it never re-traces) and the
+    updated ring is returned third.  The ring argument must NOT be donated:
+    the telemetry drain thread reads the previous ring's buffers while the
+    next step runs.
     """
 
     def mb_loss(params, mb, calls_base, mparams):
@@ -93,7 +102,9 @@ def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
 
     vag = jax.value_and_grad(mb_loss, has_aux=True)
 
-    def train_step(tstate: TrainState, batch, mparams: MonitorParams):
+    def train_step(tstate: TrainState, batch, mparams: MonitorParams,
+                   tparams: telemetry_lib.TelemetryParams | None = None,
+                   ring: telemetry_lib.SnapshotRing | None = None):
         base = tstate.counters
         params = tstate.params
 
@@ -144,6 +155,11 @@ def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
             params=new_params, opt=new_opt, counters=counters,
             step=tstate.step + 1,
         )
-        return new_state, {"loss": loss, **stats}
+        out = {"loss": loss, **stats}
+        if ring is None:
+            return new_state, out
+        ring = telemetry_lib.ring_append(ring, counters, tparams,
+                                         step=new_state.step)
+        return new_state, out, ring
 
     return train_step

@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import core as scalpel
 from repro.configs import ARCH_IDS, model_config
 from repro.core.counters import MonitorParams
 from repro.models import SHAPES

@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.kernels import gemm, ops, ref
+from repro.kernels import ops, ref
 
 TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-1}
 

@@ -13,7 +13,6 @@ import numpy as np
 import pytest
 
 from repro import core as scalpel
-from repro.core import config_file as cf
 from repro.core import report as report_lib
 from repro.core.context import EventSpec, MonitorSpec, ScopeContext
 from repro.core.counters import CounterState, MonitorParams
@@ -183,12 +182,14 @@ def test_runtime_hooks_and_snapshot():
     seen = []
     rt.add_hook(lambda r, reports: seen.append(reports))
     state = _run(spec, rt.params, CounterState.zeros(spec), [1.0, 2.0])
-    rt.on_step(state)   # step 1: no hook
-    rt.on_step(state)   # step 2: hook fires
+    rt.on_step(state)   # step 1: below cadence, no ring write
+    rt.on_step(state)   # step 2: ring write -> hook on drained snapshot
+    rt.flush()          # hooks run asynchronously on the drain thread
     assert len(seen) == 1
     assert seen[0][0].scope == "f"
     est = rt.estimates()
     assert "f" in est and "g" in est
+    rt.close()
 
 
 def test_runtime_unsatisfiable_config_reported(tmp_path):

@@ -1,0 +1,443 @@
+"""Telemetry plane: device-side snapshot ring, background drain, sinks,
+and runtime reconfiguration through the plane.
+
+Covers the async-monitoring contract: ring appends are cond-guarded device
+work at a *dynamic* cadence (changing it never re-traces — asserted via
+jax.jit cache stats), drained snapshots are delta-decoded and value-equal
+to synchronous snapshots, and the drain thread flushes everything on
+shutdown.
+"""
+import json
+import os
+import signal
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as scalpel
+from repro.core import report as report_lib
+from repro.core import telemetry as T
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.core.counters import CounterState, MonitorParams
+
+
+def _spec():
+    return MonitorSpec.of([
+        ScopeContext.exhaustive("f", [EventSpec("MEAN", "x"),
+                                      EventSpec("NUMEL", "x")]),
+        ScopeContext.exhaustive("g", [EventSpec("MEAN", "x")]),
+    ])
+
+
+def _bump(cs: CounterState, v: float = 1.0) -> CounterState:
+    return CounterState(calls=cs.calls + 1, values=cs.values + v,
+                        samples=cs.samples + 1)
+
+
+def _run_steps(spec, params, state, values):
+    for v in values:
+        with scalpel.collecting(spec, params, state) as col:
+            with scalpel.function("f"):
+                scalpel.probe(x=jnp.full((4,), v))
+            with scalpel.function("g"):
+                scalpel.probe(x=jnp.full((2,), v))
+        state = state.add(col.delta)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# device side: ring semantics
+# ---------------------------------------------------------------------------
+
+def test_ring_append_cadence_and_stamp():
+    spec = _spec()
+    ring = T.SnapshotRing.zeros(spec, depth=4)
+    cs = CounterState.zeros(spec)
+    for step in range(1, 7):
+        cs = _bump(cs)
+        ring = T.ring_append(ring, cs, T.TelemetryParams.of(2), step)
+    assert int(ring.head) == 3
+    written = sorted(int(s) for s in np.asarray(ring.steps) if s >= 0)
+    assert written == [2, 4, 6]
+    # slot for step 6 holds the cumulative counters at step 6
+    slot = (int(ring.head) - 1) % ring.depth
+    assert int(ring.calls[slot][0]) == 6
+
+
+def test_ring_append_wraps_and_zero_cadence_disables():
+    spec = _spec()
+    ring = T.SnapshotRing.zeros(spec, depth=2)
+    cs = CounterState.zeros(spec)
+    for step in range(1, 6):
+        cs = _bump(cs)
+        ring = T.ring_append(ring, cs, T.TelemetryParams.of(1), step)
+    assert int(ring.head) == 5          # monotonic, beyond depth
+    assert sorted(np.asarray(ring.steps).tolist()) == [4, 5]  # last two
+    off = T.ring_append(ring, cs, T.TelemetryParams.of(0), 6)
+    assert int(off.head) == 5           # cadence 0: never writes
+
+
+def test_ring_append_cadence_is_dynamic_no_retrace():
+    """Cadence changes ride a dynamic input — the jitted append never
+    re-traces (asserted with jax.jit cache stats AND a trace counter)."""
+    spec = _spec()
+    traces = []
+
+    def append(ring, cs, tp, step):
+        traces.append(1)
+        return T.ring_append(ring, cs, tp, step)
+
+    f = jax.jit(append)
+    ring = T.SnapshotRing.zeros(spec, depth=4)
+    cs = _bump(CounterState.zeros(spec))
+    for step, cadence in enumerate([1, 1, 2, 5, 0, 3], start=1):
+        ring = f(ring, cs, T.TelemetryParams.of(cadence),
+                 jnp.asarray(step, jnp.int32))
+    assert len(traces) == 1
+    assert f._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# host side: drain, delta decode, sinks
+# ---------------------------------------------------------------------------
+
+def test_plane_drains_and_delta_decodes():
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=8, cadence=1)
+    got = []
+    plane.add_sink(T.CallbackSink(got.append))
+    cs = CounterState.zeros(spec)
+    for step in range(1, 5):
+        cs = _bump(cs, v=2.0)
+        plane.append(cs, step=step)
+    plane.flush()
+    assert [s.step for s in got] == [1, 2, 3, 4]
+    # cumulative state at step k has calls == k; delta is one step's worth
+    for k, s in enumerate(got, start=1):
+        assert int(s.state.calls[0]) == k
+        assert int(s.delta.calls[0]) == 1
+        assert float(s.delta.values[0, 0]) == pytest.approx(2.0)
+    plane.close()
+
+
+def test_plane_counts_dropped_snapshots_on_overrun():
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=2, cadence=1)
+    seen = []
+    plane.add_sink(T.CallbackSink(lambda s: seen.append(s.step)))
+    cs = CounterState.zeros(spec)
+    ring = plane.make_ring()
+    for step in range(1, 6):   # 5 appends into a depth-2 ring, no drain
+        cs = _bump(cs)
+        ring = T.ring_append(ring, cs, plane.params, step)
+    plane.publish(ring)
+    plane.flush()
+    assert seen == [4, 5]                  # only the surviving slots
+    assert plane.dropped_snapshots == 3    # the overwritten ones are counted
+    plane.close()
+
+
+def test_make_ring_starts_new_epoch():
+    """A fresh ring restarts head at 0 — make_ring() must reset the drain
+    cursor and delta base, or the plane silently stops draining (the drain
+    loop also self-heals if a restarted ring is published directly)."""
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=8, cadence=1, interval_s=60.0)
+    got = []
+    plane.add_sink(T.CallbackSink(
+        lambda s: got.append((s.step, int(s.state.calls[0]),
+                              int(s.delta.calls[0])))))
+    for _ in range(2):
+        ring = plane.make_ring()
+        cs = CounterState.zeros(spec)
+        for step in range(1, 4):
+            cs = _bump(cs)
+            ring = T.ring_append(ring, cs, plane.params, step)
+        plane.publish(ring)
+        plane.flush()
+    # the second epoch drains again, with its delta base reset (first
+    # snapshot's delta == its cumulative state, not state - old epoch)
+    assert got == [(1, 1, 1), (2, 2, 1), (3, 3, 1)] * 2
+    # self-heal: a shorter restarted ring published without make_ring()
+    ring = T.SnapshotRing.zeros(spec, plane.depth)
+    cs = _bump(CounterState.zeros(spec))
+    ring = T.ring_append(ring, cs, plane.params, 1)
+    plane.publish(ring)
+    plane.flush()
+    assert got[-1] == (1, 1, 1)
+    plane.close()
+
+
+def test_background_drain_thread_runs_without_flush():
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=8, cadence=1, interval_s=0.005)
+    done = threading.Event()
+    plane.add_sink(T.CallbackSink(lambda s: done.set()))
+    plane.append(_bump(CounterState.zeros(spec)), step=1)
+    assert done.wait(timeout=5.0), "drain thread never delivered snapshot"
+    plane.close()
+
+
+def test_jsonl_sink_buffers_and_flushes(tmp_path):
+    spec = _spec()
+    path = str(tmp_path / "t.jsonl")
+    plane = T.TelemetryPlane(spec, depth=8, cadence=1)
+    plane.add_sink(T.JsonlSink(path, buffer_lines=10_000))
+    state = _run_steps(spec, MonitorParams.all_on(spec),
+                       CounterState.zeros(spec), [1.0, 2.0])
+    plane.append(state, step=1)
+    plane.flush()  # buffered writer must hit the disk on flush
+    lines = [json.loads(x) for x in open(path).read().splitlines()]
+    assert {ln["scope"] for ln in lines} == {"f", "g"}
+    assert all(ln["step"] == 1 for ln in lines)
+    plane.close()
+
+
+def test_plane_close_flushes_pending(tmp_path):
+    """Shutdown semantics: close() drains un-drained slots + closes sinks."""
+    spec = _spec()
+    path = str(tmp_path / "t.jsonl")
+    plane = T.TelemetryPlane(spec, depth=8, cadence=1, interval_s=60.0)
+    plane.add_sink(T.JsonlSink(path, buffer_lines=10_000))
+    cs = _bump(CounterState.zeros(spec))
+    plane.append(cs, step=1)
+    plane.close()   # no explicit flush: close must deliver + write
+    lines = open(path).read().splitlines()
+    assert lines and json.loads(lines[0])["step"] == 1
+    # close is idempotent and further flushes are harmless
+    plane.close()
+    assert plane.flush() == []
+
+
+def test_text_sink_prints_reports(capsys):
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=4, cadence=1)
+    plane.add_sink(T.TextSink(title="probe"))
+    state = _run_steps(spec, MonitorParams.all_on(spec),
+                       CounterState.zeros(spec), [3.0])
+    plane.append(state, step=9)
+    plane.flush()
+    out = capsys.readouterr().out
+    assert "probe @ step 9" in out and "MEAN:x" in out
+    plane.close()
+
+
+# ---------------------------------------------------------------------------
+# runtime reconfiguration through the plane
+# ---------------------------------------------------------------------------
+
+CONFIG_A = """
+BINARY=test
+NO_FUNCTIONS=1
+[FUNCTION]
+FUNC_NAME=f
+NO_EVENTS=0
+[/FUNCTION]
+"""
+
+CONFIG_B = """
+BINARY=test
+NO_FUNCTIONS=1
+[FUNCTION]
+FUNC_NAME=g
+NO_EVENTS=0
+[/FUNCTION]
+"""
+
+
+def test_runtime_reload_and_cadence_swap_never_retrace(tmp_path):
+    """Config reload() AND telemetry cadence changes are dynamic-input
+    swaps: one trace, one jit cache entry, across both reconfigurations."""
+    spec = _spec()
+    cfgp = tmp_path / "mon.cfg"
+    cfgp.write_text(CONFIG_A)
+    rt = scalpel.ScalpelRuntime(spec, config_path=str(cfgp), hook_every=1)
+    traces = []
+
+    def step(state, mparams, tparams, ring, step_no):
+        traces.append(1)
+        with scalpel.collecting(spec, mparams, state) as col:
+            with scalpel.function("f"):
+                scalpel.probe(x=jnp.ones(3))
+            with scalpel.function("g"):
+                scalpel.probe(x=jnp.ones(3))
+        new = state.add(col.delta)
+        return new, T.ring_append(ring, new, tparams, step_no)
+
+    f = jax.jit(step)
+    s = CounterState.zeros(spec)
+    ring = rt.telemetry.make_ring()
+    for i in range(1, 3):
+        s, ring = f(s, rt.params, rt.telemetry.params, ring,
+                    jnp.asarray(i, jnp.int32))
+    cfgp.write_text(CONFIG_B)
+    rt.reload()                      # mask swap
+    rt.hook_every = 3                # cadence swap through the plane
+    assert rt.telemetry.cadence == 3
+    for i in range(3, 7):
+        s, ring = f(s, rt.params, rt.telemetry.params, ring,
+                    jnp.asarray(i, jnp.int32))
+    assert len(traces) == 1
+    assert f._cache_size() == 1
+    # ring reflects the live cadence: steps 1,2 at cadence 1, then 3,6
+    rt.telemetry.publish(ring)
+    snaps = rt.flush()
+    assert [sn.step for sn in snaps] == [1, 2, 3, 6]
+    rt.close()
+
+
+def test_runtime_sigusr1_direct_handler_call(tmp_path):
+    """The SIGUSR1 path, exercised by invoking the installed handler
+    directly (what the OS would do on os.kill)."""
+    spec = _spec()
+    cfgp = tmp_path / "mon.cfg"
+    cfgp.write_text(CONFIG_A)
+    rt = scalpel.ScalpelRuntime(spec, config_path=str(cfgp),
+                                install_signal=True)
+    try:
+        cfgp.write_text(CONFIG_B)
+        handler = signal.getsignal(signal.SIGUSR1)
+        assert callable(handler)
+        handler(signal.SIGUSR1, None)   # direct call — no process signal
+        assert rt.reload_count == 1
+        assert float(rt.params.scope_mask[spec.scope_index("g")]) == 1.0
+        # and the real-signal path still works on top of it
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert rt.reload_count == 2
+    finally:
+        signal.signal(signal.SIGUSR1, signal.SIG_DFL)
+        rt.close()
+
+
+def test_runtime_hooks_run_on_drained_snapshots():
+    spec = _spec()
+    rt = scalpel.ScalpelRuntime(spec, hook_every=2)
+    seen = []
+    rt.add_hook(lambda r, reports: seen.append(reports))
+    state = _run_steps(spec, rt.params, CounterState.zeros(spec), [1.0, 2.0])
+    rt.on_step(state)   # step 1: below cadence, no ring write
+    rt.on_step(state)   # step 2: ring write
+    rt.flush()
+    assert len(seen) == 1
+    assert {r.scope for r in seen[0]} == {"f", "g"}
+    rt.close()
+
+
+def test_hook_may_reenter_flush_without_deadlock():
+    """A hook that calls runtime.report()/snapshot() (which flush, hence
+    re-enter the drain) must not deadlock on the drain lock."""
+    spec = _spec()
+    rt = scalpel.ScalpelRuntime(spec, hook_every=1)
+    texts = []
+    rt.add_hook(lambda r, reports: texts.append(r.report()))
+    state = _run_steps(spec, rt.params, CounterState.zeros(spec), [1.0])
+    rt.on_step(state)
+    done = threading.Event()
+
+    def _flush():
+        rt.flush()
+        done.set()
+
+    t = threading.Thread(target=_flush, daemon=True)
+    t.start()
+    assert done.wait(timeout=20.0), "flush deadlocked on re-entrant hook"
+    assert texts and "ScALPEL report" in texts[0]
+    rt.close()
+
+
+def test_drained_reports_value_equal_to_sync_snapshot():
+    """Acceptance: ring-drained reports == synchronous snapshots (allclose),
+    driven through the real jitted train step."""
+    from repro.configs import model_config
+    from repro.data import DataConfig, SyntheticLM
+    from repro.models.registry import Arch
+    from repro.optim import OptConfig
+    from repro.train.step import TrainState, build_monitor_spec, \
+        make_train_step
+
+    arch = Arch(model_config("xlstm_125m", smoke=True))
+    data = SyntheticLM(DataConfig(vocab=512, seq_len=32, global_batch=4))
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    spec = build_monitor_spec(arch, batch)
+    rt = scalpel.ScalpelRuntime(spec, hook_every=1, ring_depth=8)
+    step_fn = make_train_step(arch, OptConfig(lr=1e-3, warmup_steps=0), spec)
+    jit_step = jax.jit(step_fn)   # no donation: we compare states below
+    tstate = TrainState.create(arch, OptConfig(lr=1e-3, warmup_steps=0),
+                               spec, jax.random.PRNGKey(0))
+    ring = rt.telemetry.make_ring()
+    drained = {}
+    rt.telemetry.add_sink(T.CallbackSink(lambda s: drained.setdefault(
+        s.step, s)))
+    sync_states = []
+    for _ in range(3):
+        tstate, out, ring = jit_step(tstate, batch, rt.params,
+                                     rt.telemetry.params, ring)
+        rt.on_step(tstate.counters, ring=ring)
+        sync_states.append(jax.tree.map(jax.device_get, tstate.counters))
+    rt.flush()
+    assert sorted(drained) == [1, 2, 3]
+    for k, sync in enumerate(sync_states, start=1):
+        ring_state = drained[k].state
+        np.testing.assert_allclose(np.asarray(ring_state.values),
+                                   np.asarray(sync.values),
+                                   rtol=1e-6, atol=1e-8)
+        np.testing.assert_array_equal(np.asarray(ring_state.calls),
+                                      np.asarray(sync.calls))
+        np.testing.assert_array_equal(np.asarray(ring_state.samples),
+                                      np.asarray(sync.samples))
+        # drained reports match reports built from the sync snapshot
+        a = report_lib.estimates(spec, ring_state)
+        b = report_lib.estimates(spec, sync)
+        for scope in b:
+            for slot, v in b[scope].items():
+                np.testing.assert_allclose(a[scope][slot], v, rtol=1e-6,
+                                           equal_nan=True)
+    rt.close()
+
+
+def test_jsonl_writer_single_open_buffered(tmp_path):
+    p = str(tmp_path / "w.jsonl")
+    spec = _spec()
+    state = _run_steps(spec, MonitorParams.all_on(spec),
+                       CounterState.zeros(spec), [1.0])
+    reports = report_lib.build(spec, state)
+    with report_lib.JsonlWriter(p, buffer_lines=10_000) as w:
+        w.write(1, reports)
+        w.write(2, reports)
+        assert open(p).read() == ""     # buffered: nothing on disk yet
+        w.flush()
+        n = len(open(p).read().splitlines())
+        assert n == 2 * len(reports)
+        w.write(3, reports)
+    # context exit closes (and flushes the tail)
+    assert len(open(p).read().splitlines()) == 3 * len(reports)
+
+
+def test_counterstate_sub_delta():
+    spec = _spec()
+    a = _bump(_bump(CounterState.zeros(spec), 2.0), 3.0)
+    b = _bump(CounterState.zeros(spec), 2.0)
+    d = a.sub(b)
+    assert int(d.calls[0]) == 1
+    assert float(d.values[0, 0]) == pytest.approx(3.0)
+
+
+def test_plane_hot_loop_never_blocks_long():
+    """publish() is a ref swap: a burst of publishes returns quickly even
+    with a slow sink on the drain side."""
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=4, cadence=1)
+    plane.add_sink(T.CallbackSink(lambda s: time.sleep(0.05)))
+    cs = _bump(CounterState.zeros(spec))
+    ring = plane.make_ring()
+    ring = T.ring_append(ring, cs, plane.params, 1)
+    jax.block_until_ready(ring.head)
+    t0 = time.perf_counter()
+    for _ in range(50):
+        plane.publish(ring)
+    assert time.perf_counter() - t0 < 1.0
+    plane.close()

@@ -4,8 +4,6 @@ The restart test is the fault-tolerance contract: kill after step k, resume
 from the checkpoint, and the final state must be IDENTICAL to an
 uninterrupted run (deterministic data pipeline + exact counter carry).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
