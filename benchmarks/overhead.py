@@ -10,12 +10,14 @@ Reproduction mapping (DESIGN.md §2):
   selective  — collector whose compile-time set contains ONLY the monitored
                scope
 
-Both collector cases additionally run in two probe-evaluation modes:
-  fused (default)    — one moment sweep per probed tensor + batched scatter
-                       (kernels/probe_reduce.py, events.py stage 1/2)
-  *_legacy           — one reduction per event, per-slot scatter chains
-so every workload records a fused-vs-legacy comparison column and checks the
-two paths produce allclose event values.
+Probe evaluation is plan-driven (core/plan.py): every (scope, event set)
+executes its compiled MomentPlan — exactly the channels that set finalizes
+from, swept once per probed tensor.  A dedicated sparse-active-set sweep
+(``run_plan_sweep``) measures the point of the plan layer: a multiplexed
+scope whose every set needs a strict SUBSET of the union of channels, run
+once with per-set plans and once with the ``plan_mode="union"`` baseline
+(the pre-plan behaviour: each branch sweeps the cross-set union), with an
+allclose check that both accumulate identical counters.
 
 Workloads mirror the paper's two axes:
   * real apps (reduced NAS stand-ins): smoke configs of a dense, an SSM and
@@ -28,9 +30,10 @@ Workloads mirror the paper's two axes:
 Additionally, a readback-stall sweep (``run_readback_sweep``) measures the
 cost of CONSUMING counters: a synchronous full-CounterState ``device_get``
 every ``hook_every`` steps (the pre-telemetry runtime) vs the telemetry
-plane's device-side snapshot ring drained by a background thread, across
-``hook_every`` and ring-depth settings, with an allclose check that drained
-counters equal synchronous snapshots.
+plane's device-side snapshot ring drained incrementally (cursor-based slot
+copies) by a background thread, across ``hook_every`` and ring-depth
+settings, with an allclose check that drained counters equal synchronous
+snapshots.
 """
 from __future__ import annotations
 
@@ -42,6 +45,7 @@ import numpy as np
 
 from repro import core as scalpel
 from repro.configs import model_config
+from repro.core import plan as plan_lib
 from repro.core import telemetry as telemetry_lib
 from repro.core.backends import host_callback as hc
 from repro.core.context import EventSpec, MonitorSpec, ScopeContext
@@ -52,16 +56,13 @@ from repro.train.step import build_monitor_spec
 from .common import bench, fmt_table, save_json
 
 # The motivation's six per-tensor statistics — all moment-derived, so the
-# fused path reads each probed tensor exactly once for all of them.
+# planned path reads each probed tensor exactly once for all of them.
 PROBE_EVENTS = (
     "ACT_RMS", "ACT_MEAN_ABS", "ACT_MAX_ABS", "ACT_ZERO_FRAC",
     "NAN_COUNT", "INF_COUNT",
 )
 
-# monitored cases and their legacy (unfused) twins
-LEGACY_OF = {"selective": "selective_legacy", "all": "all_legacy"}
-CASE_ORDER = ("vanilla", "selective", "selective_legacy", "all",
-              "all_legacy", "perfmon")
+CASE_ORDER = ("vanilla", "selective", "all", "perfmon")
 
 
 # ---------------------------------------------------------------------------
@@ -78,7 +79,7 @@ def build_cases(loss_fn, params, batch, spec_all: MonitorSpec,
                 monitored_scope: str):
     """Returns {case: builder}; builder() -> (fn, monitor).  Monitored-case
     ``fn`` returns a tuple whose LAST element is the accumulated
-    CounterState (used for the fused-vs-legacy allclose check)."""
+    CounterState."""
     grad = jax.grad(lambda p, b: loss_fn(p, b))
 
     def vanilla():
@@ -97,9 +98,9 @@ def build_cases(loss_fn, params, batch, spec_all: MonitorSpec,
             # keep ctx open through first real call:
             return (lambda: f(params, batch)), mon
 
-    def collector_case(spec_case, mp, fused):
+    def collector_case(spec_case, mp):
         def step(p, b, state, mp):
-            with scalpel.collecting(spec_case, mp, state, fused=fused) as col:
+            with scalpel.collecting(spec_case, mp, state) as col:
                 l = loss_fn(p, b)
                 g = jax.grad(lambda pp: loss_fn(pp, b))(p)
             return l, g, state.add(col.delta)
@@ -108,58 +109,21 @@ def build_cases(loss_fn, params, batch, spec_all: MonitorSpec,
         s0 = CounterState.zeros(spec_case)
         return (lambda: f(params, batch, s0, mp)), None
 
-    def all_case(fused=True):
+    def all_case():
         mp = MonitorParams.selective(spec_all, [monitored_scope])
-        return collector_case(spec_all, mp, fused)
+        return collector_case(spec_all, mp)
 
-    def selective(fused=True):
+    def selective():
         ctx = spec_all.context(monitored_scope)
         spec_sel = MonitorSpec.of([ctx])
-        return collector_case(spec_sel, MonitorParams.all_on(spec_sel), fused)
+        return collector_case(spec_sel, MonitorParams.all_on(spec_sel))
 
     return {
         "vanilla": vanilla,
         "perfmon": perfmon,
         "all": all_case,
-        "all_legacy": lambda: all_case(fused=False),
         "selective": selective,
-        "selective_legacy": lambda: selective(fused=False),
     }
-
-
-def _values_allclose(fn_fused, fn_legacy) -> bool:
-    """Do the fused and legacy probe paths accumulate the same counters?"""
-    sf = fn_fused()[-1]
-    sl = fn_legacy()[-1]
-    return bool(
-        np.allclose(np.asarray(sf.values), np.asarray(sl.values),
-                    rtol=1e-4, atol=1e-6, equal_nan=True)
-        and np.array_equal(np.asarray(sf.samples), np.asarray(sl.samples))
-    )
-
-
-def _annotate_fused_rows(rows: list[dict]) -> None:
-    """Attach the fused-vs-legacy comparison columns, per workload."""
-    by = {}
-    for r in rows:
-        by.setdefault(r["workload"], {})[r["case"]] = r
-    for cases in by.values():
-        base = cases.get("vanilla", {}).get("min_ms", 0.0)
-        for fused_case, legacy_case in LEGACY_OF.items():
-            rf, rl = cases.get(fused_case), cases.get(legacy_case)
-            if rf is None or rl is None:
-                continue
-            over_f = rf["min_ms"] - base
-            over_l = rl["min_ms"] - base
-            rf["legacy_min_ms"] = rl["min_ms"]
-            # gain on the overhead (the quantity the paper plots); when host
-            # noise pushes EITHER overhead non-positive the percentage is
-            # meaningless — record null, not a fake number, and let the raw
-            # min_ms columns speak.
-            rf["fused_gain_pct"] = (
-                round(100.0 * (over_l - over_f) / over_l, 1)
-                if over_l > 0 and over_f > 0 else None
-            )
 
 
 def run_arch_workloads(arch_ids=("qwen3_14b", "xlstm_125m", "dbrx_132b"),
@@ -213,12 +177,6 @@ def run_arch_workloads(arch_ids=("qwen3_14b", "xlstm_125m", "dbrx_132b"),
                 "bp_calls": sum(hc.global_monitor().calls.values())
                 if case == "perfmon" else 0,
             })
-        for fused_case, legacy_case in LEGACY_OF.items():
-            ok = _values_allclose(built[fused_case], built[legacy_case])
-            next(r for r in rows
-                 if r["workload"] == aid and r["case"] == fused_case
-                 )["values_allclose"] = ok
-    _annotate_fused_rows(rows)
     return rows
 
 
@@ -227,8 +185,7 @@ def run_callcount_sweep(counts=(64, 256, 512), iters: int = 7,
     """Fig. 3's axis: overhead vs number of function calls per run.
 
     Every case is measured ``rounds`` times round-robin (min taken) so a
-    transient load spike on the host doesn't poison one case's timing —
-    the fused-vs-legacy comparison is a strict inequality check.
+    transient load spike on the host doesn't poison one case's timing.
     """
     rows = []
     for k in counts:
@@ -257,14 +214,14 @@ def run_callcount_sweep(counts=(64, 256, 512), iters: int = 7,
 
         x0 = jnp.ones((probe_size,))
 
-        def monitored(sp, fused):
+        def monitored(sp):
             mp = MonitorParams.selective(sp, ["hot"])
             s0 = CounterState.zeros(sp)
 
             work = fresh_work()
 
-            def step(x, s, mp, sp=sp, fused=fused, work=work):
-                with scalpel.collecting(sp, mp, s, fused=fused) as col:
+            def step(x, s, mp, sp=sp, work=work):
+                with scalpel.collecting(sp, mp, s) as col:
                     y = work(x)
                 return y, s.add(col.delta)
 
@@ -285,8 +242,7 @@ def run_callcount_sweep(counts=(64, 256, 512), iters: int = 7,
                     f.lower(x0)
                 fn = lambda f=f: f(x0)
             else:
-                sp = spec if case.startswith("all") else spec_sel
-                fn = monitored(sp, fused=not case.endswith("_legacy"))
+                fn = monitored(spec if case == "all" else spec_sel)
             built[case] = fn
         results = {c: [] for c in CASE_ORDER}
         for _ in range(rounds):
@@ -305,13 +261,125 @@ def run_callcount_sweep(counts=(64, 256, 512), iters: int = 7,
                 "overhead_pct": round(100 * (t - base) / base, 1),
                 "per_call_us": round(1e6 * (t - base) / max(k, 1), 3),
             })
-        for fused_case, legacy_case in LEGACY_OF.items():
-            ok = _values_allclose(built[fused_case], built[legacy_case])
-            next(r for r in rows
-                 if r["workload"] == f"calls={k}" and r["case"] == fused_case
-                 )["values_allclose"] = ok
-    _annotate_fused_rows(rows)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# sparse-active-set plan sweep: per-set MomentPlans vs the union baseline
+# ---------------------------------------------------------------------------
+
+# Every multiplexed set needs a strict SUBSET of the union of channels —
+# the configuration the probe-plan compiler exists for.  Union sweep: 6
+# data channels per branch; per-set sweeps: 1 / 1 / 1 / 3 channels.
+PLAN_SETS = (
+    ("ACT_MAX_ABS:x",),
+    ("ACT_ZERO_FRAC:x",),
+    ("NAN_COUNT:x",),
+    ("ACT_RMS:x", "ACT_MEAN_ABS:x", "MEAN:x"),
+)
+
+
+def _plan_spec(period: int = 1) -> MonitorSpec:
+    sets = [[EventSpec.parse(s) for s in grp] for grp in PLAN_SETS]
+    return MonitorSpec.of([
+        ScopeContext.multiplexed("hot", sets, period=period)
+    ])
+
+
+def run_plan_sweep(probe_sizes=(1 << 14, 1 << 16), k: int = 24,
+                   iters: int = 7, rounds: int = 3):
+    """Per-set plans vs the union baseline on a sparse-active-set workload.
+
+    A scope multiplexed over PLAN_SETS is called ``k`` times per jitted
+    step; each call's active set sweeps only its own channels under
+    ``plan_mode="per_set"`` and the full cross-set union under
+    ``plan_mode="union"`` (the pre-plan hot path).  Identical schedules,
+    identical counters (asserted allclose) — only the per-branch sweep
+    width differs, which is exactly the cost the plan layer removes.
+    """
+    spec = _plan_spec()
+    ctx = spec.context("hot")
+    plans = plan_lib.compile_scope_plans(ctx, frozenset({"x"}))
+    union_plans = plan_lib.compile_scope_plans(ctx, frozenset({"x"}), True)
+    per_set_chans = [p.sweep_channel_count for p in plans.plans]
+    union_chans = [p.sweep_channel_count for p in union_plans.plans]
+
+    rows = []
+    for n in probe_sizes:
+        x0 = jnp.ones((n,)) * 1.5
+        mp = MonitorParams.all_on(spec)
+
+        def make(plan_mode):
+            def work(x):
+                for _ in range(k):
+                    with scalpel.function("hot"):
+                        x = x * 1.0001 + 0.1
+                        scalpel.probe(x=x)
+                return x
+
+            def step(x, s, mp, plan_mode=plan_mode, work=work):
+                with scalpel.collecting(spec, mp, s,
+                                        plan_mode=plan_mode) as col:
+                    y = work(x)
+                return y, s.add(col.delta)
+
+            f = jax.jit(step)
+            s0 = CounterState.zeros(spec)
+            return lambda f=f, s0=s0: f(x0, s0, mp)
+
+        built = {m: make(m) for m in ("per_set", "union")}
+        sa = built["per_set"]()[-1]
+        sb = built["union"]()[-1]
+        allclose = bool(
+            np.allclose(np.asarray(sa.values), np.asarray(sb.values),
+                        rtol=1e-4, atol=1e-6, equal_nan=True)
+            and np.array_equal(np.asarray(sa.samples),
+                               np.asarray(sb.samples))
+        )
+        results = {m: [] for m in built}
+        for _ in range(rounds):
+            for m in built:
+                results[m].append(bench(built[m], iters=iters))
+        mins = {m: min(r["min_s"] for r in results[m]) for m in built}
+        workload = f"plan n={n}"
+        rows.append({
+            "workload": workload, "case": "plan_union",
+            "min_ms": round(mins["union"] * 1e3, 3),
+            "calls": k, "probe_size": n,
+            "sweep_channels": union_chans,
+        })
+        rows.append({
+            "workload": workload, "case": "plan_per_set",
+            "min_ms": round(mins["per_set"] * 1e3, 3),
+            "calls": k, "probe_size": n,
+            "sweep_channels": per_set_chans,
+            "union_min_ms": round(mins["union"] * 1e3, 3),
+            "plan_gain_pct": round(
+                100.0 * (mins["union"] - mins["per_set"]) / mins["union"], 1
+            ),
+            "plan_allclose": allclose,
+        })
+    return rows
+
+
+def _plan_summary(rows: list[dict]) -> dict:
+    """Aggregate per-set-plan vs union verdicts for the trajectory JSON."""
+    per_set = [r for r in rows if r.get("case") == "plan_per_set"]
+    return {
+        "compared": len(per_set),
+        "per_set_faster": sum(
+            1 for r in per_set if r["min_ms"] < r["union_min_ms"]
+        ),
+        "strictly_faster": bool(per_set) and all(
+            r["min_ms"] < r["union_min_ms"] for r in per_set
+        ),
+        "allclose_all": all(
+            r.get("plan_allclose", False) for r in per_set
+        ),
+        "max_gain_pct": max(
+            (r["plan_gain_pct"] for r in per_set), default=None
+        ),
+    }
 
 
 def run_readback_sweep(hook_everys=(1, 4), depths=(4, 16), steps: int = 32,
@@ -323,7 +391,8 @@ def run_readback_sweep(hook_everys=(1, 4), depths=(4, 16), steps: int = 32,
     ``readback_sync`` is what the pre-telemetry runtime paid per report/adapt
     decision; ``readback_ring`` is the async plane.  The ring rows also check
     that the drained cumulative counters are allclose to the synchronous
-    snapshot at the same step.
+    snapshot at the same step, and record how many ring slots the
+    incremental (cursor-based) drain actually copied.
     """
     slots = [EventSpec(e, "x") for e in PROBE_EVENTS]
     spec = MonitorSpec.of([ScopeContext.exhaustive("hot", slots)])
@@ -413,6 +482,7 @@ def run_readback_sweep(hook_everys=(1, 4), depths=(4, 16), steps: int = 32,
                 and np.array_equal(np.asarray(last.calls),
                                    np.asarray(sync_state.calls))
             )
+            slots_copied = plane.slots_copied
             plane.close()
             rows.append({
                 "workload": f"readback he={he}", "case": "readback_ring",
@@ -425,6 +495,7 @@ def run_readback_sweep(hook_everys=(1, 4), depths=(4, 16), steps: int = 32,
                 "readback_allclose": ok,
                 "snapshots_drained": len(drained),
                 "snapshots_dropped": plane.dropped_snapshots,
+                "ring_slots_copied": slots_copied,
             })
     return rows
 
@@ -448,28 +519,6 @@ def _readback_summary(rows: list[dict]) -> dict:
     }
 
 
-def _fused_summary(rows: list[dict]) -> dict:
-    """Aggregate fused-vs-legacy verdicts for the trajectory JSON."""
-    compared = [r for r in rows if "legacy_min_ms" in r]
-    sweep = [r for r in compared if r["workload"].startswith("calls=")]
-    return {
-        "compared": len(compared),
-        "fused_faster": sum(
-            1 for r in compared if r["min_ms"] < r["legacy_min_ms"]
-        ),
-        "sweep_compared": len(sweep),
-        "sweep_fused_faster": sum(
-            1 for r in sweep if r["min_ms"] < r["legacy_min_ms"]
-        ),
-        "sweep_strictly_faster": bool(sweep) and all(
-            r["min_ms"] < r["legacy_min_ms"] for r in sweep
-        ),
-        "values_allclose_all": all(
-            r.get("values_allclose", True) for r in rows
-        ),
-    }
-
-
 def main(fast: bool = False):
     iters = 3 if fast else 5
     rows = run_arch_workloads(iters=iters)
@@ -479,6 +528,13 @@ def main(fast: bool = False):
     rows += run_callcount_sweep(
         counts=(64, 256) if fast else (64, 256, 1024),
         iters=5 if fast else 7,
+    )
+    rows += run_plan_sweep(
+        probe_sizes=(1 << 14, 1 << 16) if fast else (1 << 14, 1 << 16,
+                                                     1 << 18),
+        k=16 if fast else 24,
+        iters=5 if fast else 7,
+        rounds=2 if fast else 3,
     )
     rows += run_readback_sweep(
         hook_everys=(1, 4) if fast else (1, 2, 8),
@@ -490,19 +546,27 @@ def main(fast: bool = False):
     print(fmt_table(
         rows,
         ["workload", "case", "min_ms", "overhead_pct", "per_call_us",
-         "legacy_min_ms", "fused_gain_pct", "values_allclose", "bp_calls"],
-        title="ScALPEL overhead: vanilla / selective / all / perfmon, "
-              "fused vs legacy probes (paper Figs. 2-3)",
+         "bp_calls"],
+        title="ScALPEL overhead: vanilla / selective / all / perfmon "
+              "(paper Figs. 2-3)",
+    ))
+    print(fmt_table(
+        [r for r in rows if str(r.get("case", "")).startswith("plan_")],
+        ["workload", "case", "min_ms", "sweep_channels", "union_min_ms",
+         "plan_gain_pct", "plan_allclose"],
+        title="Sparse-active-set sweep: per-set MomentPlans vs union "
+              "baseline (probe-plan compiler)",
     ))
     print(fmt_table(
         [r for r in rows if str(r.get("case", "")).startswith("readback_")],
         ["workload", "case", "hook_every", "ring_depth", "min_ms",
          "per_step_us", "readback_gain_pct", "readback_allclose",
-         "snapshots_drained", "snapshots_dropped"],
+         "snapshots_drained", "ring_slots_copied"],
         title="Readback stall: sync CounterState device_get vs telemetry "
-              "ring + background drain",
+              "ring + incremental background drain",
     ))
-    # the paper's hierarchy, asserted softly (readback rows have no perfmon)
+    # the paper's hierarchy, asserted softly (plan/readback rows carry no
+    # perfmon case)
     by = {}
     for r in rows:
         by.setdefault(r["workload"], {})[r["case"]] = r["min_ms"]
@@ -511,14 +575,15 @@ def main(fast: bool = False):
         1 for w, c in hier.items()
         if c["perfmon"] >= max(c["selective"], c["all"]) * 0.9
     )
-    fused = _fused_summary(rows)
+    plans = _plan_summary(rows)
     readback = _readback_summary(rows)
     print(f"\nhierarchy check: perfmon slowest in {ok}/{len(hier)} workloads")
     print(
-        f"fused vs legacy: faster in {fused['fused_faster']}/"
-        f"{fused['compared']} comparisons "
-        f"(sweep {fused['sweep_fused_faster']}/{fused['sweep_compared']}); "
-        f"values allclose: {fused['values_allclose_all']}"
+        f"per-set plans vs union: faster in {plans['per_set_faster']}/"
+        f"{plans['compared']} configs "
+        f"(strict: {plans['strictly_faster']}, max gain "
+        f"{plans['max_gain_pct']}%); counters allclose: "
+        f"{plans['allclose_all']}"
     )
     print(
         f"readback: ring faster in {readback['ring_faster']}/"
@@ -527,16 +592,18 @@ def main(fast: bool = False):
         f"drained counters allclose: {readback['allclose_all']}"
     )
     return {
-        "schema": "scalpel-overhead-v3",
+        "schema": "scalpel-overhead-v4",
         "backend": jax.default_backend(),
         "probe_events": list(PROBE_EVENTS),
+        "plan_sets": [list(s) for s in PLAN_SETS],
+        "plan_fingerprint": _plan_spec().fingerprint,
         "rows": rows,
         "per_mode_min_ms": by,
         "overhead_ratio": {
             w: {c: round(t / cs["vanilla"], 4) for c, t in cs.items()}
             for w, cs in by.items() if cs.get("vanilla")
         },
-        "fused_vs_legacy": fused,
+        "plans": plans,
         "readback": readback,
         "hierarchy_ok": ok,
     }

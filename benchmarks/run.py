@@ -1,10 +1,11 @@
 """Benchmark driver: python -m benchmarks.run [--fast]
 
 One benchmark per paper table/figure + the scale deliverables:
-  overhead    — paper Figs. 2-3 (vanilla/perfmon/all/selective, fused vs
-                legacy probe paths).  Its structured result is written to
-                ``BENCH_overhead.json`` at the repo root so the monitoring
-                overhead trajectory is machine-readable across PRs.
+  overhead    — paper Figs. 2-3 (vanilla/perfmon/all/selective, per-set
+                probe plans vs the union baseline, readback sweeps).  Its
+                structured result is written to ``BENCH_overhead.json`` at
+                the repo root so the monitoring overhead trajectory is
+                machine-readable across PRs.
   case_study  — paper Table 2 + Fig. 4 (two GEMM schedules through counters)
   kernels     — Pallas kernel vs oracle timings + cost-model table
   roofline    — per (arch x shape) three-term roofline from the dry-run
@@ -28,7 +29,7 @@ def _write_overhead_json(payload: dict) -> None:
     with open(OVERHEAD_JSON, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"\nwrote {OVERHEAD_JSON} "
-          f"(fused_vs_legacy: {payload.get('fused_vs_legacy')}; "
+          f"(plans: {payload.get('plans')}; "
           f"readback: {payload.get('readback')})")
 
 

@@ -4,11 +4,19 @@ hooks that react to live counters.
 
 Hooks run on *drained telemetry snapshots*: the jitted train step appends
 counters to a device-side ring at the runtime cadence, a background thread
-drains and delta-decodes them, and the hook fires on the drain thread —
-the step loop never stalls for monitoring.  The hook below also closes the
+drains and delta-decodes them (incrementally — only slots newer than the
+drain cursor are copied), and the hook fires on the drain thread — the
+step loop never stalls for monitoring.  The hook below also closes the
 adaptive loop on the telemetry plane itself, retuning the ring cadence
 (``runtime.telemetry.set_cadence`` — a dynamic-input swap, no re-trace)
 once the monitored statistics settle.
+
+Every reconfiguration here — the SIGUSR1 config swap to multiplexed
+phase-2 contexts included — re-selects among the probe plans compiled per
+(scope, event set) at trace time (core/plan.py): the phase-2 attn scope
+sweeps only what its ACTIVE set needs on each call, and
+``runtime.plan_fingerprint`` is printed before and after the reload to
+attest that no re-trace happened.
 
     PYTHONPATH=src python examples/adaptive_monitoring.py
 """
@@ -83,7 +91,8 @@ def main():
         if g is not None:
             phase_log.append(f"drained-hook: grad-norm estimate {g:.3f} "
                              f"(reloads so far: {runtime.reload_count}, "
-                             f"cadence: {runtime.telemetry.cadence})")
+                             f"cadence: {runtime.telemetry.cadence}, "
+                             f"plans: {runtime.plan_fingerprint[:12]})")
         # after the first hook, hot-swap the config via SIGUSR1 — exactly
         # the paper's 'new configuration file may be loaded at any time by
         # sending a signal to the application'
@@ -120,9 +129,15 @@ def main():
     print("\n".join(phase_log))
     print("\n".join(drained_log))
     print(f"\nconfig reloads during run: {rt.reload_count}")
+    print(f"plan fingerprint after reloads: {rt.plan_fingerprint[:12]} "
+          "(constant — reconfig re-selects compiled per-set plans, "
+          "never re-traces)")
+    print("per-(scope, event set) probe plans in effect:")
+    print(rt.describe_plans())
     print(f"final telemetry cadence: {rt.telemetry.cadence} "
           f"(ring writes drained: {len(drained_log)}, "
-          f"dropped: {rt.telemetry.dropped_snapshots})")
+          f"dropped: {rt.telemetry.dropped_snapshots}, "
+          f"ring slots copied: {rt.telemetry.slots_copied})")
     print(rt.report("final report (phase-2 contexts, multiplexed)"))
     est = rt.estimates()
     attn = next((s for s in est if s.endswith("attn")), None)

@@ -4,7 +4,9 @@
 
 1. Build a model (any callable using scalpel.function/probe scopes).
 2. Discover the compile-time scope set (the '-finstrument-functions' pass).
-3. Pick a runtime subset + events; run; read the per-scope report.
+3. Inspect the compiled probe plans (what each event set will actually
+   sweep — core/plan.py).
+4. Pick a runtime subset + events; run; read the per-scope report.
 """
 import jax
 
@@ -32,6 +34,14 @@ def main():
     print("compile-time scope set:")
     print(spec.describe())
 
+    # -- 2b. the compiled probe plans: per (scope, event set), exactly the
+    # raw channels that set sweeps per probed tensor.  The fingerprint is
+    # the attestation that the runtime reconfig below re-selects among
+    # these plans instead of re-tracing.
+    print("\ncompiled probe plans:")
+    print(scalpel.describe_plans(spec))
+    print(f"plan fingerprint: {spec.fingerprint[:12]}")
+
     # -- 3. runtime subset: monitor only attention scopes ------------------
     attn_scopes = [s for s in spec.scopes if s.endswith("attn")]
     mparams = scalpel.MonitorParams.selective(spec, attn_scopes)
@@ -50,12 +60,14 @@ def main():
     print(f"\nloss={float(loss):.4f}")
     print(scalpel.format_text(scalpel.build(spec, state)))
 
-    # flipping the monitored subset is a data swap — NO recompile:
+    # flipping the monitored subset is a data swap — NO recompile; the
+    # compiled plans (and their fingerprint) are untouched:
     mparams = scalpel.MonitorParams.selective(
         spec, [s for s in spec.scopes if s.endswith("mlp")]
     )
     loss, state = step(params, batch, state, mparams)  # same compiled step
-    print("\nafter runtime reconfig to mlp scopes (no re-trace):")
+    print("\nafter runtime reconfig to mlp scopes (no re-trace, plan "
+          f"fingerprint still {spec.fingerprint[:12]}):")
     print(scalpel.format_text(scalpel.build(spec, state)))
 
 

@@ -27,7 +27,15 @@ from .context import (  # noqa: F401
     spec_from_mapping,
 )
 from .counters import CounterState, MonitorParams  # noqa: F401
-from .events import EXTENSIVE, INTENSIVE, compute, lookup, registered  # noqa: F401
+from .events import (  # noqa: F401
+    CHANNELS,
+    EXTENSIVE,
+    INTENSIVE,
+    channels_for,
+    compute,
+    lookup,
+    registered,
+)
 from .instrument import (  # noqa: F401
     breakpoint_mode,
     capture,
@@ -41,6 +49,16 @@ from .instrument import (  # noqa: F401
     probe_scope,
     scan_with_counters,
     spec_from_discovery,
+)
+from .plan import (  # noqa: F401
+    CompactDelta,
+    MomentPlan,
+    ScopePlans,
+    SlotLayout,
+    compile_scope_plans,
+    describe_plans,
+    spec_fingerprint,
+    spec_layout,
 )
 from .report import (  # noqa: F401
     JsonlWriter,

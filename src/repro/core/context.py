@@ -188,6 +188,18 @@ class MonitorSpec:
         out.append(ctx)
         return MonitorSpec(contexts=tuple(out))
 
+    @property
+    def fingerprint(self) -> str:
+        """Stable hash over this spec's compiled probe plans (plan.py).
+
+        Two specs with equal fingerprints trace identical probe graphs;
+        runtime mask/period swaps never change it — the attestation that a
+        config hot-swap re-selected plans without re-tracing anything.
+        """
+        from . import plan as plan_lib  # lazy: plan imports this module
+
+        return plan_lib.spec_fingerprint(self)
+
     def describe(self) -> str:
         lines = []
         for c in self.contexts:

@@ -10,25 +10,30 @@ registry of those in-graph events.
 Architecture (stage 1 → stage 2)
 --------------------------------
 Most events are statistics of ONE probed tensor, and every one of them is a
-cheap scalar function of the shared raw *moment vector*
+cheap scalar function of a shared raw *channel vector*: the sweep channels
 
-    [sum, sum_sq, sum_abs, max_abs, zero_count, nan_count, inf_count, numel]
+    [sum, sum_sq, sum_abs, max_abs, zero_count, nan_count, inf_count,
+     ent_sum]
 
-(kernels/probe_reduce.py — one fused pass over the tensor, Pallas on TPU).
-Such *moment-derived* events declare the moments they need (``moments=``)
-plus a *finalizer* ``(moments: dict) -> f32 scalar``, e.g.
-``ACT_RMS = sqrt(sum_sq / numel)``.  The instrumentation core
-(instrument.Collector.probe) computes the union of required moments once per
-probed tensor and evaluates every live slot from that shared vector — a
-scope probing six activation statistics reads its tensor from HBM once, not
-six times.  Events that are NOT per-tensor statistics (ATTN_ENTROPY,
-MOE_LOAD, SSM_STATE_RMS, ...) keep their bespoke ``fn`` path unchanged.
+(kernels/probe_reduce.py — one fused pass over the tensor, Pallas on TPU;
+``ent_sum`` is the optional entropy channel) plus the trace-time-constant
+channels ``numel``/``rows`` that cost nothing.  Such *moment-derived* events
+declare the channels they need (``moments=``) plus a *finalizer*
+``(moments: dict) -> f32 scalar``, e.g. ``ACT_RMS = sqrt(sum_sq / numel)``.
 
-Every event also keeps a direct (legacy/unfused) implementation ``fn: (tensor
-| tensors-dict) -> f32 scalar`` — the reference the fused path is checked
-against (allclose: accumulation order differs between the fused single pass
-and independent reductions — benchmarks/overhead.py, tests/test_probe_reduce)
-and the path a collector takes with ``fused=False``.
+This registry only declares PER-SLOT requirements; grouping them into the
+per-(scope, event set) sweep a probe call actually performs is the job of
+the probe-plan compiler (core/plan.py): each event set sweeps exactly the
+channels ITS slots need, never the union across sets — a scope probing six
+activation statistics reads its tensor from HBM once, and a sparse active
+set pays only for its own channels.  Events that are NOT per-tensor channel
+functions (MOE_LOAD, SSM_STATE_RMS, ...) keep their bespoke ``fn`` path.
+
+Every event also keeps a direct (unfused) implementation ``fn: (tensor |
+tensors-dict) -> f32 scalar`` — the numerical reference the planned path is
+checked against (allclose: accumulation order differs between the fused
+single pass and independent reductions — benchmarks/overhead.py,
+tests/test_probe_reduce, tests/test_plan).
 
 Events are tagged EXTENSIVE (accumulates by summation across calls: counts,
 bytes, flops) or INTENSIVE (accumulates as a mean across monitored calls:
@@ -50,9 +55,12 @@ Array = jnp.ndarray
 EXTENSIVE = "extensive"
 INTENSIVE = "intensive"
 
-# Canonical raw-moment names, in kernel order (kernels/probe_reduce.MOMENTS
-# mirrors this tuple; keep the two in sync — tests assert they match).
-MOMENTS = (
+# Canonical channel vocabulary.  SWEEP_CHANNELS need a pass over the data
+# (kernels/probe_reduce computes them in one fused sweep; ``ent_sum`` is the
+# optional entropy channel); STATIC_CHANNELS are trace-time constants of the
+# tensor's shape and are always free.  kernels/probe_reduce mirrors this
+# vocabulary — tests assert the two stay in sync.
+SWEEP_CHANNELS = (
     "sum",
     "sum_sq",
     "sum_abs",
@@ -60,8 +68,10 @@ MOMENTS = (
     "zero_count",
     "nan_count",
     "inf_count",
-    "numel",
+    "ent_sum",
 )
+STATIC_CHANNELS = ("numel", "rows")
+CHANNELS = SWEEP_CHANNELS + STATIC_CHANNELS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,9 +103,9 @@ def register(
     finalize: Callable[[Mapping[str, Array]], Array] | None = None,
     doc: str = "",
 ):
-    unknown = set(moments) - set(MOMENTS)
+    unknown = set(moments) - set(CHANNELS)
     if unknown:
-        raise ValueError(f"event {name!r}: unknown moments {sorted(unknown)}")
+        raise ValueError(f"event {name!r}: unknown channels {sorted(unknown)}")
     if bool(moments) != (finalize is not None):
         raise ValueError(
             f"event {name!r}: moments and finalize must be given together"
@@ -173,29 +183,32 @@ def compute(spec: EventSpec, tensors: dict[str, Array]) -> Array:
 
 
 # --------------------------------------------------------------------------
-# Two-stage (fused) evaluation helpers — used by instrument.Collector.probe.
+# Two-stage evaluation helpers — consumed by the probe-plan compiler
+# (core/plan.py) and the planned probe path (instrument.Collector.probe).
 # --------------------------------------------------------------------------
 
 def moment_based(spec: EventSpec) -> bool:
-    """Is this slot a stage-2 finalizer over the shared moment vector?"""
+    """Is this slot a stage-2 finalizer over the shared channel sweep?"""
     ev = lookup(spec.event)
     return ev.finalize is not None and not ev.wants_dict
 
 
-def probe_tensor(spec: EventSpec, tensor_names) -> str:
-    """The probe tensor a per-tensor slot binds to (assumes computable)."""
-    if spec.tensor:
-        return spec.tensor
-    (name,) = tuple(tensor_names)
-    return name
+def slot_channels(spec: EventSpec) -> tuple[str, ...]:
+    """The raw channels ONE slot needs (empty for bespoke events)."""
+    return lookup(spec.event).moments
 
 
-def required_moments(specs) -> tuple[str, ...]:
-    """Union of raw moments the given slots need, in canonical order."""
+def channels_for(specs) -> tuple[str, ...]:
+    """Exact channels the given slot group needs, in canonical order.
+
+    The probe-plan compiler (core/plan.py) calls this PER EVENT SET — the
+    resulting sweep covers only what the active set's slots finalize from,
+    not the union across every set of the scope.
+    """
     need: set[str] = set()
     for s in specs:
         need.update(lookup(s.event).moments)
-    return tuple(m for m in MOMENTS if m in need)
+    return tuple(m for m in CHANNELS if m in need)
 
 
 def finalize_event(spec: EventSpec, moments: Mapping[str, Array]) -> Array:
@@ -306,9 +319,11 @@ def _mean(x):
 # --------------------------------------------------------------------------
 
 @register(
-    "ATTN_ENTROPY", INTENSIVE,
+    "ATTN_ENTROPY", INTENSIVE, moments=("ent_sum", "rows"),
+    finalize=lambda m: -m["ent_sum"] / m["rows"],
     doc="mean entropy (nats) of attention rows; probe tensor = probabilities "
-        "over the last axis",
+        "over the last axis.  Fused: rides the sweep's optional ent_sum "
+        "channel (sum of p*log(p+eps)) divided by the static row count",
 )
 def _attn_entropy(p):
     p = _f32(p)

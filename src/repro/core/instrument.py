@@ -15,14 +15,16 @@ Execution model
   on the runtime scope mask (un-monitored scopes pay only the predicated
   branch — the paper's cheap interception), then a ``lax.switch`` over the
   scope's event sets keyed by ``(calls // period) % n_sets`` — call-count
-  multiplexing, phase-exact even inside ``lax.scan`` loops.  Inside the
-  monitored branch each probed tensor is swept ONCE (the union of raw
-  moments all live moment-derived slots need — kernels/probe_reduce.py) and
-  every slot lands via one batched scatter per branch; see events.py for
-  the two-stage moments→finalizer design.
+  multiplexing, phase-exact even inside ``lax.scan`` loops.  Each branch
+  executes its compiled ``MomentPlan`` (core/plan.py): exactly the channels
+  THAT event set finalizes from, swept once per probed tensor
+  (kernels/probe_reduce.py — the optional ``ent_sum`` channel folds
+  ATTN_ENTROPY into the same pass), landing via one batched scatter over
+  the set's live slots.  A sparse active set never pays for the union.
 * ``capture(fn, ...)`` runs ``fn`` under a child collector and returns
   ``(out, CounterState delta)`` — the bridge that lets ``lax.scan`` carry
-  counters through stacked layers.
+  counters through stacked layers (in compact form: the scan carry sums
+  only the spec's live-slot footprint, ``plan.CompactDelta``).
 
 When no collector is active every call here is a no-op: an uninstrumented
 ("vanilla") program pays nothing.
@@ -37,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from . import events as events_lib
+from . import plan as plan_lib
 from .context import EventSpec, MonitorSpec, ScopeContext
 from .counters import CounterState, MonitorParams
 
@@ -79,15 +82,19 @@ class Collector:
     this, the per-call scatters dominated the monitoring overhead
     (EXPERIMENTS.md §Perf, instrumentation iteration 1).
 
-    Event evaluation is FUSED by default: moment-derived slots (events.py
-    stage 1/2) share one moment-vector sweep per probed tensor and land in
-    the slot vector through one batched scatter per branch.  ``fused=False``
-    keeps the legacy one-reduction-per-event path — the numerical reference
-    that benchmarks/overhead.py compares against.
+    Event evaluation is PLAN-DRIVEN: every (scope, event set) pair executes
+    its compiled ``plan.MomentPlan`` — the exact channel sweep per probed
+    tensor that set's slots finalize from, plus the set's bespoke slots,
+    landing through one batched scatter over the set's live-slot footprint.
+    ``plan_mode="union"`` widens each set's sweeps to the cross-set union
+    (the pre-plan behaviour) — the benchmark baseline, not a hot path.
     """
 
     def __init__(self, spec: MonitorSpec, params: MonitorParams,
-                 calls_base, backends: tuple = (), fused: bool = True):
+                 calls_base, backends: tuple = (),
+                 plan_mode: str = "per_set"):
+        if plan_mode not in ("per_set", "union"):
+            raise ValueError(f"unknown plan_mode {plan_mode!r}")
         self.spec = spec
         self.params = params
         # calls_base: i32[n_scopes] — global call counts *before* this
@@ -97,8 +104,9 @@ class Collector:
         self.scope_path: list[str] = []
         self._extended: list[bool] = []
         self.backends = backends
-        self.fused = fused
-        # deferred accumulators (trace-time)
+        self.plan_mode = plan_mode
+        # deferred accumulators (trace-time); _vals/_smps hold per-scope
+        # vectors of the SCOPE's width (dense plan layout), not max_slots
         self._counts: dict[int, int] = {}
         self._vals: dict[int, list] = {}
         self._smps: dict[int, list] = {}
@@ -163,69 +171,49 @@ class Collector:
         if not ctx.slots:
             return
         params = self.params
-        m = self.spec.max_slots
         # call count *before* this call was intercepted (python-side count
         # of prior interceptions in this region + carried base).
         calls_here = self.calls_base[idx] + (self._counts.get(idx, 1) - 1)
 
         tensors = {k: jax.lax.stop_gradient(v) for k, v in tensors.items()}
-        # A probe call computes only the slots its tensors satisfy — scopes
-        # may probe several times per invocation with different tensors.
-        avail = frozenset(tensors)
-        live = {
-            i for i, s in enumerate(ctx.slots)
-            if events_lib.computable(s, avail)
-        }
-        if not live:
+        # Compile (or fetch the cached) per-set plans for this probe call:
+        # a scope may probe several times per invocation with different
+        # tensors, so plans are keyed on the available tensor names too.
+        plans = plan_lib.compile_scope_plans(
+            ctx, frozenset(tensors), self.plan_mode == "union"
+        )
+        if not plans.any_live:
             return
-
-        # Stage-1 plan (fused path): which live slots are finalizers over the
-        # shared moment vector, which probe tensor each binds to, and the
-        # UNION of raw moments every probed tensor must provide.  The union
-        # spans all event sets so a multiplexed scope still performs exactly
-        # one sweep per tensor per probe call.
-        fused_tensor: dict[int, str] = {}
-        needed: dict[str, tuple[str, ...]] = {}
-        if self.fused:
-            for i in sorted(live):
-                s = ctx.slots[i]
-                if events_lib.moment_based(s):
-                    fused_tensor[i] = events_lib.probe_tensor(s, avail)
-            for t in sorted(set(fused_tensor.values())):
-                needed[t] = events_lib.required_moments(
-                    ctx.slots[i] for i, ti in fused_tensor.items() if ti == t
-                )
+        w = plans.width
 
         def _set_branch(k: int):
-            members = [i for i in ctx.event_sets[k] if i in live]
+            pl = plans.plans[k]
 
-            def br(operand):
-                ts, moms = operand
-                vals = jnp.zeros((m,), jnp.float32)
-                smp = jnp.zeros((m,), jnp.int32)
-                if not members:
+            def br(ts):
+                vals = jnp.zeros((w,), jnp.float32)
+                smp = jnp.zeros((w,), jnp.int32)
+                if not pl.slots:
                     return vals, smp
-                if not self.fused:
-                    # legacy baseline: per-slot compute + per-slot scatter
-                    # chains, exactly the pre-fusion hot path (what the
-                    # overhead benchmark's *_legacy twin measures).
-                    for i in members:
-                        sm = params.slot_mask[idx, i]
-                        v = events_lib.compute(ctx.slots[i], ts) * sm
-                        vals = vals.at[i].set(v)
-                        smp = smp.at[i].set((sm > 0).astype(jnp.int32))
-                    return vals, smp
+                # THIS set's sweeps only: each probed tensor is read once,
+                # computing exactly the channels this set finalizes from
+                # (sets-dependent graphs are the price; only the selected
+                # branch executes at run time).
+                _kops = _kernel_ops()
+                moms = {
+                    sw.tensor: _kops.tensor_moments(ts[sw.tensor],
+                                                    sw.channels)
+                    for sw in pl.sweeps
+                }
                 vs = []
-                for i in members:
-                    if i in fused_tensor:
-                        v = events_lib.finalize_event(
-                            ctx.slots[i], moms[fused_tensor[i]]
-                        )
+                for s in pl.slots:
+                    if s.fused:
+                        vs.append(events_lib.finalize_event(
+                            ctx.slots[s.index], moms[s.tensor]
+                        ))
                     else:
-                        v = events_lib.compute(ctx.slots[i], ts)
-                    vs.append(v)
-                # one batched scatter per branch instead of per-slot chains
-                idxs = jnp.asarray(members, jnp.int32)
+                        vs.append(events_lib.compute(ctx.slots[s.index], ts))
+                # one batched scatter over the set's live-slot footprint
+                idxs = jnp.asarray(pl.members, jnp.int32)
                 sms = params.slot_mask[idx, idxs]
                 vals = vals.at[idxs].set(jnp.stack(vs) * sms)
                 smp = smp.at[idxs].set((sms > 0).astype(jnp.int32))
@@ -234,23 +222,16 @@ class Collector:
             return br
 
         def _monitored(ts):
-            # ONE sweep per probed tensor, shared by every moment-derived
-            # slot in every event set (evaluated only when the scope mask is
-            # on — un-monitored scopes never touch the tensor).
-            _kops = _kernel_ops()
-            moms = {t: _kops.tensor_moments(ts[t], mom) for t, mom in
-                    needed.items()}
             if ctx.n_sets == 1:
-                return _set_branch(0)((ts, moms))
+                return _set_branch(0)(ts)
             set_idx = (calls_here // jnp.maximum(params.period[idx], 1)) % ctx.n_sets
             return jax.lax.switch(
-                set_idx, [_set_branch(k) for k in range(ctx.n_sets)],
-                (ts, moms),
+                set_idx, [_set_branch(k) for k in range(ctx.n_sets)], ts
             )
 
         def _skipped(ts):
             del ts
-            return jnp.zeros((m,), jnp.float32), jnp.zeros((m,), jnp.int32)
+            return jnp.zeros((w,), jnp.float32), jnp.zeros((w,), jnp.int32)
 
         vals, smp = jax.lax.cond(
             params.scope_mask[idx] > 0, _monitored, _skipped, tensors
@@ -281,16 +262,49 @@ class Collector:
             tot = lst[0]
             for v in lst[1:]:
                 tot = tot + v
-            values = values.at[idx].add(tot)
+            values = values.at[idx, : tot.shape[0]].add(tot)
         for idx, lst in self._smps.items():
             tot = lst[0]
             for v in lst[1:]:
                 tot = tot + v
-            samples = samples.at[idx].add(tot)
+            samples = samples.at[idx, : tot.shape[0]].add(tot)
         d = CounterState(calls=calls, values=values, samples=samples)
         for ing in self._ingested:
             d = d.add(ing)
         self._final = d
+        return d
+
+    def compact_delta(self) -> plan_lib.CompactDelta:
+        """The region's delta in the dense slot layout (plan.SlotLayout).
+
+        The scan-carry form: ``lax.scan`` bodies sum only the spec's
+        live-slot footprint per iteration and expand to a full CounterState
+        once at region exit (scan_with_counters) — instead of carrying the
+        padded ``[n_scopes, max_slots]`` block through every iteration.
+        """
+        lay = plan_lib.spec_layout(self.spec)
+        n = self.spec.n_scopes
+        calls = jnp.zeros((n,), jnp.int32)
+        if self._counts:
+            idxs, cnts = self._counts_arrays()
+            calls = calls.at[idxs].add(cnts)
+        values = jnp.zeros((lay.total,), jnp.float32)
+        samples = jnp.zeros((lay.total,), jnp.int32)
+        for idx, lst in self._vals.items():
+            tot = lst[0]
+            for v in lst[1:]:
+                tot = tot + v
+            off = lay.offsets[idx]
+            values = values.at[off : off + tot.shape[0]].add(tot)
+        for idx, lst in self._smps.items():
+            tot = lst[0]
+            for v in lst[1:]:
+                tot = tot + v
+            off = lay.offsets[idx]
+            samples = samples.at[off : off + tot.shape[0]].add(tot)
+        d = plan_lib.CompactDelta(calls=calls, values=values, samples=samples)
+        for ing in self._ingested:
+            d = d.add(plan_lib.CompactDelta.compress(self.spec, ing))
         return d
 
 
@@ -344,18 +358,20 @@ class DiscoveryCollector:
 
 @contextlib.contextmanager
 def collecting(spec: MonitorSpec, params: MonitorParams,
-               state: CounterState | None = None, *, fused: bool = True):
+               state: CounterState | None = None, *,
+               plan_mode: str = "per_set"):
     """Open a root collection region; yields the Collector.
 
     ``state`` supplies the call-count base so multiplex schedules continue
     across steps; pass the carried CounterState of the training loop.
-    ``fused=False`` selects the legacy one-reduction-per-event probe path
-    (numerical reference / overhead baseline).
+    ``plan_mode="union"`` compiles every event set against the cross-set
+    channel union (the pre-plan probe behaviour) — the baseline the
+    overhead benchmark's plan sweep measures against, not a hot path.
     """
     base = state.calls if state is not None else jnp.zeros(
         (spec.n_scopes,), jnp.int32
     )
-    col = Collector(spec, params, calls_base=base, fused=fused)
+    col = Collector(spec, params, calls_base=base, plan_mode=plan_mode)
     _stack().append(col)
     try:
         yield col
@@ -469,12 +485,14 @@ def instrument(fn: Callable, name: str, probes: Callable | None = None):
     return wrapped
 
 
-def capture(fn: Callable, calls_base=None):
+def capture(fn: Callable, calls_base=None, compact: bool = False):
     """Run ``fn`` under a child collector; returns ``fn' -> (out, delta)``.
 
     The bridge for ``lax.scan``: the scan body wraps its work in ``capture``
     with ``calls_base = outer_base + carried_delta.calls`` so call-count
-    multiplexing stays exact across iterations.
+    multiplexing stays exact across iterations.  ``compact=True`` returns
+    the delta as a ``plan.CompactDelta`` (the dense live-slot layout) — the
+    form scan carries sum per iteration.
     """
     parent = current_collector()
 
@@ -487,14 +505,14 @@ def capture(fn: Callable, calls_base=None):
             return fn(*args, **kwargs), None
         base = calls_base if calls_base is not None else parent.total_calls()
         child = Collector(parent.spec, parent.params, calls_base=base,
-                          fused=parent.fused)
+                          plan_mode=parent.plan_mode)
         child.scope_path = list(parent.scope_path)
         _stack().append(child)
         try:
             out = fn(*args, **kwargs)
         finally:
             _stack().pop()
-        return out, child.delta
+        return out, (child.compact_delta() if compact else child.delta)
 
     return run
 
@@ -510,8 +528,13 @@ def scan_with_counters(body: Callable, init, xs, length: int | None = None,
 
     ``remat`` (optional): a rematerialization decorator (e.g.
     ``jax.checkpoint`` with a policy).  It is applied *inside* the counter
-    capture so the CounterState delta is an explicit output of the
-    checkpointed region — counters never leak across the remat boundary.
+    capture so the counter delta is an explicit output of the checkpointed
+    region — counters never leak across the remat boundary.
+
+    The per-iteration delta rides the carry in COMPACT form
+    (``plan.CompactDelta``): the scan sums only the spec's live-slot
+    footprint each step — the dense slot layout the probe-plan layer
+    compiles — and expands to a full ``CounterState`` once, at scan exit.
     """
     col = current_collector()
     if col is None or isinstance(col, DiscoveryCollector):
@@ -522,7 +545,8 @@ def scan_with_counters(body: Callable, init, xs, length: int | None = None,
     base = col.total_calls()
 
     def work(inner, x, calls_base):
-        run = capture(lambda: body(inner, x), calls_base=calls_base)
+        run = capture(lambda: body(inner, x), calls_base=calls_base,
+                      compact=True)
         (inner2, y), d = run()
         return inner2, y, d
 
@@ -535,10 +559,10 @@ def scan_with_counters(body: Callable, init, xs, length: int | None = None,
         return (inner2, dsum.add(d)), y
 
     (out, dtotal), ys = jax.lax.scan(
-        wrapped, (init, CounterState.zeros(spec)), xs, length=length,
-        unroll=unroll,
+        wrapped, (init, plan_lib.CompactDelta.zeros(spec)), xs,
+        length=length, unroll=unroll,
     )
-    col.ingest(dtotal)
+    col.ingest(dtotal.expand(spec))
     return out, ys
 
 

@@ -1,0 +1,334 @@
+"""Probe-plan compiler — per-(scope, event set) moment plans, spec → kernel.
+
+ScALPEL's core claim is *selective* monitoring: the active event set of a
+function changes at run time, yet the monitored path should only pay for
+what that set needs.  Before this layer the probe path computed the UNION
+of raw moments across every event set inside every ``lax.switch`` branch —
+a sparse active set (say ACT_MAX_ABS alone) still swept six channels over
+the tensor.  The same per-function-selectivity discipline LIKWID and Scaler
+apply to keep always-on monitoring cheap applies here: compile, per (scope,
+event set), exactly the work that set performs.
+
+Compiled artifacts (all static / trace-time, cached on the hashable frozen
+context objects):
+
+* ``MomentPlan`` — one per (scope context, available probe tensors, event
+  set): which slots are live, which finalize from the shared channel sweep
+  (and from which probe tensor), which run their bespoke ``fn``, and the
+  EXACT per-tensor channel tuples to sweep — including the optional
+  ``ent_sum`` entropy channel that folds ATTN_ENTROPY into the same pass.
+* ``ScopePlans`` — the per-scope bundle of MomentPlans plus the scope's slot
+  width (the dense vector a probe branch scatters into).
+* ``SlotLayout`` — the spec-wide dense slot→scatter layout: each scope's
+  slots packed contiguously into one flat vector of ``total`` live slots.
+  ``CompactDelta`` rides this layout through ``lax.scan`` carries so stacked
+  layers sum ``total`` lanes per iteration instead of a padded
+  ``[n_scopes, max_slots]`` block, and expands to a full ``CounterState``
+  once at region exit.
+* ``spec_fingerprint`` — a stable hash over the compiled plans; part of the
+  spec's identity so reports/telemetry can attest which plan produced a
+  counter stream, and config hot-swaps (mask/period changes — dynamic
+  inputs) demonstrably leave it, and the traced graph, untouched.
+
+``union=True`` compiles the pre-plan behaviour (every set sweeps the union
+of channels across all sets) — kept as the benchmark baseline
+(benchmarks/overhead.py ``run_plan_sweep``), not a supported hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import events as events_lib
+from .context import MonitorSpec, ScopeContext
+from .counters import CounterState
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSlot:
+    """One live slot of a plan: where it scatters and how it is evaluated.
+
+    ``tensor``: the probe tensor a fused slot finalizes from ("" for bespoke
+    slots, which receive the full probe-tensor dict).
+    """
+
+    index: int          # slot index within the scope context
+    tensor: str
+    fused: bool         # True: finalizer over the channel sweep
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSweep:
+    """One probed tensor and the exact channels this event set sweeps."""
+
+    tensor: str
+    channels: tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentPlan:
+    """The compiled probe work of ONE (scope, event set) pair."""
+
+    scope: str
+    set_index: int
+    slots: tuple[PlanSlot, ...]     # live slots, ascending index
+    sweeps: tuple[TensorSweep, ...]  # per-tensor exact channel requirements
+
+    @property
+    def members(self) -> tuple[int, ...]:
+        return tuple(s.index for s in self.slots)
+
+    @property
+    def sweep_channel_count(self) -> int:
+        """Data-pass channels this set pays for (static channels are free)."""
+        return sum(
+            1 for sw in self.sweeps for c in sw.channels
+            if c in events_lib.SWEEP_CHANNELS
+        )
+
+    def describe(self) -> str:
+        slots = ", ".join(
+            ("~" if not s.fused else "") + str(s.index) for s in self.slots
+        )
+        sweeps = "; ".join(
+            f"{sw.tensor or '<probe>'}:[{','.join(sw.channels)}]"
+            for sw in self.sweeps
+        )
+        return f"set {self.set_index}: slots [{slots}] sweeps {sweeps or '-'}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopePlans:
+    """Per-scope bundle: one MomentPlan per event set + the branch width."""
+
+    scope: str
+    width: int                      # len(ctx.slots): the branch vector width
+    plans: tuple[MomentPlan, ...]
+
+    @property
+    def n_sets(self) -> int:
+        return len(self.plans)
+
+    @property
+    def any_live(self) -> bool:
+        return any(p.slots for p in self.plans)
+
+
+def _bind_tensor(spec, avail: frozenset | None) -> str:
+    """The probe tensor a per-tensor slot binds to (static describe mode
+    binds unqualified slots to the anonymous '<probe>' tensor '')."""
+    if spec.tensor:
+        return spec.tensor
+    if avail is None:
+        return ""
+    (name,) = tuple(avail)
+    return name
+
+
+@functools.lru_cache(maxsize=None)
+def compile_scope_plans(
+    ctx: ScopeContext, avail: frozenset | None = None, union: bool = False
+) -> ScopePlans:
+    """Compile one MomentPlan per event set of ``ctx``.
+
+    ``avail``: the probe tensor names this probe call provides (a scope may
+    probe several times per invocation with different tensors; only the
+    slots those tensors satisfy are live).  ``None`` = static mode: assume
+    every slot computable — used for fingerprints and description, where no
+    concrete probe call exists.
+
+    ``union=True`` widens every set's sweeps to the union of channels over
+    ALL sets (the pre-plan behaviour, kept as a benchmark baseline).
+    """
+    def live(i) -> bool:
+        if avail is None:
+            return True
+        return events_lib.computable(ctx.slots[i], avail)
+
+    # per-tensor channel union across ALL sets (the baseline's sweep)
+    union_channels: dict[str, tuple[str, ...]] = {}
+    if union:
+        by_tensor: dict[str, list] = {}
+        for i, s in enumerate(ctx.slots):
+            if live(i) and events_lib.moment_based(s):
+                by_tensor.setdefault(_bind_tensor(s, avail), []).append(s)
+        union_channels = {
+            t: events_lib.channels_for(ss) for t, ss in by_tensor.items()
+        }
+
+    plans = []
+    for k, members in enumerate(ctx.event_sets):
+        slots: list[PlanSlot] = []
+        set_by_tensor: dict[str, list] = {}
+        for i in sorted(members):
+            if not live(i):
+                continue
+            s = ctx.slots[i]
+            if events_lib.moment_based(s):
+                t = _bind_tensor(s, avail)
+                slots.append(PlanSlot(index=i, tensor=t, fused=True))
+                set_by_tensor.setdefault(t, []).append(s)
+            else:
+                slots.append(PlanSlot(index=i, tensor="", fused=False))
+        sweeps = tuple(
+            TensorSweep(
+                tensor=t,
+                channels=(
+                    union_channels[t] if union
+                    else events_lib.channels_for(ss)
+                ),
+            )
+            for t, ss in sorted(set_by_tensor.items())
+        )
+        plans.append(
+            MomentPlan(scope=ctx.scope, set_index=k, slots=tuple(slots),
+                       sweeps=sweeps)
+        )
+    return ScopePlans(
+        scope=ctx.scope, width=max(1, len(ctx.slots)), plans=tuple(plans)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spec-wide dense slot layout + compact scan-carry counters
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SlotLayout:
+    """Dense slot→scatter layout of a MonitorSpec.
+
+    Scope ``i``'s slots occupy ``[offsets[i], offsets[i] + widths[i])`` of a
+    flat ``total``-lane vector — the live-slot footprint a scan carry sums
+    per iteration, instead of the padded ``[n_scopes, max_slots]`` block.
+    """
+
+    offsets: tuple[int, ...]
+    widths: tuple[int, ...]
+    total: int
+
+    @functools.cached_property
+    def scatter_indices(self) -> tuple[np.ndarray, np.ndarray]:
+        """(scope_ids, slot_ids) mapping flat lanes to [n_scopes, max_slots]."""
+        scope_ids = np.concatenate(
+            [np.full((w,), i, np.int32) for i, w in enumerate(self.widths)]
+        ) if self.total else np.zeros((0,), np.int32)
+        slot_ids = np.concatenate(
+            [np.arange(w, dtype=np.int32) for w in self.widths]
+        ) if self.total else np.zeros((0,), np.int32)
+        return scope_ids, slot_ids
+
+
+@functools.lru_cache(maxsize=None)
+def spec_layout(spec: MonitorSpec) -> SlotLayout:
+    widths = tuple(len(c.slots) for c in spec.contexts)
+    offsets, off = [], 0
+    for w in widths:
+        offsets.append(off)
+        off += w
+    return SlotLayout(offsets=tuple(offsets), widths=widths, total=off)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompactDelta:
+    """Counter delta in the dense slot layout — the scan-carry form.
+
+    calls    [n_scopes]  i32
+    values   [total]     f32  (SlotLayout order)
+    samples  [total]     i32
+    """
+
+    calls: jnp.ndarray
+    values: jnp.ndarray
+    samples: jnp.ndarray
+
+    @staticmethod
+    def zeros(spec: MonitorSpec) -> "CompactDelta":
+        lay = spec_layout(spec)
+        return CompactDelta(
+            calls=jnp.zeros((spec.n_scopes,), jnp.int32),
+            values=jnp.zeros((lay.total,), jnp.float32),
+            samples=jnp.zeros((lay.total,), jnp.int32),
+        )
+
+    def add(self, other: "CompactDelta") -> "CompactDelta":
+        return CompactDelta(
+            calls=self.calls + other.calls,
+            values=self.values + other.values,
+            samples=self.samples + other.samples,
+        )
+
+    def expand(self, spec: MonitorSpec) -> CounterState:
+        """Scatter the flat footprint back into a full CounterState."""
+        lay = spec_layout(spec)
+        n, m = spec.n_scopes, spec.max_slots
+        values = jnp.zeros((n, m), jnp.float32)
+        samples = jnp.zeros((n, m), jnp.int32)
+        if lay.total:
+            sids, slids = lay.scatter_indices
+            values = values.at[sids, slids].set(self.values)
+            samples = samples.at[sids, slids].set(self.samples)
+        return CounterState(calls=self.calls, values=values, samples=samples)
+
+    @staticmethod
+    def compress(spec: MonitorSpec, state: CounterState) -> "CompactDelta":
+        """Gather a full CounterState into the dense layout (one gather)."""
+        lay = spec_layout(spec)
+        if not lay.total:
+            return CompactDelta(
+                calls=state.calls,
+                values=jnp.zeros((0,), jnp.float32),
+                samples=jnp.zeros((0,), jnp.int32),
+            )
+        sids, slids = lay.scatter_indices
+        return CompactDelta(
+            calls=state.calls,
+            values=state.values[sids, slids],
+            samples=state.samples[sids, slids],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Spec fingerprint — plans are part of the spec's identity
+# ---------------------------------------------------------------------------
+
+def describe_plans(spec: MonitorSpec, union: bool = False) -> str:
+    """Human-readable plan table: scope → per-set slots + exact sweeps.
+
+    Slot IDENTITIES (event:tensor/subevent) are spelled out per scope — the
+    fingerprint hashes this text, and two specs whose slots differ only in
+    which event a slot runs (e.g. two bespoke events with empty sweeps)
+    must not collide.
+    """
+    lay = spec_layout(spec)
+    lines = []
+    for i, ctx in enumerate(spec.contexts):
+        sp = compile_scope_plans(ctx, None, union)
+        ids = ", ".join(ctx.slot_ids)
+        lines.append(
+            f"{ctx.scope}: width {len(ctx.slots)}, {sp.n_sets} set(s), "
+            f"footprint [{lay.offsets[i]}:{lay.offsets[i] + lay.widths[i]}]"
+            f" slots [{ids}]"
+        )
+        for p in sp.plans:
+            lines.append("  " + p.describe())
+    lines.append(f"total live footprint: {lay.total} slot(s)")
+    return "\n".join(lines)
+
+
+@functools.lru_cache(maxsize=None)
+def spec_fingerprint(spec: MonitorSpec) -> str:
+    """Stable hash over the compiled plans (scopes, sets, slots, sweeps).
+
+    Anything that changes the traced probe graph changes this string;
+    runtime mask/period/cadence swaps (dynamic inputs) do not.  Reports and
+    telemetry streams carry it so a counter row is attributable to the plan
+    that produced it.
+    """
+    text = describe_plans(spec)
+    return hashlib.sha1(text.encode()).hexdigest()

@@ -107,18 +107,22 @@ class JsonlWriter:
         self._buf: list[str] = []
         self._f = open(path, "a")
 
-    def write(self, step: int, reports: list[ScopeReport]) -> None:
+    def write(self, step: int, reports: list[ScopeReport],
+              plan: str | None = None) -> None:
+        """Append one line per scope report.  ``plan``: the producing spec's
+        plan fingerprint (MonitorSpec.fingerprint) — recorded per line so a
+        counter stream spanning config hot-swaps stays attributable to the
+        compiled probe plans that measured it."""
         for r in reports:
-            self._buf.append(
-                json.dumps(
-                    {
-                        "step": step,
-                        "scope": r.scope,
-                        "calls": r.calls,
-                        "slots": [dataclasses.asdict(s) for s in r.slots],
-                    }
-                )
-            )
+            row = {
+                "step": step,
+                "scope": r.scope,
+                "calls": r.calls,
+                "slots": [dataclasses.asdict(s) for s in r.slots],
+            }
+            if plan is not None:
+                row["plan"] = plan
+            self._buf.append(json.dumps(row))
         if len(self._buf) > self.buffer_lines:
             self._drain()
 

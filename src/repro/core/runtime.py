@@ -108,6 +108,21 @@ class ScalpelRuntime:
         with self._lock:
             self.params = params
 
+    # -- probe plans (static — the traced half the runtime can NOT swap) ---
+    @property
+    def plan_fingerprint(self) -> str:
+        """Hash of the compiled probe plans (plan.py).  Constant across
+        reload()/set_params()/cadence swaps — the attestation that runtime
+        reconfiguration re-selects among compiled per-set plans instead of
+        re-tracing."""
+        return self.spec.fingerprint
+
+    def describe_plans(self) -> str:
+        """The live spec's per-(scope, event set) plan table."""
+        from . import plan as plan_lib
+
+        return plan_lib.describe_plans(self.spec)
+
     # -- telemetry cadence (dynamic — swapping it never re-traces) --------
     @property
     def hook_every(self) -> int:

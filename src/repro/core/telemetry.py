@@ -15,9 +15,15 @@ jitted hot path:
   step loop never blocks on the ring.
 
 * **Host side** — ``TelemetryPlane``: a background drain thread pulls ring
-  slots with non-blocking transfers (``copy_to_host_async`` then a
-  ``device_get`` on the *drain* thread, never the step loop), delta-decodes
-  consecutive snapshots, and fans each one out to pluggable ``Sink``s
+  slots incrementally past its drain cursor — an idle tick costs one scalar
+  head probe; a drain that kept up (one new slot) copies the ring's O(1)
+  ``last`` mirror instead of the depth-sized ring; only a multi-slot
+  catch-up copies the stacked ring, whose slots are then mostly live.  All
+  of it is pure buffer transfer (``copy_to_host_async`` then a
+  ``device_get`` on the *drain* thread, never the step loop) — never
+  device-side compute, which would queue behind in-flight steps.  Slots are
+  delta-decoded into consecutive snapshots and fanned out to pluggable
+  ``Sink``s
   (stdout text, buffered JSONL, in-process callbacks — the mechanism behind
   ``ScalpelRuntime.add_hook``).
 
@@ -76,17 +82,31 @@ class TelemetryParams:
 class SnapshotRing:
     """Device-side ring of CounterState snapshots + step stamps.
 
-    steps    [depth]                    i32 — step stamp per slot (-1 empty)
-    calls    [depth, n_scopes]          i32
-    values   [depth, n_scopes, slots]   f32
-    samples  [depth, n_scopes, slots]   i32
-    head     scalar i32 — total writes ever (monotonic; slot = seq % depth)
+    steps     [depth]                    i32 — step stamp per slot (-1 empty)
+    calls     [depth, n_scopes]          i32
+    values    [depth, n_scopes, slots]   f32
+    samples   [depth, n_scopes, slots]   i32
+    last      CounterState — O(1) mirror of the NEWEST snapshot
+    last_step scalar i32 — step stamp of ``last``
+    head      scalar i32 — total writes ever (monotonic; slot = seq % depth)
+
+    ``last`` duplicates the most recent append into fixed, depth-independent
+    buffers.  It exists for the drain's incremental fast path: when exactly
+    one slot is newer than the drain cursor (the steady state of a drain
+    that keeps up — and the case where re-copying a deep ring wastes
+    (depth-1)/depth of the transfer), the host copies the mirror alone.
+    Pure buffer transfers either way: the drain must never dispatch device
+    computation (e.g. a gather of pending slots), because new device work
+    queues behind every in-flight training step and delays snapshots — and
+    the adaptive hooks riding them — by the whole dispatch window.
     """
 
     steps: Array
     calls: Array
     values: Array
     samples: Array
+    last: CounterState
+    last_step: Array
     head: Array
 
     @staticmethod
@@ -99,6 +119,8 @@ class SnapshotRing:
             calls=jnp.zeros((d, n), jnp.int32),
             values=jnp.zeros((d, n, m), jnp.float32),
             samples=jnp.zeros((d, n, m), jnp.int32),
+            last=CounterState.zeros(spec),
+            last_step=jnp.full((), -1, jnp.int32),
             head=jnp.zeros((), jnp.int32),
         )
 
@@ -122,7 +144,8 @@ def ring_append(ring: SnapshotRing, counters: CounterState,
     Writes a snapshot of ``counters`` stamped ``step`` when ``step`` is a
     multiple of the (dynamic) cadence; otherwise a no-op.  ``step`` is a
     traced i32 scalar (e.g. ``tstate.step + 1``), so neither the cadence nor
-    the step value ever re-traces the caller.
+    the step value ever re-traces the caller.  Besides the ring slot, the
+    O(1) ``last`` mirror is refreshed — the drain's one-slot fast path.
     """
     step = jnp.asarray(step, jnp.int32)
     cadence = jnp.maximum(tparams.cadence, 1)
@@ -139,6 +162,8 @@ def ring_append(ring: SnapshotRing, counters: CounterState,
                 r.values, counters.values, slot, 0),
             samples=jax.lax.dynamic_update_index_in_dim(
                 r.samples, counters.samples, slot, 0),
+            last=counters,
+            last_step=step,
             head=r.head + 1,
         )
 
@@ -215,7 +240,10 @@ class JsonlSink(Sink):
         self._writer = report_lib.JsonlWriter(path, buffer_lines=buffer_lines)
 
     def emit(self, snap: TelemetrySnapshot) -> None:
-        self._writer.write(snap.step, snap.reports)
+        # stamp each line with the producing spec's plan fingerprint so the
+        # stream stays attributable across config hot-swaps
+        self._writer.write(snap.step, snap.reports,
+                           plan=snap.spec.fingerprint[:12])
 
     def flush(self) -> None:
         self._writer.flush()
@@ -277,6 +305,10 @@ class TelemetryPlane:
         self._last_step = -1
         self.dropped_snapshots = 0
         self.drain_count = 0
+        # device→host transfer accounting: ring slots actually copied (the
+        # incremental drain copies only slots newer than the cursor, so at
+        # depth ≫ pending this is far below drain_count * depth)
+        self.slots_copied = 0
 
         self._lock = threading.Lock()          # ring ref + counters
         # RLock: a hook/sink may call runtime.report()/flush() from inside
@@ -429,33 +461,61 @@ class TelemetryPlane:
                 self._prev_state = None
             if head <= self._drained_head:
                 return []
-            # Non-blocking device→host: start the copies, then gather on
-            # THIS (drain) thread — the step loop never waits on them.
-            try:
-                jax.tree.map(
-                    lambda x: x.copy_to_host_async()
-                    if hasattr(x, "copy_to_host_async") else None,
-                    ring,
-                )
-            except Exception:  # pragma: no cover - backend-dependent
-                pass
-            host = jax.tree.map(np.asarray, ring)
-            head = int(host.head)
-            depth = host.depth
+            depth = ring.depth
             first = max(self._drained_head, head - depth)
             self.dropped_snapshots += first - self._drained_head
+            pending = head - first
+            # Incremental drain, as pure buffer transfers (never device
+            # compute — new device work queues behind in-flight steps and
+            # delays snapshots by the whole dispatch window):
+            #   pending == 1 — the steady state of a drain keeping up with
+            #     the append cadence: copy the O(1) ``last`` mirror alone,
+            #     one slot's worth of bytes no matter how deep the ring is.
+            #   pending > 1 — catching up: copy the stacked ring once; the
+            #     pending slots are the bulk of it anyway.
             out: list[TelemetrySnapshot] = []
-            for seq in range(first, head):
-                state = host.slot_state(seq % depth)
+
+            def emit(seq: int, step_no: int, state: CounterState) -> None:
                 prev = self._prev_state
                 delta = state if prev is None else state.sub(prev)
                 snap = TelemetrySnapshot(
-                    step=int(host.steps[seq % depth]), seq=seq,
-                    state=state, delta=delta, spec=self.spec,
+                    step=step_no, seq=seq, state=state, delta=delta,
+                    spec=self.spec,
                 )
                 self._prev_state = state
                 self._last_step = snap.step
                 out.append(snap)
+
+            def start_copies(tree) -> None:
+                # Non-blocking device→host: start the copies, then gather
+                # on THIS (drain) thread — the step loop never waits.
+                try:
+                    jax.tree.map(
+                        lambda x: x.copy_to_host_async()
+                        if hasattr(x, "copy_to_host_async") else None,
+                        tree,
+                    )
+                except Exception:  # pragma: no cover - backend-dependent
+                    pass
+
+            if pending == 1:
+                start_copies((ring.last, ring.last_step))
+                state = jax.tree.map(np.asarray, ring.last)
+                emit(head - 1, int(np.asarray(ring.last_step)), state)
+                self.slots_copied += 1
+            else:
+                start_copies((ring.steps, ring.calls, ring.values,
+                              ring.samples))
+                steps_h = np.asarray(ring.steps)
+                calls_h = np.asarray(ring.calls)
+                values_h = np.asarray(ring.values)
+                samples_h = np.asarray(ring.samples)
+                for seq in range(first, head):
+                    s = seq % depth  # host-side slicing of the host copy
+                    state = CounterState(calls=calls_h[s], values=values_h[s],
+                                         samples=samples_h[s])
+                    emit(seq, int(steps_h[s]), state)
+                self.slots_copied += depth
             self._drained_head = head
             self.drain_count += 1
             for snap in out:

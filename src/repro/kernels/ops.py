@@ -35,19 +35,28 @@ def _interpret(flag: bool | None) -> bool:
 MIN_PALLAS_MOMENT_NUMEL = 1 << 15
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def probe_moments(x, *, block_rows: int = 256, interpret: bool | None = None):
-    """Raw probe-moment vector f32[8] (see probe_reduce.MOMENTS) of ``x``.
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "with_entropy")
+)
+def probe_moments(x, *, block_rows: int = 256, interpret: bool | None = None,
+                  with_entropy: bool = False):
+    """Raw probe-moment vector f32[8] (f32[9] with the plan-requested
+    ``ent_sum`` channel; see probe_reduce.MOMENTS/MOMENTS_ENT) of ``x``.
 
     Single tiled pass over the tensor: interpret mode on CPU, Mosaic on TPU.
     """
     return _pr.moments_pallas(
-        x, block_rows=block_rows, interpret=_interpret(interpret)
+        x, block_rows=block_rows, interpret=_interpret(interpret),
+        with_entropy=with_entropy,
     )
 
 
 def tensor_moments(x, names, *, use_pallas: bool | None = None) -> dict:
-    """{moment: f32 scalar} for the probe path — the ONE sweep per tensor.
+    """{channel: f32 scalar} for the probe path — the ONE sweep per tensor.
+
+    ``names`` is the exact channel tuple a MomentPlan (core/plan.py) compiled
+    for the active event set — the sweep computes nothing outside it (plus
+    the free trace-time constants ``numel``/``rows``).
 
     Policy: the Pallas kernel on TPU for large float tensors; the fused-jnp
     fallback for tiny/oddly-shaped/non-float tensors and on CPU, where
@@ -60,8 +69,12 @@ def tensor_moments(x, names, *, use_pallas: bool | None = None) -> dict:
             and x.size >= MIN_PALLAS_MOMENT_NUMEL
         )
     if use_pallas:
-        vec = probe_moments(x)
-        return dict(zip(_pr.MOMENTS, vec))
+        with_entropy = "ent_sum" in set(names)
+        vec = probe_moments(x, with_entropy=with_entropy)
+        chans = _pr.MOMENTS_ENT if with_entropy else _pr.MOMENTS
+        out = dict(zip(chans, vec))
+        out.update(_pr.static_channel_values(x.shape))  # exact numel + rows
+        return out
     return _pr.named_moments_jnp(x, names)
 
 

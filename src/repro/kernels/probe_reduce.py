@@ -9,6 +9,10 @@ reads of one tensor to produce six scalars.  This kernel computes the raw
 
 in ONE tiled sweep with a VMEM accumulator; every moment-derived event is
 then a cheap scalar finalizer over this vector (events.py stage 2).  The
+probe-plan layer (core/plan.py) may additionally request the optional
+``ent_sum`` channel (sum of x*log(x+eps), the raw accumulator behind
+ATTN_ENTROPY) — a static kernel variant with one extra lane of the same
+sweep, so even entropy-bearing scopes read their tensor exactly once.  The
 same batching-of-counter-collection argument appears in Scaler and LIKWID:
 monitoring stays lightweight only if counter reads share their passes over
 the data.
@@ -57,10 +61,33 @@ MOMENTS = (
     M_NUMEL,
 ) = range(len(MOMENTS))
 
+# Optional fused channel (probe-plan layer): sum of x*log(x+eps), the raw
+# accumulator behind ATTN_ENTROPY.  Appended AFTER the base vector so every
+# M_* index above stays valid whether or not a plan requests entropy.
+ENT_EPS = 1e-9
+MOMENTS_ENT = MOMENTS + ("ent_sum",)
+M_ENT = len(MOMENTS)
+
+# Trace-time-constant channels the sweep never has to compute: element count
+# and last-axis row count (prod(shape[:-1]) — the divisor of a row-mean such
+# as attention entropy).  core/events.CHANNELS = sweep channels + these.
+STATIC_CHANNELS = ("numel", "rows")
+
 LANES = 128  # TPU vector lane count; last-axis tile width
 
 
-def _moment_kernel(x_ref, o_ref, *, numel: int, block_rows: int):
+def static_channel_values(shape) -> dict:
+    """{static channel: f32 constant} for a tensor of ``shape`` (free)."""
+    import numpy as np
+
+    numel = int(np.prod(shape)) if shape else 1
+    last = shape[-1] if shape else 1
+    rows = numel // last if last else 0
+    return {"numel": jnp.float32(numel), "rows": jnp.float32(rows)}
+
+
+def _moment_kernel(x_ref, o_ref, *, numel: int, block_rows: int,
+                   with_entropy: bool):
     """One grid step: fold a block_rows*LANES flat block into the accumulator.
 
     The final grid step may run past the end of the input (ragged tail) —
@@ -69,6 +96,7 @@ def _moment_kernel(x_ref, o_ref, *, numel: int, block_rows: int):
     """
     import jax.experimental.pallas as pl
 
+    n_chan = len(MOMENTS_ENT) if with_entropy else len(MOMENTS)
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -86,7 +114,7 @@ def _moment_kernel(x_ref, o_ref, *, numel: int, block_rows: int):
     ax = jnp.abs(xm)
     one = jnp.float32(1.0)
     zero = jnp.float32(0.0)
-    part = jnp.stack([
+    channels = [
         jnp.sum(xm),
         jnp.sum(xm * xm),
         jnp.sum(ax),
@@ -96,26 +124,34 @@ def _moment_kernel(x_ref, o_ref, *, numel: int, block_rows: int):
         jnp.sum(jnp.where(valid & jnp.isinf(x), one, zero)),
         zero,  # numel is a trace-time constant, written by the wrapper:
         # accumulating the mask sum in f32 would round above 2^24 elements
-    ]).reshape(1, len(MOMENTS))
+    ]
+    if with_entropy:
+        # masked lanes contribute 0*log(eps) == 0; NaN/-x propagate exactly
+        # like the unfused reference p*log(p+eps)
+        channels.append(jnp.sum(xm * jnp.log(xm + jnp.float32(ENT_EPS))))
+    part = jnp.stack(channels).reshape(1, n_chan)
 
     acc = o_ref[...]
-    chan = jax.lax.broadcasted_iota(jnp.int32, (1, len(MOMENTS)), 1)
+    chan = jax.lax.broadcasted_iota(jnp.int32, (1, n_chan), 1)
     new_max = jnp.maximum(acc[0, M_MAX_ABS], jnp.max(ax))
     o_ref[...] = jnp.where(chan == M_MAX_ABS, new_max, acc + part)
 
 
-def moments_pallas(x, *, block_rows: int = 256, interpret: bool = False):
-    """Raw moment vector f32[8] of ``x`` in a single tiled pass.
+def moments_pallas(x, *, block_rows: int = 256, interpret: bool = False,
+                   with_entropy: bool = False):
+    """Raw moment vector f32[8] (f32[9] with entropy) in a single tiled pass.
 
     The input is only flattened (a layout-preserving reshape, not a copy);
     non-aligned sizes are handled by letting the LAST grid step run ragged
     past the end of the array and masking in-kernel — no ``jnp.pad``, which
     would re-materialize the whole tensor and double the HBM traffic the
-    kernel exists to remove.
+    kernel exists to remove.  ``with_entropy`` (static, plan-driven) appends
+    the ``ent_sum`` channel to the same sweep.
     """
     n = int(x.size)
     if n == 0:
-        return moments_ref(x)
+        return moments_ref(x, with_entropy=with_entropy)
+    n_chan = len(MOMENTS_ENT) if with_entropy else len(MOMENTS)
     xf = x.reshape(-1)
     block = block_rows * LANES
     grid = (n + block - 1) // block
@@ -123,22 +159,23 @@ def moments_pallas(x, *, block_rows: int = 256, interpret: bool = False):
     import jax.experimental.pallas as pl
 
     out = pl.pallas_call(
-        functools.partial(_moment_kernel, numel=n, block_rows=block_rows),
+        functools.partial(_moment_kernel, numel=n, block_rows=block_rows,
+                          with_entropy=with_entropy),
         grid=(grid,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((1, len(MOMENTS)), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, len(MOMENTS)), jnp.float32),
+        out_specs=pl.BlockSpec((1, n_chan), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_chan), jnp.float32),
         interpret=interpret,
     )(xf)
     return out[0].at[M_NUMEL].set(jnp.float32(n))
 
 
-def moments_ref(x):
+def moments_ref(x, *, with_entropy: bool = False):
     """Pure-jnp oracle: the same moment vector from unfused reductions."""
     xf = x.astype(jnp.float32).reshape(-1)
     ax = jnp.abs(xf)
     n = xf.size
-    return jnp.stack([
+    chans = [
         jnp.sum(xf),
         jnp.sum(xf * xf),
         jnp.sum(ax),
@@ -147,26 +184,32 @@ def moments_ref(x):
         jnp.sum(jnp.isnan(xf).astype(jnp.float32)),
         jnp.sum(jnp.isinf(xf).astype(jnp.float32)),
         jnp.float32(n),
-    ])
+    ]
+    if with_entropy:
+        chans.append(jnp.sum(xf * jnp.log(xf + jnp.float32(ENT_EPS))))
+    return jnp.stack(chans)
 
 
 def named_moments_jnp(x, names) -> dict:
-    """Only the requested moments, as a {name: f32 scalar} dict.
+    """Only the requested channels, as a {name: f32 scalar} dict.
 
-    The fallback the probe path uses off-TPU.  All requested accumulators
-    ride ONE variadic ``lax.reduce`` — XLA:CPU lowers this to a single loop
-    over the data with k accumulator updates (measured ~3x faster than k
-    sibling ``jnp`` reductions at 1 MiB), so the single-pass property holds
-    even where the Pallas kernel doesn't run.  ``numel`` is a trace-time
-    constant and costs nothing.
+    The fallback the probe path uses off-TPU.  The probe-plan layer hands in
+    the EXACT per-event-set channel tuple, so the sweep computes nothing an
+    inactive slot would need.  All requested accumulators ride ONE variadic
+    ``lax.reduce`` — XLA:CPU lowers this to a single loop over the data with
+    k accumulator updates (measured ~3x faster than k sibling ``jnp``
+    reductions at 1 MiB), so the single-pass property holds even where the
+    Pallas kernel doesn't run.  ``numel``/``rows`` are trace-time constants
+    and cost nothing (always included).
     """
-    need = [n for n in MOMENTS if n in set(names) and n != "numel"]
-    out: dict = {"numel": jnp.float32(x.size)}  # trace-time constant, free
+    sweep = MOMENTS_ENT[:M_NUMEL] + ("ent_sum",)
+    need = [n for n in sweep if n in set(names)]
+    out: dict = dict(static_channel_values(x.shape))  # constants, free
     if not need:
         return out
     if x.size == 0:
-        ref = moments_ref(x)
-        out.update((n, ref[MOMENTS.index(n)]) for n in need)
+        ref = moments_ref(x, with_entropy=True)
+        out.update((n, ref[MOMENTS_ENT.index(n)]) for n in need)
         return out
     xf = x.astype(jnp.float32).reshape(-1)
     ax = jnp.abs(xf)  # shared producer; fused into the reduce by XLA
@@ -178,6 +221,7 @@ def named_moments_jnp(x, names) -> dict:
         "zero_count": lambda: (xf == 0).astype(jnp.float32),
         "nan_count": lambda: jnp.isnan(xf).astype(jnp.float32),
         "inf_count": lambda: jnp.isinf(xf).astype(jnp.float32),
+        "ent_sum": lambda: xf * jnp.log(xf + jnp.float32(ENT_EPS)),
     }
     operands = tuple(producers[n]() for n in need)
     inits = tuple(jnp.float32(0.0) for _ in need)

@@ -1,5 +1,6 @@
-"""Fused probe reductions: Pallas moment kernel vs jnp reference, and
-fused vs legacy event evaluation through a real collecting() region."""
+"""Fused probe reductions: Pallas moment kernel (incl. the optional entropy
+channel) vs jnp reference, and per-set-planned vs union-planned event
+evaluation through a real collecting() region."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,8 +18,14 @@ MOMENT_EVENTS = (
 )
 
 
-def test_moment_vocabulary_in_sync():
-    assert pr.MOMENTS == events.MOMENTS
+def test_channel_vocabulary_in_sync():
+    # kernel dense vector = sweep channels (minus static) + numel slot
+    assert pr.MOMENTS[:7] == events.SWEEP_CHANNELS[:7]
+    assert pr.MOMENTS_ENT == pr.MOMENTS + ("ent_sum",)
+    assert set(events.CHANNELS) == set(pr.MOMENTS_ENT) | set(
+        pr.STATIC_CHANNELS
+    )
+    assert events.CHANNELS == events.SWEEP_CHANNELS + events.STATIC_CHANNELS
 
 
 # ---------------------------------------------------------------------------
@@ -47,6 +54,21 @@ def test_pallas_moments_match_reference(shape, dtype):
     assert got[pr.M_ZERO] == want[pr.M_ZERO]
 
 
+@pytest.mark.parametrize("shape", [(128,), (5, 33), (3, 7, 17)])
+def test_pallas_entropy_channel_matches_reference(shape):
+    """The optional ent_sum channel rides the same masked sweep."""
+    rng = np.random.default_rng(11)
+    p = jax.nn.softmax(jnp.asarray(rng.normal(size=shape), jnp.float32), -1)
+    got = np.asarray(
+        ops.probe_moments(p, block_rows=1, interpret=True, with_entropy=True)
+    )
+    want = np.asarray(pr.moments_ref(p, with_entropy=True))
+    assert got.shape == (len(pr.MOMENTS_ENT),)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+    # without the flag the vector stays 8 wide — plans only pay on request
+    assert ops.probe_moments(p, interpret=True).shape == (len(pr.MOMENTS),)
+
+
 def test_pallas_moments_nan_inf_propagation():
     a = np.array([np.nan, 1.5, np.inf, -np.inf, 0.0] * 64, np.float32)
     got = np.asarray(ops.probe_moments(jnp.asarray(a), block_rows=1,
@@ -65,7 +87,11 @@ def test_named_moments_jnp_subset_matches_reference():
         np.testing.assert_allclose(
             float(d[name]), float(ref[pr.MOMENTS.index(name)]), rtol=1e-5
         )
-    assert "sum_abs" not in d  # only the union that was asked for
+    assert "sum_abs" not in d  # only the exact plan channels, nothing more
+    # static channels ride along for free: one row along the last axis
+    assert float(d["rows"]) == 1.0
+    d2 = ops.tensor_moments(jnp.ones((4, 5, 8)), ("sum",), use_pallas=False)
+    assert float(d2["rows"]) == 20.0 and float(d2["numel"]) == 160.0
 
 
 # ---------------------------------------------------------------------------
@@ -78,30 +104,52 @@ def test_finalizer_matches_direct_event(name):
     x = x.at[0, 0].set(0.0)
     spec = EventSpec(name, tensor="x")
     assert events.moment_based(spec)
-    moms = ops.tensor_moments(x, events.required_moments([spec]),
+    moms = ops.tensor_moments(x, events.channels_for([spec]),
                               use_pallas=False)
     got = float(events.finalize_event(spec, moms))
     want = float(events.compute(spec, {"x": x}))
     assert got == pytest.approx(want, rel=1e-5, abs=1e-7)
 
 
+def test_entropy_finalizer_matches_direct_event():
+    """ATTN_ENTROPY is moment-derived now: ent_sum/rows off the shared sweep."""
+    p = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(9), (6, 5, 32)), -1
+    )
+    spec = EventSpec("ATTN_ENTROPY", tensor="p")
+    assert events.moment_based(spec)
+    assert events.channels_for([spec]) == ("ent_sum", "rows")
+    moms = ops.tensor_moments(p, ("ent_sum", "rows"), use_pallas=False)
+    got = float(events.finalize_event(spec, moms))
+    want = float(events.compute(spec, {"p": p}))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
 def test_bespoke_events_not_moment_based():
-    for name in ("ATTN_ENTROPY", "MOE_LOAD", "SSM_STATE_RMS"):
+    for name in ("MOE_LOAD", "SSM_STATE_RMS"):
         assert not events.moment_based(EventSpec(name))
 
 
+def test_channels_for_is_per_group_not_per_registry():
+    a = events.channels_for([EventSpec("ACT_MAX_ABS", "x")])
+    b = events.channels_for([EventSpec("ACT_RMS", "x"),
+                             EventSpec("MEAN", "x")])
+    assert a == ("max_abs",)
+    assert b == ("sum", "sum_sq", "numel")
+
+
 # ---------------------------------------------------------------------------
-# end to end: fused vs legacy under a real collecting() region
+# end to end: per-set plans vs the union baseline under collecting()
 # ---------------------------------------------------------------------------
 
-def _run(spec, params, prog, *args, fused):
+def _run(spec, params, prog, *args, plan_mode):
     state = CounterState.zeros(spec)
-    with scalpel.collecting(spec, params, state, fused=fused) as col:
+    with scalpel.collecting(spec, params, state, plan_mode=plan_mode) as col:
         prog(*args)
     return state.add(col.delta)
 
 
-def test_fused_equals_legacy_exhaustive_scope():
+def test_per_set_equals_union_exhaustive_scope():
     slots = [EventSpec(e, "x") for e in MOMENT_EVENTS]
     spec = MonitorSpec.of([ScopeContext.exhaustive("f", slots)])
     params = MonitorParams.all_on(spec)
@@ -113,20 +161,21 @@ def test_fused_equals_legacy_exhaustive_scope():
             with scalpel.function("f"):
                 scalpel.probe(x=x * (i + 1))
 
-    a = _run(spec, params, prog, x, fused=True)
-    b = _run(spec, params, prog, x, fused=False)
+    a = _run(spec, params, prog, x, plan_mode="per_set")
+    b = _run(spec, params, prog, x, plan_mode="union")
     np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(a.samples),
                                   np.asarray(b.samples))
 
 
-def test_fused_equals_legacy_multiplexed_mixed_events():
-    """Moment-derived and bespoke slots interleaved across event sets."""
+def test_per_set_equals_union_multiplexed_mixed_events():
+    """Moment-derived, entropy-channel and bespoke slots across event sets."""
     spec = MonitorSpec.of([
         ScopeContext.multiplexed("g", [
             [EventSpec("ACT_RMS", "y"), EventSpec("ACT_MAX_ABS", "y")],
             [EventSpec("ATTN_ENTROPY", "p"), EventSpec("MEAN", "y")],
+            [EventSpec("SSM_STATE_RMS", "y")],
         ], period=2),
     ])
     params = MonitorParams.all_on(spec)
@@ -134,19 +183,24 @@ def test_fused_equals_legacy_multiplexed_mixed_events():
     p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (8, 16)), -1)
 
     def prog(y, p):
-        for _ in range(7):
+        for _ in range(9):
             with scalpel.function("g"):
                 scalpel.probe(y=y, p=p)
 
-    a = _run(spec, params, prog, y, p, fused=True)
-    b = _run(spec, params, prog, y, p, fused=False)
+    a = _run(spec, params, prog, y, p, plan_mode="per_set")
+    b = _run(spec, params, prog, y, p, plan_mode="union")
     np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(a.samples),
                                   np.asarray(b.samples))
+    # and both match the unfused direct reference on the entropy slot
+    # (every sampled call probed the same p, so value/samples == one call)
+    want = float(events.compute(EventSpec("ATTN_ENTROPY", "p"), {"p": p}))
+    got = float(a.values[0, 2]) / max(1, int(a.samples[0, 2]))
+    assert got == pytest.approx(want, rel=1e-5)
 
 
-def test_fused_equals_legacy_under_jit_and_masks():
+def test_per_set_equals_union_under_jit_and_masks():
     slots = [EventSpec(e, "x") for e in ("ACT_RMS", "ACT_ZERO_FRAC",
                                          "NAN_COUNT")]
     spec = MonitorSpec.of([
@@ -158,9 +212,9 @@ def test_fused_equals_legacy_under_jit_and_masks():
     )
     x = jax.random.normal(jax.random.PRNGKey(5), (256,))
 
-    def make(fused):
+    def make(plan_mode):
         def step(x, s, mp):
-            with scalpel.collecting(spec, mp, s, fused=fused) as col:
+            with scalpel.collecting(spec, mp, s, plan_mode=plan_mode) as col:
                 with scalpel.function("hot"):
                     scalpel.probe(x=x)
                 with scalpel.function("cold"):
@@ -170,8 +224,8 @@ def test_fused_equals_legacy_under_jit_and_masks():
         return jax.jit(step)
 
     s0 = CounterState.zeros(spec)
-    a = make(True)(x, s0, params)
-    b = make(False)(x, s0, params)
+    a = make("per_set")(x, s0, params)
+    b = make("union")(x, s0, params)
     np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(a.samples),
@@ -179,3 +233,14 @@ def test_fused_equals_legacy_under_jit_and_masks():
     # masked slot stayed dark, un-monitored scope stayed dark
     assert int(a.samples[0, 1]) == 0
     assert not np.any(np.asarray(a.values[1]))
+
+
+def test_unknown_plan_mode_rejected():
+    spec = MonitorSpec.of(
+        [ScopeContext.exhaustive("f", [EventSpec("MEAN", "x")])]
+    )
+    with pytest.raises(ValueError, match="plan_mode"):
+        with scalpel.collecting(spec, MonitorParams.all_on(spec),
+                                CounterState.zeros(spec),
+                                plan_mode="legacy"):
+            pass

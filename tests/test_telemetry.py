@@ -172,6 +172,47 @@ def test_make_ring_starts_new_epoch():
     plane.close()
 
 
+def test_drain_copies_one_slot_when_caught_up():
+    """Incremental drain: a drain that kept up (one new slot since the
+    cursor) copies the ring's O(1) ``last`` mirror — one slot's worth of
+    transfer regardless of ring depth — and an idle flush copies none.
+    Only a multi-slot catch-up pays a stacked-ring copy."""
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=16, cadence=1, interval_s=60.0)
+    got = []
+    plane.add_sink(T.CallbackSink(lambda s: got.append(s.step)))
+    cs = CounterState.zeros(spec)
+    ring = plane.make_ring()
+    for step in (1, 2, 3):                 # keeping up: one append per drain
+        cs = _bump(cs)
+        ring = T.ring_append(ring, cs, plane.params, step)
+        plane.publish(ring)
+        plane.flush()
+    assert got == [1, 2, 3]
+    assert plane.slots_copied == 3          # one mirror copy each, not 3*16
+    plane.flush()                           # idle: head probe only
+    assert plane.slots_copied == 3
+    # falling behind: 3 new slots → one stacked-ring copy (depth slots)
+    for step in range(4, 7):
+        cs = _bump(cs)
+        ring = T.ring_append(ring, cs, plane.params, step)
+    plane.publish(ring)
+    plane.flush()
+    assert got == [1, 2, 3, 4, 5, 6]
+    assert plane.slots_copied == 3 + 16
+    # overrun still decodes the surviving slots and counts the drops
+    for step in range(7, 27):
+        cs = _bump(cs)
+        ring = T.ring_append(ring, cs, plane.params, step)
+    plane.publish(ring)
+    plane.flush()
+    assert got[-1] == 26 and plane.slots_copied == 3 + 16 + 16
+    assert plane.dropped_snapshots == 4
+    # drained deltas stayed exact across both copy paths
+    assert int(plane.last_state.calls[0]) == 26
+    plane.close()
+
+
 def test_background_drain_thread_runs_without_flush():
     spec = _spec()
     plane = T.TelemetryPlane(spec, depth=8, cadence=1, interval_s=0.005)
