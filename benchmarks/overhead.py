@@ -27,6 +27,13 @@ Workloads mirror the paper's two axes:
     minutes of XLA CPU compile): a small function called k times per step,
     probing the motivation's six activation statistics.
 
+``run_monitor_sweep`` measures the functional API redesign: a
+``Monitor.wrap``-ped step threading ONE compact MonitorState pytree vs the
+manual deprecated ``collecting()`` + ``state.add(col.delta)`` path on the
+same workload (counters asserted allclose), and ``run_monitor_psum_check``
+(a 2-forced-host-device subprocess) asserts that a ``shard_wrap``-ped step's
+psum-reduced counters EXACTLY equal the sum of per-shard manual runs.
+
 Additionally, a readback-stall sweep (``run_readback_sweep``) measures the
 cost of CONSUMING counters: a synchronous full-CounterState ``device_get``
 every ``hook_every`` steps (the pre-telemetry runtime) vs the telemetry
@@ -382,6 +389,277 @@ def _plan_summary(rows: list[dict]) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Monitor.wrap vs the manual collecting() path (functional API redesign)
+# ---------------------------------------------------------------------------
+
+def _monitor_spec() -> MonitorSpec:
+    """One hot scope probing the six statistics + many narrow scopes: the
+    padded [n_scopes, max_slots] block (96 lanes) is ~4.5x the compact
+    dense footprint (21 lanes) — the per-step padded build/add the Monitor
+    path deletes."""
+    ctxs = [ScopeContext.exhaustive("hot",
+                                    [EventSpec(e, "x") for e in PROBE_EVENTS])]
+    ctxs += [
+        ScopeContext.exhaustive(f"aux{i}", [EventSpec("MEAN", "x")])
+        for i in range(15)
+    ]
+    return MonitorSpec.of(ctxs)
+
+
+def run_monitor_sweep(probe_sizes=(1 << 12, 1 << 14), k: int = 16,
+                      iters: int = 7, rounds: int = 3):
+    """Functional ``Monitor.jit`` (one MonitorState pytree, compact
+    counters end-to-end) vs the manual ``collecting()`` + ``state.add``
+    baseline, on identical workloads at 16-64 KiB probes.
+
+    The workload stacks ``k`` monitored layers inside
+    ``scan_with_counters`` (the production shape) plus 15 narrow scopes:
+    the wrapped step keeps the scan's compact carry compact through
+    finalization and outputs only the dense footprint, while the manual
+    path expands to — and accumulates in — the padded
+    ``[n_scopes, max_slots]`` block every step.  Counters are asserted
+    allclose after expanding the compact lanes back to the padded view.
+    """
+    import warnings
+
+    spec = _monitor_spec()
+    lay = plan_lib.spec_layout(spec)
+
+    rows = []
+    for n in probe_sizes:
+        x0 = jnp.ones((n,)) * 1.5
+        mp = MonitorParams.all_on(spec)
+
+        def work(x):
+            def layer(c, _):
+                with scalpel.function("hot"):
+                    c = c * 1.0001 + 0.1
+                    scalpel.probe(x=c)
+                return c, None
+
+            x, _ = scalpel.scan_with_counters(layer, x, None, length=k)
+            for i in range(15):
+                with scalpel.function(f"aux{i}"):
+                    scalpel.probe(x=x)
+            return x
+
+        # manual baseline: the deprecated hand-threaded path, threaded and
+        # donated exactly like the pre-Monitor train loop donated its
+        # counter-carrying TrainState
+        def man_step(x, s, mp):
+            with scalpel.collecting(spec, mp, s) as col:
+                y = work(x)
+            return y, s.add(col.delta)
+
+        f_man = jax.jit(man_step, donate_argnums=(1,))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            f_man(x0, CounterState.zeros(spec), mp)  # trace quietly
+
+        # wrapped path: one MonitorState pytree, leaf-wise jit boundary,
+        # state donated the same way (no telemetry ring here — the manual
+        # baseline carries none)
+        mon = scalpel.Monitor(spec, mp, counter_axes=())
+        f_wrap = mon.jit(work, donate_state=True)
+
+        def manual(s):
+            return f_man(x0, s, mp)[-1]
+
+        def wrapped(ms):
+            return f_wrap(ms, x0)[-1]
+
+        s_man = manual(CounterState.zeros(spec))
+        ms1 = wrapped(mon.init())
+        s_wrap = mon.counter_state(ms1)
+        allclose = bool(
+            np.allclose(np.asarray(s_wrap.values), np.asarray(s_man.values),
+                        rtol=1e-4, atol=1e-6, equal_nan=True)
+            and np.array_equal(np.asarray(s_wrap.samples),
+                               np.asarray(s_man.samples))
+            and np.array_equal(np.asarray(s_wrap.calls),
+                               np.asarray(s_man.calls))
+        )
+        # Single steps are ~0.3-1 ms here and a shared CPU host jitters
+        # per-dispatch by ±25%: time BLOCKS of back-to-back THREADED steps
+        # (state carried call to call, one block_until_ready at the end,
+        # donation live on both sides — the production steady state),
+        # alternate the order every round, and judge on the median of
+        # per-round block times — the long windows amortize scheduler
+        # noise below the effect size.
+        import statistics
+        import time as time_lib
+
+        def block_time(step, fresh, calls):
+            s = fresh()
+            for _ in range(3):
+                s = step(s)
+            jax.block_until_ready(s)
+            t0 = time_lib.perf_counter()
+            for _ in range(calls):
+                s = step(s)
+            jax.block_until_ready(s)
+            return (time_lib.perf_counter() - t0) / calls
+
+        built = {
+            "monitor_manual": (manual, lambda: CounterState.zeros(spec)),
+            "monitor_wrap": (wrapped, mon.init),
+        }
+        results = {m: [] for m in built}
+        order = list(built)
+        # steps here are sub-millisecond, so generous windows are cheap:
+        # ~40-step blocks x 2-3x the requested rounds keeps the median
+        # stable against minute-scale drift on a shared host
+        block = max(40, iters * 6)
+        for rnd in range(max(10, rounds * 2)):
+            for m in (order if rnd % 2 == 0 else reversed(order)):
+                step, fresh = built[m]
+                results[m].append(block_time(step, fresh, block))
+        med = {m: statistics.median(results[m]) for m in built}
+        best = {m: min(results[m]) for m in built}
+        # The VERDICT is the median of per-round PAIRED ratios: the two
+        # blocks of a round run back-to-back, so minute-scale host drift
+        # (which moves absolute medians by ±15% between trials) hits both
+        # sides of each ratio almost equally and cancels.
+        ratios = [w / m for w, m in zip(results["monitor_wrap"],
+                                        results["monitor_manual"])]
+        med_ratio = statistics.median(ratios)
+        workload = f"monitor n={n}"
+        kib = n * 4 // 1024
+        rows.append({
+            "workload": workload, "case": "monitor_manual",
+            "min_ms": round(best["monitor_manual"] * 1e3, 3),
+            "med_ms": round(med["monitor_manual"] * 1e3, 3),
+            "calls": k, "probe_size": n, "probe_kib": kib,
+            "state_lanes": spec.n_scopes * spec.max_slots,
+        })
+        rows.append({
+            "workload": workload, "case": "monitor_wrap",
+            "min_ms": round(best["monitor_wrap"] * 1e3, 3),
+            "med_ms": round(med["monitor_wrap"] * 1e3, 3),
+            "calls": k, "probe_size": n, "probe_kib": kib,
+            "state_lanes": lay.total,
+            "manual_med_ms": round(med["monitor_manual"] * 1e3, 3),
+            "wrap_over_manual_ratio": round(med_ratio, 4),
+            "wrap_gain_pct": round(100.0 * (1.0 - med_ratio), 1),
+            "wrap_allclose": allclose,
+        })
+    return rows
+
+
+_PSUM_2DEV_SCRIPT = r"""
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as scalpel
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.dist.partition import sharding_ctx
+
+assert jax.device_count() == 2, jax.devices()
+EVENTS = %r
+spec = MonitorSpec.of([
+    ScopeContext.exhaustive("hot", [EventSpec(e, "x") for e in EVENTS]),
+])
+
+
+def work(x):
+    with scalpel.function("hot"):
+        x = x * 1.0001 + 0.1
+        scalpel.probe(x=x)
+    return x
+
+
+from jax.sharding import PartitionSpec as P
+
+mon = scalpel.Monitor(spec)
+mesh = jax.make_mesh((2,), ("data",))
+with sharding_ctx(mesh):
+    step = jax.jit(mon.shard_wrap(work, mesh, in_specs=P("data"),
+                                  out_specs=P("data")))
+    x = jnp.arange(8192.0) / 8192.0
+    out, ms = step(mon.init(), x)
+
+# per-shard manual baseline, summed on the host
+mon1 = scalpel.Monitor(spec, counter_axes=())
+w1 = mon1.wrap(work)
+a = mon1.init()
+b = mon1.init()
+_, a = w1(a, x[:4096])
+_, b = w1(b, x[4096:])
+calls = np.asarray(a.calls) + np.asarray(b.calls)
+values = np.asarray(a.values) + np.asarray(b.values)
+samples = np.asarray(a.samples) + np.asarray(b.samples)
+print(json.dumps({
+    "devices": jax.device_count(),
+    "counters_equal": bool(
+        np.array_equal(np.asarray(ms.calls), calls)
+        and np.array_equal(np.asarray(ms.values), values)
+        and np.array_equal(np.asarray(ms.samples), samples)
+    ),
+    "psum_calls": np.asarray(ms.calls).tolist(),
+    "shard_sum_calls": calls.tolist(),
+}))
+"""
+
+
+def run_monitor_psum_check() -> list[dict]:
+    """The 2-device forced-host acceptance check: a ``shard_wrap``-ped step
+    on a (2,) data mesh must produce counters EXACTLY equal to the sum of
+    two per-shard manual runs — ScALPEL reports become cluster-wide sums.
+
+    Runs in a subprocess because the forced device count must be set
+    before JAX initializes.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in sys.path if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _PSUM_2DEV_SCRIPT % (PROBE_EVENTS,)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    row = {"workload": "monitor 2dev", "case": "monitor_psum_2dev"}
+    if proc.returncode != 0:
+        row.update(error=proc.stderr[-1000:], counters_equal=False)
+        return [row]
+    row.update(json.loads(proc.stdout.strip().splitlines()[-1]))
+    return [row]
+
+
+def _monitor_summary(rows: list[dict]) -> dict:
+    """Aggregate Monitor.wrap vs manual verdicts for the trajectory JSON."""
+    wrap = [r for r in rows if r.get("case") == "monitor_wrap"]
+    psum = [r for r in rows if r.get("case") == "monitor_psum_2dev"]
+    return {
+        "compared": len(wrap),
+        "wrap_not_slower": sum(
+            1 for r in wrap if r["wrap_over_manual_ratio"] <= 1.0
+        ),
+        # the honest verdict on a noisy shared host: the paired-ratio
+        # medians repeatedly land within ~±3% of 1.0 (the wrapped step's
+        # compiled module is strictly SMALLER — ~14% fewer HLO ops — but
+        # both are dominated by the identical probe sweeps)
+        "wrap_parity_3pct": all(
+            r["wrap_over_manual_ratio"] <= 1.03 for r in wrap
+        ),
+        "allclose_all": all(r.get("wrap_allclose", False) for r in wrap),
+        "max_gain_pct": max(
+            (r["wrap_gain_pct"] for r in wrap), default=None
+        ),
+        "psum_2dev_equal": bool(psum) and all(
+            r.get("counters_equal", False) for r in psum
+        ),
+    }
+
+
 def run_readback_sweep(hook_everys=(1, 4), depths=(4, 16), steps: int = 32,
                        rounds: int = 3, k: int = 16, probe_size: int = 4096):
     """Readback-stall sweep (telemetry plane): synchronous full-CounterState
@@ -521,7 +799,19 @@ def _readback_summary(rows: list[dict]) -> dict:
 
 def main(fast: bool = False):
     iters = 3 if fast else 5
-    rows = run_arch_workloads(iters=iters)
+    # the Monitor-vs-manual comparison runs FIRST, on a fresh process: the
+    # arch/callcount sweeps leave hundreds of live compiled executables
+    # behind, and the resulting allocator/cache pressure skews the tiny
+    # paired steps by ~10% (measured: in-driver-last ratios 1.03-1.13 vs
+    # fresh-process 0.83-1.04 for identical code).
+    rows = run_monitor_sweep(
+        probe_sizes=(1 << 12, 1 << 14),   # 16 and 64 KiB probes
+        k=12 if fast else 16,
+        iters=5 if fast else 7,
+        rounds=6 if fast else 8,
+    )
+    rows += run_monitor_psum_check()
+    rows += run_arch_workloads(iters=iters)
     # Fig. 3's axis spans tens to thousands of calls; full mode keeps the
     # 1024-call point (its 6-event unrolled graphs take minutes of XLA CPU
     # compile time, so fast/CI mode stops at 256).
@@ -558,6 +848,14 @@ def main(fast: bool = False):
               "baseline (probe-plan compiler)",
     ))
     print(fmt_table(
+        [r for r in rows if str(r.get("case", "")).startswith("monitor_")],
+        ["workload", "case", "min_ms", "med_ms", "state_lanes",
+         "manual_med_ms", "wrap_gain_pct", "wrap_allclose",
+         "counters_equal"],
+        title="Functional Monitor.wrap (one compact MonitorState pytree) "
+              "vs manual collecting() baseline + 2-device psum check",
+    ))
+    print(fmt_table(
         [r for r in rows if str(r.get("case", "")).startswith("readback_")],
         ["workload", "case", "hook_every", "ring_depth", "min_ms",
          "per_step_us", "readback_gain_pct", "readback_allclose",
@@ -569,6 +867,8 @@ def main(fast: bool = False):
     # perfmon case)
     by = {}
     for r in rows:
+        if "min_ms" not in r:   # e.g. the subprocess psum-equality row
+            continue
         by.setdefault(r["workload"], {})[r["case"]] = r["min_ms"]
     hier = {w: c for w, c in by.items() if "perfmon" in c}
     ok = sum(
@@ -577,7 +877,15 @@ def main(fast: bool = False):
     )
     plans = _plan_summary(rows)
     readback = _readback_summary(rows)
+    monitor = _monitor_summary(rows)
     print(f"\nhierarchy check: perfmon slowest in {ok}/{len(hier)} workloads")
+    print(
+        f"Monitor.wrap vs manual: not-slower in "
+        f"{monitor['wrap_not_slower']}/{monitor['compared']} configs "
+        f"(max gain {monitor['max_gain_pct']}%); counters allclose: "
+        f"{monitor['allclose_all']}; 2-device psum == per-shard sum: "
+        f"{monitor['psum_2dev_equal']}"
+    )
     print(
         f"per-set plans vs union: faster in {plans['per_set_faster']}/"
         f"{plans['compared']} configs "
@@ -592,7 +900,7 @@ def main(fast: bool = False):
         f"drained counters allclose: {readback['allclose_all']}"
     )
     return {
-        "schema": "scalpel-overhead-v4",
+        "schema": "scalpel-overhead-v5",
         "backend": jax.default_backend(),
         "probe_events": list(PROBE_EVENTS),
         "plan_sets": [list(s) for s in PLAN_SETS],
@@ -604,6 +912,7 @@ def main(fast: bool = False):
             for w, cs in by.items() if cs.get("vanilla")
         },
         "plans": plans,
+        "monitor": monitor,
         "readback": readback,
         "hierarchy_ok": ok,
     }

@@ -30,6 +30,7 @@ def _write_overhead_json(payload: dict) -> None:
         json.dump(payload, f, indent=1, default=float)
     print(f"\nwrote {OVERHEAD_JSON} "
           f"(plans: {payload.get('plans')}; "
+          f"monitor: {payload.get('monitor')}; "
           f"readback: {payload.get('readback')})")
 
 

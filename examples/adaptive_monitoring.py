@@ -18,6 +18,11 @@ sweeps only what its ACTIVE set needs on each call, and
 ``runtime.plan_fingerprint`` is printed before and after the reload to
 attest that no re-trace happened.
 
+Under the hood the train loop threads ONE functional ``MonitorState``
+pytree (scalpel.Monitor): compact counters, the telemetry ring, the step
+stamp, and the reloaded MonitorParams all ride the same carried state —
+the reconfigurations land as reference swaps into that pytree.
+
     PYTHONPATH=src python examples/adaptive_monitoring.py
 """
 import os

@@ -6,7 +6,10 @@
 2. Discover the compile-time scope set (the '-finstrument-functions' pass).
 3. Inspect the compiled probe plans (what each event set will actually
    sweep — core/plan.py).
-4. Pick a runtime subset + events; run; read the per-scope report.
+4. Wrap the step with the functional Monitor: ONE MonitorState pytree
+   threads compact counters + step stamp through jit — no hand-threaded
+   ``state = state.add(col.delta)`` anywhere.
+5. Pick a runtime subset; run; read the per-scope report.
 """
 import jax
 
@@ -35,40 +38,41 @@ def main():
     print(spec.describe())
 
     # -- 2b. the compiled probe plans: per (scope, event set), exactly the
-    # raw channels that set sweeps per probed tensor.  The fingerprint is
-    # the attestation that the runtime reconfig below re-selects among
+    # raw channels that set sweeps per probed tensor (identical sweeps
+    # share one switch branch body — see 'plans_deduped').  The fingerprint
+    # is the attestation that the runtime reconfig below re-selects among
     # these plans instead of re-tracing.
     print("\ncompiled probe plans:")
     print(scalpel.describe_plans(spec))
     print(f"plan fingerprint: {spec.fingerprint[:12]}")
 
-    # -- 3. runtime subset: monitor only attention scopes ------------------
+    # -- 3. the functional Monitor: wrap the step once, thread ONE pytree -
+    # monitor only attention scopes to start (the runtime subset)
     attn_scopes = [s for s in spec.scopes if s.endswith("attn")]
-    mparams = scalpel.MonitorParams.selective(spec, attn_scopes)
-    state = scalpel.CounterState.zeros(spec)
-
-    @jax.jit
-    def step(params, batch, state, mparams):
-        with scalpel.collecting(spec, mparams, state) as col:
-            loss = arch.loss_fn(params, batch)
-        return loss, state.add(col.delta)
+    mon = scalpel.Monitor(
+        spec, scalpel.MonitorParams.selective(spec, attn_scopes)
+    )
+    step = jax.jit(mon.wrap(lambda b: arch.loss_fn(params, b)))
+    mstate = mon.init()
 
     for _ in range(3):
-        loss, state = step(params, batch, state, mparams)
+        loss, mstate = step(mstate, batch)
 
-    # -- 4. report (paper: stdout on termination) ---------------------------
+    # -- 4. report (paper: stdout on termination) — reports read the
+    # compact counter lanes directly; no padded block is ever built
     print(f"\nloss={float(loss):.4f}")
-    print(scalpel.format_text(scalpel.build(spec, state)))
+    print(mon.report(mstate))
 
-    # flipping the monitored subset is a data swap — NO recompile; the
-    # compiled plans (and their fingerprint) are untouched:
-    mparams = scalpel.MonitorParams.selective(
+    # flipping the monitored subset is a data swap riding IN the state
+    # pytree — NO recompile; the compiled plans (and their fingerprint)
+    # are untouched:
+    mstate = mon.sync(mstate, params=scalpel.MonitorParams.selective(
         spec, [s for s in spec.scopes if s.endswith("mlp")]
-    )
-    loss, state = step(params, batch, state, mparams)  # same compiled step
+    ))
+    loss, mstate = step(mstate, batch)  # same compiled step
     print("\nafter runtime reconfig to mlp scopes (no re-trace, plan "
           f"fingerprint still {spec.fingerprint[:12]}):")
-    print(scalpel.format_text(scalpel.build(spec, state)))
+    print(mon.report(mstate))
 
 
 if __name__ == "__main__":

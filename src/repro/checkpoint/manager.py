@@ -158,6 +158,14 @@ class CheckpointManager:
                           ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
+    def metadata(self, step: int) -> dict:
+        """The checkpoint's manifest alone — readable BEFORE committing to
+        a tensor restore, so resume-time validity checks (e.g. the monitor
+        plan-fingerprint attestation) can fail with a real diagnostic
+        instead of a shape mismatch mid-restore."""
+        with open(os.path.join(self.dir, f"step_{step}", "meta.json")) as f:
+            return json.load(f)
+
     def restore(self, step: int, like, mesh=None, axes=None):
         path = os.path.join(self.dir, f"step_{step}", "state.npz")
         tree = restore_tree(path, like, mesh=mesh, axes=axes)

@@ -2,15 +2,19 @@
 
 Public API (see DESIGN.md §2 for the paper mapping):
 
-    spec     = scalpel.MonitorSpec / spec_from_mapping / spec_from_discovery
-    params   = scalpel.MonitorParams.all_on(spec) / .selective(...)
-    state    = scalpel.CounterState.zeros(spec)
+    spec    = scalpel.MonitorSpec / spec_from_mapping / spec_from_discovery
+    mon     = scalpel.Monitor(spec, params, telemetry=...)
+    step    = mon.wrap(step_fn)          # or @scalpel.monitored(spec)
+    mstate  = mon.init()
 
-    with scalpel.collecting(spec, params, state) as col:
-        ... model code calling scalpel.function(...) / scalpel.probe(...) ...
-    state = state.add(col.delta)
+    out, mstate = jax.jit(step)(mstate, *args)   # one pytree, compact
+    print(mon.report(mstate))                    # counters read directly
 
-    runtime  = scalpel.ScalpelRuntime(spec, config_path=..., install_signal=True)
+    runtime = scalpel.ScalpelRuntime(spec, config_path=..., install_signal=True)
+
+The legacy hand-threaded region API (``collecting`` + ``state.add(col.delta)``)
+is DEPRECATED — it survives as a shim over ``Monitor.open``; see the README
+migration table.
 """
 from .config_file import (  # noqa: F401
     ConfigError,
@@ -50,6 +54,7 @@ from .instrument import (  # noqa: F401
     scan_with_counters,
     spec_from_discovery,
 )
+from .monitor import Monitor, MonitorState, monitored  # noqa: F401
 from .plan import (  # noqa: F401
     CompactDelta,
     MomentPlan,

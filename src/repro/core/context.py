@@ -189,6 +189,21 @@ class MonitorSpec:
         return MonitorSpec(contexts=tuple(out))
 
     @property
+    def layout(self):
+        """The spec-wide dense slot layout (plan.SlotLayout) — the lane
+        order every compact counter carrier (MonitorState, CompactDelta,
+        compact telemetry rings) uses."""
+        from . import plan as plan_lib  # lazy: plan imports this module
+
+        return plan_lib.spec_layout(self)
+
+    def slot_lane(self, scope: str, slot_id: str) -> int:
+        """Flat dense-layout lane of one slot — index straight into a
+        compact carrier's ``values``/``samples`` vectors."""
+        si = self.scope_index(scope)
+        return self.layout.offsets[si] + self.slot_index(scope, slot_id)
+
+    @property
     def fingerprint(self) -> str:
         """Stable hash over this spec's compiled probe plans (plan.py).
 

@@ -72,6 +72,29 @@ class CounterState:
             samples=jax.lax.psum(self.samples, axis_names),
         )
 
+    # -- the padded block is a VIEW over the compact dense layout ---------
+    # (the Monitor API threads counters compactly end-to-end; these
+    # conversions are the interop seam for code that still wants the
+    # [n_scopes, max_slots] block)
+    def compact(self, spec: MonitorSpec):
+        """Gather into the spec-wide dense layout (plan.CompactDelta)."""
+        from . import plan as plan_lib
+
+        return plan_lib.CompactDelta.compress(spec, self)
+
+    @staticmethod
+    def from_compact(spec: MonitorSpec, compact) -> "CounterState":
+        """Expand a compact carrier (CompactDelta / MonitorState counters)
+        back into the padded-block view."""
+        from . import plan as plan_lib
+
+        if not isinstance(compact, plan_lib.CompactDelta):
+            compact = plan_lib.CompactDelta(
+                calls=compact.calls, values=compact.values,
+                samples=compact.samples,
+            )
+        return compact.expand(spec)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass

@@ -8,7 +8,9 @@ multiplex schedule is decided by the MonitorSpec/MonitorParams, not the model.
 
 Execution model
 ---------------
-* ``collecting(spec, params, state)`` opens a root Collector for a step.
+* ``monitor.Monitor.wrap`` (the public API) — or the DEPRECATED
+  ``collecting(spec, params, state)`` shim — opens a root Collector for a
+  step.
 * ``function(name)`` pushes a scope; entering a scope that is in the
   compile-time set increments its call counter *in-graph* (interception).
 * ``probe(**tensors)`` evaluates the current scope's context: a ``lax.cond``
@@ -186,10 +188,13 @@ class Collector:
             return
         w = plans.width
 
-        def _set_branch(k: int):
-            pl = plans.plans[k]
-
-            def br(ts):
+        def _body_branch(pl):
+            # ``pl`` is a deduped branch BODY: it fixes the computation
+            # (slot events, exact sweeps) while the scatter indices arrive
+            # as data (``midx``), so sets that do identical work over
+            # different slots share one traced branch.
+            def br(ops):
+                ts, midx = ops
                 vals = jnp.zeros((w,), jnp.float32)
                 smp = jnp.zeros((w,), jnp.int32)
                 if not pl.slots:
@@ -213,7 +218,7 @@ class Collector:
                     else:
                         vs.append(events_lib.compute(ctx.slots[s.index], ts))
                 # one batched scatter over the set's live-slot footprint
-                idxs = jnp.asarray(pl.members, jnp.int32)
+                idxs = midx[: len(pl.slots)]
                 sms = params.slot_mask[idx, idxs]
                 vals = vals.at[idxs].set(jnp.stack(vs) * sms)
                 smp = smp.at[idxs].set((sms > 0).astype(jnp.int32))
@@ -223,10 +228,18 @@ class Collector:
 
         def _monitored(ts):
             if ctx.n_sets == 1:
-                return _set_branch(0)(ts)
+                pl = plans.plans[0]
+                midx = jnp.asarray(pl.members, jnp.int32)
+                return _body_branch(pl)((ts, midx))
             set_idx = (calls_here // jnp.maximum(params.period[idx], 1)) % ctx.n_sets
+            midx = jnp.asarray(plans.member_table, jnp.int32)[set_idx]
+            if plans.n_branches == 1:
+                # every set runs the same body; only the scatter footprint
+                # (already selected into ``midx``) differs — no switch at all
+                return _body_branch(plans.bodies[0])((ts, midx))
+            bidx = jnp.asarray(plans.branch_index, jnp.int32)[set_idx]
             return jax.lax.switch(
-                set_idx, [_set_branch(k) for k in range(ctx.n_sets)], ts
+                bidx, [_body_branch(b) for b in plans.bodies], (ts, midx)
             )
 
         def _skipped(ts):
@@ -240,8 +253,14 @@ class Collector:
         self._smps.setdefault(idx, []).append(smp)
         self._final = None
 
-    def ingest(self, delta: CounterState) -> None:
-        """Fold a child region's delta (e.g. a scan's summed carry)."""
+    def ingest(self, delta) -> None:
+        """Fold a child region's delta (e.g. a scan's summed carry).
+
+        Accepts either layout — a padded ``CounterState`` or a compact
+        ``plan.CompactDelta`` — and defers the conversion to whichever
+        finalization runs: ``compact_delta()`` keeps compact ingests
+        compact (a scan feeding a Monitor-wrapped step never touches the
+        padded block), while ``delta`` expands them once."""
         self._ingested.append(delta)
         self._final = None
 
@@ -270,6 +289,8 @@ class Collector:
             samples = samples.at[idx, : tot.shape[0]].add(tot)
         d = CounterState(calls=calls, values=values, samples=samples)
         for ing in self._ingested:
+            if isinstance(ing, plan_lib.CompactDelta):
+                ing = ing.expand(self.spec)
             d = d.add(ing)
         self._final = d
         return d
@@ -304,7 +325,9 @@ class Collector:
             samples = samples.at[off : off + tot.shape[0]].add(tot)
         d = plan_lib.CompactDelta(calls=calls, values=values, samples=samples)
         for ing in self._ingested:
-            d = d.add(plan_lib.CompactDelta.compress(self.spec, ing))
+            if not isinstance(ing, plan_lib.CompactDelta):
+                ing = plan_lib.CompactDelta.compress(self.spec, ing)
+            d = d.add(ing)
         return d
 
 
@@ -360,23 +383,37 @@ class DiscoveryCollector:
 def collecting(spec: MonitorSpec, params: MonitorParams,
                state: CounterState | None = None, *,
                plan_mode: str = "per_set"):
-    """Open a root collection region; yields the Collector.
+    """DEPRECATED: open a root collection region; yields the Collector.
+
+    This is the legacy hand-threaded API — every call site must fold
+    ``col.delta`` into its own carried CounterState.  New code should use
+    the functional ``scalpel.Monitor`` transformation (core/monitor.py):
+    ``mon.wrap(step_fn)`` threads one MonitorState pytree (compact
+    counters, telemetry ring, step stamp, params) automatically and
+    cross-device-reduces over the mesh.  ``collecting`` survives as a thin
+    shim over ``Monitor.open`` for existing call sites and as the manual
+    baseline the overhead benchmark measures ``Monitor.wrap`` against; see
+    the migration table in README.md.
 
     ``state`` supplies the call-count base so multiplex schedules continue
-    across steps; pass the carried CounterState of the training loop.
-    ``plan_mode="union"`` compiles every event set against the cross-set
-    channel union (the pre-plan probe behaviour) — the baseline the
-    overhead benchmark's plan sweep measures against, not a hot path.
+    across steps.  ``plan_mode="union"`` compiles every event set against
+    the cross-set channel union (the pre-plan probe behaviour) — the
+    benchmark baseline, not a hot path.
     """
-    base = state.calls if state is not None else jnp.zeros(
-        (spec.n_scopes,), jnp.int32
+    import warnings
+
+    from . import monitor as monitor_lib
+
+    warnings.warn(
+        "scalpel.collecting() is deprecated; use scalpel.Monitor(spec).wrap"
+        "(step_fn) (or @scalpel.monitored) — see the README migration table",
+        DeprecationWarning, stacklevel=3,
     )
-    col = Collector(spec, params, calls_base=base, plan_mode=plan_mode)
-    _stack().append(col)
-    try:
+    mon = monitor_lib.Monitor(spec, params=params, counter_axes=(),
+                              plan_mode=plan_mode)
+    with mon.open(params, calls_base=state.calls if state is not None
+                  else None) as col:
         yield col
-    finally:
-        _stack().pop()
 
 
 @contextlib.contextmanager
@@ -562,7 +599,10 @@ def scan_with_counters(body: Callable, init, xs, length: int | None = None,
         wrapped, (init, plan_lib.CompactDelta.zeros(spec)), xs,
         length=length, unroll=unroll,
     )
-    col.ingest(dtotal.expand(spec))
+    # ingest the summed carry in COMPACT form: a collector finalized
+    # compactly (Monitor.wrap) never materializes the padded block at all;
+    # the legacy padded delta expands it once here instead.
+    col.ingest(dtotal)
     return out, ys
 
 

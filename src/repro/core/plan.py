@@ -104,19 +104,52 @@ class MomentPlan:
 
 @dataclasses.dataclass(frozen=True)
 class ScopePlans:
-    """Per-scope bundle: one MomentPlan per event set + the branch width."""
+    """Per-scope bundle: one MomentPlan per event set + the branch width.
+
+    ``bodies``/``branch_index`` carry the *deduplicated* branch table: sets
+    whose plans perform identical work — same slot events in the same order,
+    same exact channel sweeps — share ONE ``lax.switch`` branch body; only
+    the scatter footprint (the member indices) differs between them and is
+    threaded through the switch as data.  Compile time per scope grows with
+    ``n_branches``, not ``n_sets``.
+    """
 
     scope: str
     width: int                      # len(ctx.slots): the branch vector width
     plans: tuple[MomentPlan, ...]
+    # dedup table: branch_index[k] names the body plan set k executes
+    bodies: tuple[MomentPlan, ...] = ()
+    branch_index: tuple[int, ...] = ()
 
     @property
     def n_sets(self) -> int:
         return len(self.plans)
 
     @property
+    def n_branches(self) -> int:
+        return len(self.bodies)
+
+    @property
+    def plans_deduped(self) -> int:
+        """Event sets that reuse another set's branch body."""
+        return self.n_sets - self.n_branches
+
+    @property
     def any_live(self) -> bool:
         return any(p.slots for p in self.plans)
+
+    @property
+    def member_table(self) -> tuple[tuple[int, ...], ...]:
+        """Per-set member indices, zero-padded to the widest set.
+
+        The dynamic operand of the deduped switch: a shared branch body
+        reads its set's scatter indices from this table instead of baking
+        them in (``midx[:len(body.slots)]`` — the count is static per body).
+        """
+        w = max((len(p.members) for p in self.plans), default=0)
+        return tuple(
+            p.members + (0,) * (w - len(p.members)) for p in self.plans
+        )
 
 
 def _bind_tensor(spec, avail: frozenset | None) -> str:
@@ -189,8 +222,26 @@ def compile_scope_plans(
             MomentPlan(scope=ctx.scope, set_index=k, slots=tuple(slots),
                        sweeps=sweeps)
         )
+    # Dedup: two sets share a branch body iff they evaluate the same events
+    # over the same tensors with the same exact sweeps — everything except
+    # WHERE the results scatter, which the switch receives as data.
+    bodies: list[MomentPlan] = []
+    body_of: dict = {}
+    branch_index: list[int] = []
+    for p in plans:
+        key = (
+            tuple((ctx.slots[s.index], s.tensor, s.fused) for s in p.slots),
+            p.sweeps,
+        )
+        j = body_of.get(key)
+        if j is None:
+            j = len(bodies)
+            body_of[key] = j
+            bodies.append(p)
+        branch_index.append(j)
     return ScopePlans(
-        scope=ctx.scope, width=max(1, len(ctx.slots)), plans=tuple(plans)
+        scope=ctx.scope, width=max(1, len(ctx.slots)), plans=tuple(plans),
+        bodies=tuple(bodies), branch_index=tuple(branch_index),
     )
 
 
@@ -263,6 +314,22 @@ class CompactDelta:
             samples=self.samples + other.samples,
         )
 
+    def sub(self, other: "CompactDelta") -> "CompactDelta":
+        """Delta-decode (telemetry): counters accumulated since ``other``."""
+        return CompactDelta(
+            calls=self.calls - other.calls,
+            values=self.values - other.values,
+            samples=self.samples - other.samples,
+        )
+
+    def psum(self, axis_names) -> "CompactDelta":
+        """Cross-shard reduction over mapped mesh axes (shard_map/pmap)."""
+        return CompactDelta(
+            calls=jax.lax.psum(self.calls, axis_names),
+            values=jax.lax.psum(self.values, axis_names),
+            samples=jax.lax.psum(self.samples, axis_names),
+        )
+
     def expand(self, spec: MonitorSpec) -> CounterState:
         """Scatter the flat footprint back into a full CounterState."""
         lay = spec_layout(spec)
@@ -307,17 +374,21 @@ def describe_plans(spec: MonitorSpec, union: bool = False) -> str:
     """
     lay = spec_layout(spec)
     lines = []
+    deduped = 0
     for i, ctx in enumerate(spec.contexts):
         sp = compile_scope_plans(ctx, None, union)
+        deduped += sp.plans_deduped
         ids = ", ".join(ctx.slot_ids)
         lines.append(
             f"{ctx.scope}: width {len(ctx.slots)}, {sp.n_sets} set(s), "
+            f"{sp.n_branches} branch bodies, "
             f"footprint [{lay.offsets[i]}:{lay.offsets[i] + lay.widths[i]}]"
             f" slots [{ids}]"
         )
-        for p in sp.plans:
-            lines.append("  " + p.describe())
+        for k, p in enumerate(sp.plans):
+            lines.append(f"  {p.describe()} [body {sp.branch_index[k]}]")
     lines.append(f"total live footprint: {lay.total} slot(s)")
+    lines.append(f"plans_deduped: {deduped}")
     return "\n".join(lines)
 
 

@@ -17,7 +17,6 @@ import numpy as np
 
 from . import events as events_lib
 from .context import MonitorSpec
-from .counters import CounterState
 
 
 @dataclasses.dataclass
@@ -41,17 +40,35 @@ class ScopeReport:
     slots: list[SlotReport]
 
 
-def build(spec: MonitorSpec, state: CounterState) -> list[ScopeReport]:
+def build(spec: MonitorSpec, state) -> list[ScopeReport]:
+    """Per-scope reports from any counter carrier.
+
+    Accepts the legacy padded ``CounterState`` ([n_scopes, max_slots]
+    values) or any compact dense-layout carrier — ``plan.CompactDelta``,
+    ``MonitorState``, drained compact telemetry snapshots — whose flat
+    ``values``/``samples`` lanes are read DIRECTLY through the spec's
+    ``SlotLayout``: no expansion to the padded block anywhere on the
+    reporting path.
+    """
     calls = np.asarray(state.calls)
     values = np.asarray(state.values)
     samples = np.asarray(state.samples)
+    offsets = None
+    if values.ndim == 1:  # compact dense layout
+        from . import plan as plan_lib
+
+        offsets = plan_lib.spec_layout(spec).offsets
     out: list[ScopeReport] = []
     for si, ctx in enumerate(spec.contexts):
         srs: list[SlotReport] = []
         for i, slot in enumerate(ctx.slots):
             kind = events_lib.kind_of(slot)
-            raw = float(values[si, i])
-            smp = int(samples[si, i])
+            if offsets is not None:
+                raw = float(values[offsets[si] + i])
+                smp = int(samples[offsets[si] + i])
+            else:
+                raw = float(values[si, i])
+                smp = int(samples[si, i])
             c = int(calls[si])
             if smp == 0:
                 est = float("nan")
@@ -157,8 +174,9 @@ def write_jsonl(path: str, step: int, reports: list[ScopeReport]) -> None:
         w.write(step, reports)
 
 
-def estimates(spec: MonitorSpec, state: CounterState) -> dict[str, dict[str, float]]:
-    """{scope: {slot_id: exhaustive estimate}} — handy for assertions."""
+def estimates(spec: MonitorSpec, state) -> dict[str, dict[str, float]]:
+    """{scope: {slot_id: exhaustive estimate}} — handy for assertions.
+    ``state``: any carrier ``build`` accepts (padded or compact)."""
     return {
         r.scope: {s.slot_id: s.estimate for s in r.slots}
         for r in build(spec, state)

@@ -59,6 +59,7 @@ class ScalpelRuntime:
         self.jsonl_path = jsonl_path
         self._hooks: list[Callable] = []
         self._step = 0
+        self._closed = False
         self.state = CounterState.zeros(spec)
         self.reload_count = 0
         self.last_reload_errors: list[str] = []
@@ -133,9 +134,12 @@ class ScalpelRuntime:
         self.telemetry.set_cadence(max(1, int(n)))
 
     # -- step bookkeeping ---------------------------------------------------
-    def on_step(self, new_state: CounterState,
+    def on_step(self, new_state,
                 ring: telemetry_lib.SnapshotRing | None = None) -> None:
         """Record a step's carried state — no host synchronization.
+
+        ``new_state``: the padded CounterState or any compact carrier
+        (``MonitorState.counters``) — reports read either layout directly.
 
         ``ring``: the loop-carried SnapshotRing if the jitted step appends
         in-graph (train/loop.py, serve/engine.py); its buffers are handed to
@@ -184,8 +188,40 @@ class ScalpelRuntime:
             fn(self, reports)
 
     def close(self) -> None:
-        """Stop the drain thread and flush/close every sink."""
+        """Stop the drain thread and flush/close every sink.
+
+        Idempotent: a second close is a no-op, and the ``report_at_exit``
+        atexit hook skips after an explicit close — without the guard the
+        exit path re-flushed already-closed sinks (double-flush)."""
+        if self._closed:
+            return
+        self._closed = True
         self.telemetry.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    # -- checkpoint attestation (plan identity across restarts) -----------
+    def save_metadata(self) -> dict:
+        """Metadata for checkpoint manifests: which compiled probe plans
+        produced the counters being saved."""
+        return {
+            "plan_fingerprint": self.spec.fingerprint,
+            "n_scopes": self.spec.n_scopes,
+        }
+
+    def check_resume_metadata(self, meta: dict | None, strict: bool = True):
+        """Resume-time plan check: raise (or warn, ``strict=False``) when a
+        checkpoint's counters were produced by different compiled plans
+        than the live spec.  Returns True on match, None when the metadata
+        predates fingerprinting (one shared implementation —
+        ``monitor.check_plan_metadata`` — backs this and
+        ``Monitor.check_resume``)."""
+        from .monitor import check_plan_metadata
+
+        return check_plan_metadata(self.spec.fingerprint, meta,
+                                   strict=strict)
 
     # -- host-side wall-clock context (host_time backend feed) --------------
     def time_block(self, name: str):
@@ -211,8 +247,12 @@ class ScalpelRuntime:
     def report(self, title: str = "ScALPEL report") -> str:
         return report_lib.format_text(self.snapshot(), title=title)
 
-    def _exit_report(self) -> None:  # pragma: no cover - atexit path
+    def _exit_report(self) -> None:
+        if self._closed:
+            # an explicit close() already flushed and closed the sinks; the
+            # atexit pass must not re-drive them
+            return
         try:
             print(self.report())
-        except Exception:
+        except Exception:  # pragma: no cover - atexit robustness
             pass

@@ -80,13 +80,20 @@ class TelemetryParams:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SnapshotRing:
-    """Device-side ring of CounterState snapshots + step stamps.
+    """Device-side ring of counter snapshots + step stamps.
 
-    steps     [depth]                    i32 — step stamp per slot (-1 empty)
-    calls     [depth, n_scopes]          i32
-    values    [depth, n_scopes, slots]   f32
-    samples   [depth, n_scopes, slots]   i32
-    last      CounterState — O(1) mirror of the NEWEST snapshot
+    The ring is generic over the counter pytree it snapshots — anything with
+    ``calls``/``values``/``samples`` leaves: the legacy padded
+    ``CounterState`` ([n_scopes, max_slots] values) or the compact
+    dense-layout ``plan.CompactDelta`` ([total] lanes) that ``Monitor``
+    threads, in which case telemetry snapshots stay compact end-to-end and
+    reports read the dense layout directly.
+
+    steps     [depth]                 i32 — step stamp per slot (-1 empty)
+    calls     [depth, *calls_shape]   i32
+    values    [depth, *values_shape]  f32
+    samples   [depth, *samples_shape] i32
+    last      counter pytree — O(1) mirror of the NEWEST snapshot
     last_step scalar i32 — step stamp of ``last``
     head      scalar i32 — total writes ever (monotonic; slot = seq % depth)
 
@@ -110,42 +117,64 @@ class SnapshotRing:
     head: Array
 
     @staticmethod
-    def zeros(spec: MonitorSpec, depth: int = 8) -> "SnapshotRing":
-        d, n, m = int(depth), spec.n_scopes, spec.max_slots
+    def for_counters(counters, depth: int = 8) -> "SnapshotRing":
+        """A ring templated on an arbitrary counter pytree (zeroed)."""
+        d = int(depth)
         if d < 1:
             raise ValueError(f"ring depth must be >= 1, got {depth}")
+        zero = jax.tree.map(jnp.zeros_like, counters)
+        stack = jax.tree.map(
+            lambda x: jnp.zeros((d,) + x.shape, x.dtype), zero
+        )
         return SnapshotRing(
             steps=jnp.full((d,), -1, jnp.int32),
-            calls=jnp.zeros((d, n), jnp.int32),
-            values=jnp.zeros((d, n, m), jnp.float32),
-            samples=jnp.zeros((d, n, m), jnp.int32),
-            last=CounterState.zeros(spec),
+            calls=stack.calls,
+            values=stack.values,
+            samples=stack.samples,
+            last=zero,
             last_step=jnp.full((), -1, jnp.int32),
             head=jnp.zeros((), jnp.int32),
+        )
+
+    @staticmethod
+    def zeros(spec: MonitorSpec, depth: int = 8) -> "SnapshotRing":
+        """Legacy padded template ([n_scopes, max_slots] CounterState)."""
+        return SnapshotRing.for_counters(CounterState.zeros(spec), depth)
+
+    @staticmethod
+    def zeros_compact(spec: MonitorSpec, depth: int = 8) -> "SnapshotRing":
+        """Compact dense-layout template (what ``Monitor`` states carry)."""
+        from . import plan as plan_lib
+
+        return SnapshotRing.for_counters(
+            plan_lib.CompactDelta.zeros(spec), depth
         )
 
     @property
     def depth(self) -> int:
         return int(self.steps.shape[0])
 
-    def slot_state(self, slot: int) -> CounterState:
-        """The CounterState stored in ring slot ``slot`` (host or device)."""
-        return CounterState(
+    def slot_state(self, slot: int):
+        """The counter pytree stored in ring slot ``slot`` (host or device),
+        of the same type as the ring's template."""
+        return type(self.last)(
             calls=self.calls[slot],
             values=self.values[slot],
             samples=self.samples[slot],
         )
 
 
-def ring_append(ring: SnapshotRing, counters: CounterState,
+def ring_append(ring: SnapshotRing, counters,
                 tparams: TelemetryParams, step) -> SnapshotRing:
     """``lax.cond``-guarded ring append — pure device work, jit/scan safe.
 
-    Writes a snapshot of ``counters`` stamped ``step`` when ``step`` is a
-    multiple of the (dynamic) cadence; otherwise a no-op.  ``step`` is a
-    traced i32 scalar (e.g. ``tstate.step + 1``), so neither the cadence nor
-    the step value ever re-traces the caller.  Besides the ring slot, the
-    O(1) ``last`` mirror is refreshed — the drain's one-slot fast path.
+    Writes a snapshot of ``counters`` (any counter pytree matching the
+    ring's template — CounterState or compact CompactDelta) stamped
+    ``step`` when ``step`` is a multiple of the (dynamic) cadence;
+    otherwise a no-op.  ``step`` is a traced i32 scalar (e.g.
+    ``tstate.step + 1``), so neither the cadence nor the step value ever
+    re-traces the caller.  Besides the ring slot, the O(1) ``last`` mirror
+    is refreshed — the drain's one-slot fast path.
     """
     step = jnp.asarray(step, jnp.int32)
     cadence = jnp.maximum(tparams.cadence, 1)
@@ -178,15 +207,17 @@ def ring_append(ring: SnapshotRing, counters: CounterState,
 class TelemetrySnapshot:
     """One drained ring slot, delta-decoded against its predecessor.
 
-    state/delta are host (numpy) CounterStates: ``state`` is the cumulative
-    counters at ``step``; ``delta`` is the increment since the previously
-    drained snapshot (== ``state`` for the first one).
+    state/delta are host (numpy) counter pytrees — CounterState for legacy
+    padded rings, compact ``plan.CompactDelta`` for Monitor rings (reports
+    are built straight off the dense layout either way): ``state`` is the
+    cumulative counters at ``step``; ``delta`` is the increment since the
+    previously drained snapshot (== ``state`` for the first one).
     """
 
     step: int
     seq: int                    # monotonic ring sequence number
-    state: CounterState
-    delta: CounterState
+    state: Any
+    delta: Any
     spec: MonitorSpec
 
     def __post_init__(self):
@@ -340,8 +371,20 @@ class TelemetryPlane:
         self.sinks.append(sink)
         return sink
 
-    def make_ring(self) -> SnapshotRing:
+    def _reset_epoch(self) -> None:
+        """Drain pending slots, then reset the drain cursor + delta base."""
+        self._drain_once()
+        with self._lock:
+            self._ring = None
+            self._own_ring = None
+            self._drained_head = 0
+            self._prev_state = None
+
+    def make_ring(self, compact: bool = False) -> SnapshotRing:
         """A fresh device ring for loops that carry it through their step.
+
+        ``compact=True`` templates the ring on the spec's dense slot layout
+        (what ``Monitor`` states carry) instead of the padded CounterState.
 
         Starts a new ring *epoch*: pending slots of the previously published
         ring are drained first, then the drain cursor and delta base reset —
@@ -350,12 +393,9 @@ class TelemetryPlane:
         lineage at a time; producers that need independent lineages (e.g.
         two serve engines) should each own a runtime/plane.
         """
-        self._drain_once()
-        with self._lock:
-            self._ring = None
-            self._own_ring = None
-            self._drained_head = 0
-            self._prev_state = None
+        self._reset_epoch()
+        if compact:
+            return SnapshotRing.zeros_compact(self.spec, self.depth)
         return SnapshotRing.zeros(self.spec, self.depth)
 
     # -- producer side (step loop; never blocks on device) ----------------
@@ -372,11 +412,16 @@ class TelemetryPlane:
             self._ring = ring
         self._ensure_thread()
 
-    def append(self, counters: CounterState, step: int | None = None) -> None:
-        """Host-driven mode: dispatch a jitted ring append (async, device)."""
+    def append(self, counters, step: int | None = None) -> None:
+        """Host-driven mode: dispatch a jitted ring append (async, device).
+
+        The plane-owned ring is templated on the first ``counters`` pytree
+        appended (padded CounterState or compact), so either layout works.
+        """
         if self._own_ring is None:
-            # outside the lock: make_ring drains (its own locks) then resets
-            ring = self.make_ring()
+            # outside the lock: the reset drains (its own locks) first
+            self._reset_epoch()
+            ring = SnapshotRing.for_counters(counters, self.depth)
             with self._lock:
                 self._own_ring = ring
         with self._lock:
@@ -475,7 +520,7 @@ class TelemetryPlane:
             #     pending slots are the bulk of it anyway.
             out: list[TelemetrySnapshot] = []
 
-            def emit(seq: int, step_no: int, state: CounterState) -> None:
+            def emit(seq: int, step_no: int, state) -> None:
                 prev = self._prev_state
                 delta = state if prev is None else state.sub(prev)
                 snap = TelemetrySnapshot(
@@ -510,10 +555,11 @@ class TelemetryPlane:
                 calls_h = np.asarray(ring.calls)
                 values_h = np.asarray(ring.values)
                 samples_h = np.asarray(ring.samples)
+                mk = type(ring.last)  # ring template: padded or compact
                 for seq in range(first, head):
                     s = seq % depth  # host-side slicing of the host copy
-                    state = CounterState(calls=calls_h[s], values=values_h[s],
-                                         samples=samples_h[s])
+                    state = mk(calls=calls_h[s], values=values_h[s],
+                               samples=samples_h[s])
                     emit(seq, int(steps_h[s]), state)
                 self.slots_copied += depth
             self._drained_head = head

@@ -2,6 +2,8 @@
 from .partition import (  # noqa: F401
     DEFAULT_RULES,
     axis_size,
+    bound_axes,
+    counter_reduce_axes,
     current_mesh,
     input_sharding,
     logical_to_pspec,

@@ -161,3 +161,41 @@ def axis_size(name: str) -> int:
     if mesh is None:
         return 1
     return int(mesh.shape.get(name, 1))
+
+
+def bound_axes(names: Sequence[str]) -> tuple[str, ...]:
+    """The subset of ``names`` bound as *mapped* axes in the current trace.
+
+    A mesh axis name is only psum-able from code that runs under a
+    ``shard_map``/``pmap`` binding it; under plain jit-SPMD (sharded inputs,
+    no per-shard body) reductions are already global and no axis is bound.
+    Call this at trace time, where a psum would be issued.
+    """
+    out = []
+    for n in names:
+        try:
+            jax.lax.axis_index(n)
+        except NameError:
+            continue
+        out.append(n)
+    return tuple(out)
+
+
+def counter_reduce_axes(axes="auto") -> tuple[str, ...]:
+    """Resolve the mesh axes a monitor should psum counters over.
+
+    ``"auto"``: every axis of the ambient ``sharding_ctx`` mesh that is
+    actually bound in the current trace — replicated-safe on a laptop
+    (no mesh, or a 1-device mesh, or plain jit: nothing to reduce).
+    An explicit tuple is filtered the same way, so the same wrapped step
+    traces correctly inside and outside ``shard_map``.
+    """
+    if axes is None:
+        return ()
+    if axes == "auto":
+        mesh = current_mesh()
+        cands: tuple[str, ...] = tuple(mesh.axis_names) if mesh is not None \
+            else ()
+    else:
+        cands = tuple(axes)
+    return bound_axes(cands)

@@ -32,7 +32,6 @@ from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
 from repro import configs  # noqa: E402
 from repro import core as scalpel  # noqa: E402
 from repro.core.backends import hlo_graph, xla_cost  # noqa: E402
-from repro.core.counters import CounterState, MonitorParams  # noqa: E402
 from repro.dist.partition import (  # noqa: E402
     sharding_ctx,
     tree_shardings,
@@ -102,23 +101,23 @@ def build_cell(arch_id: str, shape_name: str, multi_pod: bool,
             opt_sh = tree_shardings(
                 opt_abs, opt_state_axes(opt_cfg, arch.param_axes()), mesh
             )
-            counters_abs = _abstractify(CounterState.zeros(spec))
             tstate_abs = TrainState(
-                params=params_abs, opt=opt_abs, counters=counters_abs,
+                params=params_abs, opt=opt_abs,
                 step=jax.ShapeDtypeStruct((), jnp.int32),
             )
             tstate_sh = TrainState(
                 params=params_sh, opt=opt_sh,
-                counters=_replicated(counters_abs, mesh),
                 step=NamedSharding(mesh, PartitionSpec()),
             )
-            mp_abs = _abstractify(MonitorParams.all_on(spec))
+            mon = scalpel.Monitor(spec)
+            mstate_abs = _abstractify(mon.init())
             step_fn = make_train_step(
                 arch, opt_cfg, spec,
                 microbatches=policy.get("microbatches", 1),
+                monitor=mon,
             )
-            args = (tstate_abs, batch, mp_abs)
-            shardings = (tstate_sh, batch_sh, _replicated(mp_abs, mesh))
+            args = (tstate_abs, batch, mstate_abs)
+            shardings = (tstate_sh, batch_sh, _replicated(mstate_abs, mesh))
             donate = (0,)
             fn = step_fn
         elif shape.kind == "prefill":
@@ -128,18 +127,14 @@ def build_cell(arch_id: str, shape_name: str, multi_pod: bool,
             seen = scalpel.discover(probe_fn, params_abs, batch)
             spec = scalpel.spec_from_discovery(seen,
                                                tensor_events=tensor_events)
-            counters_abs = _abstractify(CounterState.zeros(spec))
-            mp_abs = _abstractify(MonitorParams.all_on(spec))
-
-            def fn(params, b, mparams, counters):
-                with scalpel.collecting(spec, mparams, counters) as col:
-                    cache, logits = arch.prefill(params, b,
-                                                 cache_len=shape.seq_len)
-                return cache, logits, counters.add(col.delta)
-
-            args = (params_abs, batch, mp_abs, counters_abs)
-            shardings = (params_sh, batch_sh, _replicated(mp_abs, mesh),
-                         _replicated(counters_abs, mesh))
+            mon = scalpel.Monitor(spec)
+            mstate_abs = _abstractify(mon.init())
+            fn = mon.wrap(
+                lambda params, b: arch.prefill(params, b,
+                                               cache_len=shape.seq_len)
+            )
+            args = (mstate_abs, params_abs, batch)
+            shardings = (_replicated(mstate_abs, mesh), params_sh, batch_sh)
             donate = ()
         else:  # decode
             cache_abs = arch.init_cache(shape.global_batch, shape.seq_len,
@@ -153,19 +148,14 @@ def build_cell(arch_id: str, shape_name: str, multi_pod: bool,
             seen = scalpel.discover(probe_fn, params_abs, cache_abs, tokens)
             spec = scalpel.spec_from_discovery(seen,
                                                tensor_events=tensor_events)
-            counters_abs = _abstractify(CounterState.zeros(spec))
-            mp_abs = _abstractify(MonitorParams.all_on(spec))
-
-            def fn(params, cache, t, mparams, counters):
-                with scalpel.collecting(spec, mparams, counters) as col:
-                    logits, cache = arch.decode_step(params, cache, t)
-                return logits, cache, counters.add(col.delta)
-
-            args = (params_abs, cache_abs, tokens, mp_abs, counters_abs)
-            shardings = (params_sh, cache_sh, batch_sh["tokens"],
-                         _replicated(mp_abs, mesh),
-                         _replicated(counters_abs, mesh))
-            donate = (1,)
+            mon = scalpel.Monitor(spec)
+            mstate_abs = _abstractify(mon.init())
+            fn = mon.wrap(lambda params, cache, t:
+                          arch.decode_step(params, cache, t))
+            args = (mstate_abs, params_abs, cache_abs, tokens)
+            shardings = (_replicated(mstate_abs, mesh), params_sh, cache_sh,
+                         batch_sh["tokens"])
+            donate = (2,)
 
     meta = {
         "arch": arch_id, "shape": shape_name,

@@ -6,11 +6,14 @@ counters use the same MonitorSpec machinery as training, so a serving
 deployment gets per-scope KV/attention monitoring and the same runtime
 reconfiguration (mask/period swaps between decode steps).
 
-Monitoring is asynchronous: each decode step appends its counters to a
-device-side telemetry ring in-graph (lax.cond-guarded on the runtime
-cadence) and the ring is drained by the telemetry plane's background
-thread.  The engine only synchronizes with the device for its outputs —
-prefill logits and the final sampled tokens — never for monitoring.
+Monitoring rides the functional ``Monitor`` API: prefill and decode are
+``mon.wrap``-ped pure functions of ONE MonitorState pytree — the compact
+counters, the device-side telemetry ring, and the decode-step stamp that
+the old engine carried as three separate attributes.  Each wrapped call
+ring-appends in-graph (lax.cond-guarded on the runtime cadence) and the
+ring is drained by the telemetry plane's background thread.  The engine
+only synchronizes with the device for its outputs — prefill logits and the
+final sampled tokens — never for monitoring.
 """
 from __future__ import annotations
 
@@ -23,8 +26,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core as scalpel
-from repro.core import telemetry as telemetry_lib
-from repro.core.counters import CounterState
 from repro.models.registry import Arch
 
 
@@ -56,37 +57,34 @@ class Engine:
             spec = scalpel.spec_from_discovery(seen)
         self.spec = spec
         self.runtime = runtime or scalpel.ScalpelRuntime(spec)
-        self.counters = CounterState.zeros(spec)
-        self.ring = self.runtime.telemetry.make_ring()
+        # ONE pytree replaces the old (counters, ring, decode_step) triple:
+        # the monitor borrows the runtime's telemetry plane for its ring.
+        self.mon = scalpel.Monitor(spec, telemetry=self.runtime.telemetry)
+        self.mstate = self.mon.init()
         self.step_times: list[float] = []
         # the RNG carries across generate() calls — reseeding per call would
         # make every generation sample identically (see generate()).
         self._rng = jax.random.PRNGKey(cfg.seed)
-        # decode-step stamp lives on device: the token loop never ships a
-        # host scalar per step just to stamp telemetry snapshots.
-        self._decode_step = jnp.zeros((), jnp.int32)
 
-        def _prefill(params, batch, mparams, counters):
-            with scalpel.collecting(self.spec, mparams, counters) as col:
-                cache, logits = self.arch.prefill(
-                    params, batch, cache_len=self.cfg.cache_len
-                )
-            return cache, logits, counters.add(col.delta)
+        def _prefill(params, batch):
+            return self.arch.prefill(params, batch,
+                                     cache_len=self.cfg.cache_len)
 
-        def _decode(params, cache, tokens, mparams, counters, ring, tparams,
-                    step):
-            with scalpel.collecting(self.spec, mparams, counters) as col:
-                logits, cache = self.arch.decode_step(params, cache, tokens)
-            counters = counters.add(col.delta)
-            # in-graph telemetry: snapshot the cumulative counters at the
-            # dynamic cadence; the ring is NOT donated (the drain thread
-            # reads previous buffers while later decode steps run).
-            step = step + 1
-            ring = telemetry_lib.ring_append(ring, counters, tparams, step)
-            return logits, cache, counters, ring, step
+        def _decode(params, cache, tokens):
+            return self.arch.decode_step(params, cache, tokens)
 
-        self._jit_prefill = jax.jit(_prefill)
-        self._jit_decode = jax.jit(_decode, donate_argnums=(1,))
+        # wrapped signatures: (mstate, *args) -> (out, mstate).  Monitor.jit
+        # draws the jit boundary leaf-wise (runtime knobs never round-trip
+        # the graph); the cache is donated, the MonitorState is NOT (its
+        # ring buffers are read by the telemetry drain thread while later
+        # decode steps run).
+        self._jit_prefill = self.mon.jit(_prefill)
+        self._jit_decode = self.mon.jit(_decode, donate_argnums=(1,))
+
+    @property
+    def counters(self):
+        """The engine's cumulative counters (compact dense layout)."""
+        return self.mstate.counters
 
     def _sample(self, logits, rng):
         logits = logits[:, -1, :].astype(jnp.float32)
@@ -108,9 +106,13 @@ class Engine:
         else:
             self._rng, rng = jax.random.split(self._rng)
         t0 = time.perf_counter()
-        cache, logits, self.counters = self._jit_prefill(
-            self.params, batch, self.runtime.params, self.counters
+        # pick up live runtime knobs (mask/period/cadence) — reference
+        # swaps into the state pytree, never a re-trace
+        self.mstate = self.mon.sync(self.mstate, runtime=self.runtime)
+        (cache, logits), self.mstate = self._jit_prefill(
+            self.mstate, self.params, batch
         )
+        self.runtime.observe(self.mstate.counters)
         jax.block_until_ready(logits)  # output sync: sampling needs logits
         prefill_s = time.perf_counter() - t0
         outs = []
@@ -118,14 +120,14 @@ class Engine:
         t0 = time.perf_counter()
         for i in range(max_new):
             outs.append(tok)
-            (logits, cache, self.counters, self.ring,
-             self._decode_step) = self._jit_decode(
-                self.params, cache, tok, self.runtime.params, self.counters,
-                self.ring, self.runtime.telemetry.params, self._decode_step,
+            self.mstate = self.mon.sync(self.mstate, runtime=self.runtime)
+            (logits, cache), self.mstate = self._jit_decode(
+                self.mstate, self.params, cache, tok
             )
             # async monitoring: swap the ring ref to the drain thread and
             # keep decoding — no block_until_ready inside the token loop.
-            self.runtime.on_step(self.counters, ring=self.ring)
+            self.runtime.on_step(self.mstate.counters,
+                                 ring=self.mstate.ring)
             rng, sub = jax.random.split(rng)
             tok = self._sample(logits, sub)
         out = jnp.concatenate(outs, axis=1)
@@ -145,5 +147,5 @@ class Engine:
         )
 
     def report(self) -> str:
-        self.runtime.observe(self.counters)
+        self.runtime.observe(self.mstate.counters)
         return self.runtime.report("ScALPEL serving report")

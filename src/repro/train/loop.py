@@ -42,6 +42,7 @@ class TrainLoopConfig:
     hook_every: int = 10       # telemetry ring-append cadence (steps)
     ring_depth: int = 8        # device-side snapshot ring depth
     max_in_flight: int = 2     # bounded dispatch window (steps)
+    strict_plan_resume: bool = True  # raise (vs warn) on plan mismatch
 
 
 def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
@@ -88,28 +89,53 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
 
     runtime.add_hook(tripwire)
 
+    # the functional monitor: ONE pytree threads compact counters, the
+    # telemetry ring, the step stamp and the runtime params through the step
+    mon = scalpel.Monitor(spec, telemetry=runtime.telemetry)
     step_fn = make_train_step(arch, opt_cfg, spec,
-                              microbatches=loop_cfg.microbatches)
-    # donate the train state only — the telemetry ring is read by the drain
-    # thread while later steps run, so its buffers must stay valid.
+                              microbatches=loop_cfg.microbatches,
+                              monitor=mon)
+    # donate the train state only — the MonitorState (whose ring buffers the
+    # drain thread reads while later steps run) must stay valid.
     jit_step = jax.jit(step_fn, donate_argnums=(0,))
 
     mgr = (CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.ckpt_keep)
            if loop_cfg.ckpt_dir else None)
 
     # -- init or restore (crash recovery / elastic resume) -----------------
-    tstate = TrainState.create(arch, opt_cfg, spec,
+    tstate = TrainState.create(arch, opt_cfg,
                                jax.random.PRNGKey(loop_cfg.seed))
+    mstate = mon.init()
     start_step = 0
     if mgr is not None and mgr.latest() is not None:
-        abstract = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tstate
+        latest = mgr.latest()
+        # plan attestation FIRST, from the manifest alone: counters from
+        # different compiled probe plans must not silently resume — and a
+        # changed spec would otherwise surface as an opaque shape error
+        # mid-restore rather than this diagnostic.
+        attested = runtime.check_resume_metadata(
+            mgr.metadata(latest), strict=loop_cfg.strict_plan_resume
         )
-        tstate, meta = mgr.restore(mgr.latest(), abstract)
+        if attested is None:
+            # no fingerprint ⇒ the checkpoint predates the Monitor layout
+            # ({'model', 'monitor'} tree) and CANNOT restore into it; fail
+            # with a migration diagnostic, not a mid-restore KeyError.
+            raise RuntimeError(
+                f"checkpoint step_{latest} in {loop_cfg.ckpt_dir} predates "
+                "the Monitor checkpoint layout (no plan fingerprint in "
+                "meta.json); restart training or migrate the checkpoint"
+            )
+        saved_tree = {"model": tstate,
+                      "monitor": mon.checkpoint_payload(mstate)}
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), saved_tree
+        )
+        saved, meta = mgr.restore(latest, abstract)
+        tstate = saved["model"]
+        mstate = mon.restore(mstate, saved["monitor"])
         start_step = int(meta["step"])
         events.append(f"restored from step {start_step}")
 
-    ring = runtime.telemetry.make_ring()
     losses: list[float] = []
     last_logged: dict[str, float] = {}
     max_in_flight = max(1, loop_cfg.max_in_flight)
@@ -132,14 +158,16 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
     for step, host_batch in enumerate(it, start=start_step):
         batch = shard_batch(host_batch, mesh)
         t0 = time.perf_counter()
-        tstate, out, ring = jit_step(tstate, batch, runtime.params,
-                                     runtime.telemetry.params, ring)
+        # refresh the dynamic knobs riding in the state (mask/period/cadence
+        # — reference swaps, never a re-trace), then run the wrapped step
+        mstate = mon.sync(mstate, runtime=runtime)
+        tstate, out, mstate = jit_step(tstate, batch, mstate)
         inflight.append((step, out))
         # bounded in-flight dispatch: only the step leaving the window is
         # synchronized, so device and host overlap up to max_in_flight steps
         # (amortized, the recorded time still equals the true step time).
         retire(max_in_flight - 1)
-        runtime.on_step(tstate.counters, ring=ring)
+        runtime.on_step(mstate.counters, ring=mstate.ring)
         timer.record("train_step", time.perf_counter() - t0)
         if loop_cfg.log_every and step % loop_cfg.log_every == 0 \
                 and last_logged:
@@ -154,10 +182,16 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
         if mgr is not None and loop_cfg.ckpt_every and \
                 (step + 1) % loop_cfg.ckpt_every == 0:
             retire(0)
-            mgr.save(step + 1, tstate)
+            mgr.save(step + 1,
+                     {"model": tstate,
+                      "monitor": mon.checkpoint_payload(mstate)},
+                     extra=runtime.save_metadata())
     retire(0)
     if mgr is not None:
-        mgr.save(loop_cfg.steps, tstate, block=True)
+        mgr.save(loop_cfg.steps,
+                 {"model": tstate,
+                  "monitor": mon.checkpoint_payload(mstate)},
+                 extra=runtime.save_metadata(), block=True)
         mgr.wait()
 
     report = runtime.report()  # flushes the ring through every sink
@@ -170,5 +204,6 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
         "report": report,
         "runtime": runtime,
         "state": tstate,
+        "monitor": mstate,
         "spec": spec,
     }

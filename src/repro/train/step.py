@@ -1,6 +1,14 @@
 """Training step: microbatched gradient accumulation with ScALPEL counters
-threaded through the whole step (forward probes via grad aux, gradient-level
-probes after accumulation, optimizer update inside the same jitted program).
+threaded through ONE MonitorState pytree (forward probes via grad aux,
+gradient-level probes after accumulation, optimizer update inside the same
+jitted program, mesh-aware counter reduction through the Monitor).
+
+The step never touches ``col.delta`` or a padded CounterState: microbatch
+deltas accumulate in the spec's compact dense layout (``plan.CompactDelta``
+rides the gradient-accumulation scan), and ``Monitor.commit`` folds the
+step's total into the carried MonitorState — psum over whatever mesh axes
+are bound, step stamp, in-graph telemetry ring append at the dynamic
+cadence, all in one place.
 """
 from __future__ import annotations
 
@@ -11,8 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core as scalpel
-from repro.core import telemetry as telemetry_lib
-from repro.core.counters import CounterState, MonitorParams
+from repro.core import plan as plan_lib
 from repro.models.registry import Arch
 from repro.optim import OptConfig, apply_updates, global_norm, init_opt_state
 
@@ -20,18 +27,20 @@ from repro.optim import OptConfig, apply_updates, global_norm, init_opt_state
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class TrainState:
+    """Model-side state only — counters live in the MonitorState pytree,
+    which is threaded separately so the train state can be donated while
+    the telemetry ring's buffers stay readable by the drain thread."""
+
     params: Any
     opt: Any
-    counters: CounterState
     step: Any
 
     @staticmethod
-    def create(arch: Arch, opt_cfg: OptConfig, spec, rng):
+    def create(arch: Arch, opt_cfg: OptConfig, rng):
         params = arch.init(rng)
         return TrainState(
             params=params,
             opt=init_opt_state(opt_cfg, params),
-            counters=CounterState.zeros(spec),
             step=jnp.zeros((), jnp.int32),
         )
 
@@ -75,42 +84,47 @@ def build_monitor_spec(arch: Arch, batch,
 
 
 def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
-                    microbatches: int = 1, counter_axes=None):
-    """Build the jittable train_step(tstate, batch, mparams) -> (tstate, out).
+                    microbatches: int = 1, counter_axes="auto",
+                    monitor: scalpel.Monitor | None = None):
+    """Build the jittable ``train_step(tstate, batch, mstate) ->
+    (tstate', out, mstate')``.
 
-    ``counter_axes``: mesh axis names to psum counters over (multi-host
-    aggregation — the paper's MPI support); None on a single device.
-
-    The step optionally carries a telemetry ``SnapshotRing``: call it as
-    ``train_step(tstate, batch, mparams, tparams, ring)`` and the step's
-    final counters are ring-appended in-graph (lax.cond-guarded on the
-    dynamic cadence in ``tparams`` — changing it never re-traces) and the
-    updated ring is returned third.  The ring argument must NOT be donated:
-    the telemetry drain thread reads the previous ring's buffers while the
+    ``mstate`` is the functional MonitorState pytree (``monitor.init()``):
+    compact counters, telemetry ring, step stamp, and the runtime
+    MonitorParams/TelemetryParams — all dynamic inputs, so mask/period/
+    cadence swaps between steps never re-trace.  It must NOT be donated:
+    the telemetry drain thread reads the carried ring's buffers while the
     next step runs.
+
+    ``counter_axes``: mesh axes to psum counters over (the paper's MPI
+    support).  The default "auto" reduces over whichever ambient-mesh axes
+    the trace binds — cluster-wide sums under ``shard_map``/pmap, a no-op
+    under plain jit or on a single device.  Pass ``monitor`` to share a
+    configured Monitor (e.g. one owning a telemetry plane) instead.
     """
+    mon = monitor if monitor is not None else scalpel.Monitor(
+        spec, counter_axes=counter_axes
+    )
 
     def mb_loss(params, mb, calls_base, mparams):
-        cs = CounterState(
-            calls=calls_base,
-            values=jnp.zeros((spec.n_scopes, spec.max_slots), jnp.float32),
-            samples=jnp.zeros((spec.n_scopes, spec.max_slots), jnp.int32),
-        )
-        with scalpel.collecting(spec, mparams, cs) as col:
+        with mon.open(mparams, calls_base=calls_base) as col:
             loss = arch.loss_fn(params, mb)
-        return loss, col.delta
+        return loss, col.compact_delta()
 
     vag = jax.value_and_grad(mb_loss, has_aux=True)
 
-    def train_step(tstate: TrainState, batch, mparams: MonitorParams,
-                   tparams: telemetry_lib.TelemetryParams | None = None,
-                   ring: telemetry_lib.SnapshotRing | None = None):
-        base = tstate.counters
+    def train_step(tstate: TrainState, batch, mstate: scalpel.MonitorState):
         params = tstate.params
+        # the multiplex schedule follows THIS shard's own call counts —
+        # never the mesh-reduced totals in mstate.calls (which double as
+        # the base only for monitors that never reduce)
+        base_calls = mstate.sched_calls if mstate.sched_calls is not None \
+            else mstate.calls
 
         if microbatches == 1:
             # grads stay in param dtype; the optimizer casts per-leaf
-            (loss, delta), grads = vag(params, batch, base.calls, mparams)
+            (loss, delta), grads = vag(params, batch, base_calls,
+                                       mstate.params)
         else:
             split = jax.tree.map(
                 lambda x: x.reshape(
@@ -124,42 +138,43 @@ def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
 
             def body(carry, mb):
                 gacc, dacc, lacc = carry
-                (l, d), g = vag(params, mb, base.calls + dacc.calls, mparams)
+                (l, d), g = vag(params, mb, base_calls + dacc.calls,
+                                mstate.params)
                 gacc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), gacc, g
                 )
                 return (gacc, dacc.add(d), lacc + l), None
 
+            # the accumulation carry rides the COMPACT footprint — the
+            # padded [n_scopes, max_slots] block appears nowhere in the step
             (grads, delta, loss), _ = jax.lax.scan(
-                body, (g0, CounterState.zeros(spec), jnp.zeros((), jnp.float32)),
+                body,
+                (g0, plan_lib.CompactDelta.zeros(spec),
+                 jnp.zeros((), jnp.float32)),
                 split,
             )
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             loss = loss / microbatches
 
         # -- step-level scope: gradient statistics ------------------------
-        mid = base.add(delta)
-        with scalpel.collecting(spec, mparams, mid) as col:
+        with mon.open(mstate.params,
+                      calls_base=base_calls + delta.calls) as col:
             with scalpel.function("grads"):
                 scalpel.probe(
                     gnorm=global_norm(grads)[None],
                     loss_value=loss[None],
                 )
+        delta = delta.add(col.compact_delta())
         new_params, new_opt, stats = apply_updates(
             opt_cfg, tstate.opt, params, grads
         )
-        counters = mid.add(col.delta)
-        if counter_axes:
-            counters = counters.psum(counter_axes)
+        # mesh reduction + accumulate + step stamp + ring append, in one
+        # place — the call site never sees a counter again
+        mstate = mon.commit(mstate, delta)
         new_state = TrainState(
-            params=new_params, opt=new_opt, counters=counters,
-            step=tstate.step + 1,
+            params=new_params, opt=new_opt, step=tstate.step + 1,
         )
-        out = {"loss": loss, **stats}
-        if ring is None:
-            return new_state, out
-        ring = telemetry_lib.ring_append(ring, counters, tparams,
-                                         step=new_state.step)
-        return new_state, out, ring
+        return new_state, {"loss": loss, **stats}, mstate
 
+    train_step.monitor = mon
     return train_step

@@ -85,24 +85,27 @@ def test_loss_near_uniform_at_init(arch_and_params):
 
 
 def test_train_step_updates_and_counts(arch_and_params):
+    from repro import core as scalpel
+
     aid, arch, params = arch_and_params
     batch = _batch(arch.cfg)
     spec = build_monitor_spec(arch, batch)
     opt = OptConfig(lr=1e-3, warmup_steps=0, clip_norm=1.0, min_lr_frac=1.0)
-    tstate = TrainState.create(arch, opt, spec, jax.random.PRNGKey(0))
-    step = jax.jit(make_train_step(arch, opt, spec))
-    mp = MonitorParams.all_on(spec)
-    t1, out1 = step(tstate, batch, mp)
-    t2, out2 = step(t1, batch, mp)
+    tstate = TrainState.create(arch, opt, jax.random.PRNGKey(0))
+    mon = scalpel.Monitor(spec, MonitorParams.all_on(spec))
+    step = jax.jit(make_train_step(arch, opt, spec, monitor=mon))
+    t1, out1, m1 = step(tstate, batch, mon.init())
+    t2, out2, m2 = step(t1, batch, m1)
     assert np.isfinite(float(out1["loss"]))
     # same batch twice with lr>0: loss must move (params updated)
     assert float(out2["loss"]) != pytest.approx(float(out1["loss"]),
                                                 abs=1e-7)
     assert int(t2.step) == 2
+    assert int(m2.step) == 2
     # every scope intercepted at least once per step
-    assert int(np.asarray(t2.counters.calls).min()) >= 1
+    assert int(np.asarray(m2.calls).min()) >= 1
     # no NaN counters
-    assert np.isfinite(np.asarray(t2.counters.values)).all()
+    assert np.isfinite(np.asarray(m2.values)).all()
 
 
 def test_prefill_decode_matches_forward(arch_and_params):

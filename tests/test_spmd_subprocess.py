@@ -23,8 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro import core as scalpel
 from repro.configs import model_config
-from repro.core.counters import CounterState, MonitorParams
 from repro.data import DataConfig, SyntheticLM
 from repro.dist.partition import sharding_ctx, tree_shardings
 from repro.models.registry import Arch
@@ -41,16 +41,19 @@ host_batch = data.batch_at(0)
 batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
 spec = build_monitor_spec(arch, batch)
 opt_cfg = OptConfig(lr=1e-3, warmup_steps=0, min_lr_frac=1.0)
-mp = MonitorParams.all_on(spec)
 
 # ---- single-device reference ----
-t0 = TrainState.create(arch, opt_cfg, spec, jax.random.PRNGKey(0))
-step1 = jax.jit(make_train_step(arch, opt_cfg, spec))
-t1, o1 = step1(t0, batch, mp)
+mon1 = scalpel.Monitor(spec)
+t0 = TrainState.create(arch, opt_cfg, jax.random.PRNGKey(0))
+step1 = jax.jit(make_train_step(arch, opt_cfg, spec, monitor=mon1))
+t1, o1, m1 = step1(t0, batch, mon1.init())
 ref_loss = float(o1["loss"])
-ref_calls = np.asarray(t1.counters.calls).copy()
+ref_calls = np.asarray(m1.calls).copy()
 
 # ---- sharded run under (2,4) ----
+# jit-SPMD: reductions over sharded tensors are already global, so the
+# Monitor's "auto" counter reduction resolves to a no-op (no bound axes)
+# and counters stay replicated — asserted equal to the unsharded run.
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 with mesh, sharding_ctx(mesh):
     params = arch.init(jax.random.PRNGKey(0))
@@ -62,16 +65,16 @@ with mesh, sharding_ctx(mesh):
     tstate = TrainState(
         params=params,
         opt=init_opt_state(opt_cfg, params),
-        counters=CounterState.zeros(spec),
         step=jnp.zeros((), jnp.int32),
     )
     sb = {k: jax.device_put(
         v, NamedSharding(mesh, PartitionSpec("data"))) for k, v in
         batch.items()}
-    stepN = jax.jit(make_train_step(arch, opt_cfg, spec))
-    t2, o2 = stepN(tstate, sb, mp)
+    monN = scalpel.Monitor(spec)
+    stepN = jax.jit(make_train_step(arch, opt_cfg, spec, monitor=monN))
+    t2, o2, m2 = stepN(tstate, sb, monN.init())
     spmd_loss = float(o2["loss"])
-    spmd_calls = np.asarray(t2.counters.calls).copy()
+    spmd_calls = np.asarray(m2.calls).copy()
 
     # ---- elastic re-mesh: save under (2,4), restore under (4,2) ----
     save_tree("/tmp/spmd_ck.npz", t2.params)

@@ -392,7 +392,8 @@ def test_hook_may_reenter_flush_without_deadlock():
 
 def test_drained_reports_value_equal_to_sync_snapshot():
     """Acceptance: ring-drained reports == synchronous snapshots (allclose),
-    driven through the real jitted train step."""
+    driven through the real jitted train step — now a wrapped Monitor step
+    threading one MonitorState pytree with a COMPACT telemetry ring."""
     from repro.configs import model_config
     from repro.data import DataConfig, SyntheticLM
     from repro.models.registry import Arch
@@ -405,24 +406,27 @@ def test_drained_reports_value_equal_to_sync_snapshot():
     batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
     spec = build_monitor_spec(arch, batch)
     rt = scalpel.ScalpelRuntime(spec, hook_every=1, ring_depth=8)
-    step_fn = make_train_step(arch, OptConfig(lr=1e-3, warmup_steps=0), spec)
+    mon = scalpel.Monitor(spec, telemetry=rt.telemetry)
+    step_fn = make_train_step(arch, OptConfig(lr=1e-3, warmup_steps=0), spec,
+                              monitor=mon)
     jit_step = jax.jit(step_fn)   # no donation: we compare states below
     tstate = TrainState.create(arch, OptConfig(lr=1e-3, warmup_steps=0),
-                               spec, jax.random.PRNGKey(0))
-    ring = rt.telemetry.make_ring()
+                               jax.random.PRNGKey(0))
+    mstate = mon.init()
     drained = {}
     rt.telemetry.add_sink(T.CallbackSink(lambda s: drained.setdefault(
         s.step, s)))
     sync_states = []
     for _ in range(3):
-        tstate, out, ring = jit_step(tstate, batch, rt.params,
-                                     rt.telemetry.params, ring)
-        rt.on_step(tstate.counters, ring=ring)
-        sync_states.append(jax.tree.map(jax.device_get, tstate.counters))
+        tstate, out, mstate = jit_step(tstate, batch, mstate)
+        rt.on_step(mstate.counters, ring=mstate.ring)
+        sync_states.append(jax.tree.map(jax.device_get, mstate.counters))
     rt.flush()
     assert sorted(drained) == [1, 2, 3]
     for k, sync in enumerate(sync_states, start=1):
         ring_state = drained[k].state
+        # drained snapshots are COMPACT (dense slot layout) end-to-end
+        assert np.asarray(ring_state.values).ndim == 1
         np.testing.assert_allclose(np.asarray(ring_state.values),
                                    np.asarray(sync.values),
                                    rtol=1e-6, atol=1e-8)

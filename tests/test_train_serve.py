@@ -63,11 +63,16 @@ def test_fit_restart_bitwise_identical(tiny, tmp_path):
     for a, b in zip(jax.tree.leaves(full["state"].params),
                     jax.tree.leaves(resumed["state"].params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # counters carried exactly too (multiplex schedule unbroken)
+    # counters carried exactly too (multiplex schedule unbroken); the
+    # MonitorState checkpoints its compact lanes + step stamp
     np.testing.assert_array_equal(
-        np.asarray(full["state"].counters.calls),
-        np.asarray(resumed["state"].counters.calls),
+        np.asarray(full["monitor"].calls),
+        np.asarray(resumed["monitor"].calls),
     )
+    np.testing.assert_allclose(
+        np.asarray(full["monitor"].values),
+        np.asarray(resumed["monitor"].values), rtol=1e-6)
+    assert int(full["monitor"].step) == int(resumed["monitor"].step)
     assert float(full["final_loss"]) == pytest.approx(
         float(resumed["final_loss"]), abs=1e-6)
 
@@ -97,7 +102,7 @@ def test_fit_with_monitor_config_and_jsonl(tiny, tmp_path):
 
 def test_microbatched_step_matches_loss_scale(tiny):
     """Gradient accumulation: micro=2 equals micro=1 on the same batch."""
-    from repro.core.counters import MonitorParams
+    from repro import core as scalpel
     from repro.data import SyntheticLM
     from repro.train.step import TrainState, build_monitor_spec, \
         make_train_step
@@ -107,13 +112,15 @@ def test_microbatched_step_matches_loss_scale(tiny):
     data = SyntheticLM(DataConfig(vocab=512, seq_len=32, global_batch=4))
     batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
     spec = build_monitor_spec(tiny, batch)
-    mp = MonitorParams.all_on(spec)
-    t0 = TrainState.create(tiny, opt, spec, jax.random.PRNGKey(0))
-    s1 = jax.jit(make_train_step(tiny, opt, spec, microbatches=1))
-    s2 = jax.jit(make_train_step(tiny, opt, spec, microbatches=2))
-    t1, o1 = s1(t0, batch, mp)
-    t0b = TrainState.create(tiny, opt, spec, jax.random.PRNGKey(0))
-    t2, o2 = s2(t0b, batch, mp)
+    mon = scalpel.Monitor(spec)
+    t0 = TrainState.create(tiny, opt, jax.random.PRNGKey(0))
+    s1 = jax.jit(make_train_step(tiny, opt, spec, microbatches=1,
+                                 monitor=mon))
+    s2 = jax.jit(make_train_step(tiny, opt, spec, microbatches=2,
+                                 monitor=mon))
+    t1, o1, m1 = s1(t0, batch, mon.init())
+    t0b = TrainState.create(tiny, opt, jax.random.PRNGKey(0))
+    t2, o2, m2 = s2(t0b, batch, mon.init())
     assert float(o1["loss"]) == pytest.approx(float(o2["loss"]), rel=1e-4)
     gn1, gn2 = float(o1["grad_norm"]), float(o2["grad_norm"])
     assert gn1 == pytest.approx(gn2, rel=2e-2)
@@ -124,8 +131,8 @@ def test_microbatched_step_matches_loss_scale(tiny):
             atol=5e-3, rtol=5e-2)
     # counters: each microbatch is a real call — model scopes fire twice,
     # the step-level 'grads' scope once
-    c1 = np.asarray(t1.counters.calls)
-    c2 = np.asarray(t2.counters.calls)
+    c1 = np.asarray(m1.calls)
+    c2 = np.asarray(m2.calls)
     gi = spec.scope_index("grads")
     for i in range(spec.n_scopes):
         assert c2[i] == (c1[i] if i == gi else 2 * c1[i]), (i, c1, c2)

@@ -1,0 +1,58 @@
+"""CI gate: no new code under src/ or examples/ may call the deprecated
+``collecting()`` region API directly — the functional ``scalpel.Monitor``
+transformation (``mon.wrap`` / ``@scalpel.monitored``) is the supported
+path.  AST-based (not a text grep) so docstrings and comments that *mention*
+``collecting()`` don't trip the gate; only real call sites do.
+
+Benchmarks and tests are exempt: ``collecting()`` survives there as the
+measured manual baseline and the shim's own regression coverage.
+
+    python tools/check_deprecated.py   # exits 1 on violations
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+# the shim's own definition lives here (it *is* the deprecated path)
+ALLOWLIST = {
+    pathlib.PurePosixPath("src/repro/core/instrument.py"),
+}
+GATED_ROOTS = ("src", "examples")
+DEPRECATED_CALLS = {"collecting"}
+
+
+def violations(repo_root: pathlib.Path) -> list[str]:
+    out = []
+    for root in GATED_ROOTS:
+        for path in sorted((repo_root / root).rglob("*.py")):
+            rel = path.relative_to(repo_root)
+            if pathlib.PurePosixPath(rel.as_posix()) in ALLOWLIST:
+                continue
+            tree = ast.parse(path.read_text(), filename=str(rel))
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                name = fn.attr if isinstance(fn, ast.Attribute) else \
+                    getattr(fn, "id", "")
+                if name in DEPRECATED_CALLS:
+                    out.append(f"{rel}:{node.lineno}: call to deprecated "
+                               f"{name}()")
+    return out
+
+
+def main() -> int:
+    repo_root = pathlib.Path(__file__).resolve().parent.parent
+    bad = violations(repo_root)
+    if bad:
+        print("deprecated API calls in gated trees (use scalpel.Monitor):")
+        print("\n".join(f"  {b}" for b in bad))
+        return 1
+    print("deprecated-API gate clean over "
+          + ", ".join(r + "/" for r in GATED_ROOTS))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
