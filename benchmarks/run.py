@@ -31,7 +31,8 @@ def _write_overhead_json(payload: dict) -> None:
     print(f"\nwrote {OVERHEAD_JSON} "
           f"(plans: {payload.get('plans')}; "
           f"monitor: {payload.get('monitor')}; "
-          f"readback: {payload.get('readback')})")
+          f"readback: {payload.get('readback')}; "
+          f"adaptive: {payload.get('adaptive')})")
 
 
 def main() -> int:

@@ -1,170 +1,135 @@
-"""Adaptive monitoring (paper §3.3 + C5): config-file driven contexts,
-SIGUSR1 hot-reload mid-training, call-count multiplexing, and adaptive
-hooks that react to live counters.
+"""Adaptive monitoring, closed-loop (paper §3.3 + C5): the self-retuning
+``AdaptiveController`` localizes an injected NaN to the right scope,
+widens that scope's event set, raises the snapshot rate, then decays
+everything back down the degradation ladder once the anomaly passes.
 
-Hooks run on *drained telemetry snapshots*: the jitted train step appends
-counters to a device-side ring at the runtime cadence, a background thread
-drains and delta-decodes them (incrementally — only slots newer than the
-drain cursor are copied), and the hook fires on the drain thread — the
-step loop never stalls for monitoring.  The hook below also closes the
-adaptive loop on the telemetry plane itself, retuning the ring cadence
-(``runtime.telemetry.set_cadence`` — a dynamic-input swap, no re-trace)
-once the monitored statistics settle.
+What replaced the old SIGUSR1 demo: the reconfiguration POLICY is now in
+the library (core/adaptive.py) instead of a hand-rolled signal handler.
+The mechanism is unchanged — every controller action is a MonitorParams /
+cadence reference swap picked up by ``mon.sync`` between steps, never a
+re-trace (``runtime.plan_fingerprint`` is printed before and after to
+attest it).  The controller runs as a ``CallbackSink`` over drained
+telemetry snapshots and never dispatches device work.
 
-Every reconfiguration here — the SIGUSR1 config swap to multiplexed
-phase-2 contexts included — re-selects among the probe plans compiled per
-(scope, event set) at trace time (core/plan.py): the phase-2 attn scope
-sweeps only what its ACTIVE set needs on each call, and
-``runtime.plan_fingerprint`` is printed before and after the reload to
-attest that no re-trace happened.
+The degradation ladder, per scope:
 
-Under the hood the train loop threads ONE functional ``MonitorState``
-pytree (scalpel.Monitor): compact counters, the telemetry ring, the step
-stamp, and the reloaded MonitorParams all ride the same carried state —
-the reconfigurations land as reference swaps into that pytree.
+    wide        scope+slot masks all-on, multiplex period 1 (escalated)
+    configured  whatever params the controller was installed with
+    sentinel    scope_mask 0 — presence counters only (the probe path's
+                lax.cond skips every event sweep; interception still
+                counts calls for free)
+
+The fault harness (repro.testing.faults) injects a deterministic NaN into
+ONE scope's probed tensor at a known step; the smoke assertion is the
+acceptance criterion — the right scope escalates within K=5 drained
+snapshots, and nothing else does.
 
     PYTHONPATH=src python examples/adaptive_monitoring.py
 """
-import os
-import signal
+import jax
+import jax.numpy as jnp
 
 from repro import core as scalpel
-from repro.configs import model_config
-from repro.data import DataConfig
-from repro.models.registry import Arch
-from repro.optim import OptConfig
-from repro.train.loop import TrainLoopConfig, fit
+from repro.core.adaptive import AdaptiveConfig
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.testing.faults import FaultInjector, TensorFault
 
-CONFIG_PHASE1 = """\
-BINARY=train_lm                      // paper Table-1 grammar
-NO_FUNCTIONS=1
-[FUNCTION]
-FUNC_NAME=grads                      // monitor only gradient stats first
-NO_EVENTS=0                          // bare block: all compiled slots
-[/FUNCTION]
-"""
+EVENTS = ("ACT_RMS", "ACT_ZERO_FRAC", "NAN_COUNT", "INF_COUNT")
+SCOPES = ("layer/attn", "layer/mlp", "head")
+FAULT_SCOPE = "layer/attn"
+# The NaN must land while its scope still monitors (a scope that already
+# decayed to the sentinel rung is blind to tensor anomalies by design —
+# only the global step-time detector wakes sentinels): with quiet_drains=6
+# and cadence 2, scopes hibernate around step 12, so inject at step 10.
+NAN_STEP = 10        # carried step at which the NaN is spliced in
+STEPS = 56
+CADENCE = 2          # baseline ring-append cadence (steps per snapshot)
+K_DRAINS = 5         # acceptance bound: escalate within K drained snapshots
 
-# phase 2: switch to per-layer activation monitoring, multiplexed over two
-# event sets every 5 calls (the paper's case-study mechanism)
-CONFIG_PHASE2 = """\
-BINARY=train_lm
-NO_FUNCTIONS=2
-[FUNCTION]
-FUNC_NAME=layer/attn
-MULTIPLEX_PERIOD=5
-NO_EVENTS=2
-[EVENT]
-ID=ACT_RMS:out
-SET=0
-NO_SUBEVENTS=0
-[/EVENT]
-[EVENT]
-ID=ACT_RMS:q
-SET=1
-NO_SUBEVENTS=0
-[/EVENT]
-[/FUNCTION]
-[FUNCTION]
-FUNC_NAME=layer/mlp
-NO_EVENTS=1
-[EVENT]
-ID=ACT_RMS:out
-NO_SUBEVENTS=0
-[/EVENT]
-[/FUNCTION]
-"""
+
+def build_spec() -> MonitorSpec:
+    return MonitorSpec.of([
+        ScopeContext.exhaustive(s, [EventSpec(e, "x") for e in EVENTS])
+        for s in SCOPES
+    ])
 
 
 def main():
-    arch = Arch(model_config("mistral_nemo_12b", smoke=True))
-    cfg_path = "/tmp/scalpel_adaptive.cfg"
-    with open(cfg_path, "w") as f:
-        f.write(CONFIG_PHASE1)
+    spec = build_spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=CADENCE,
+                                     graceful_shutdown=True)
+    ctl = runtime.attach_controller(AdaptiveConfig(
+        quiet_drains=6, cooldown_drains=2, warmup_drains=2,
+        escalated_cadence=1,
+        # this demo drains synchronously inside a trivial workload, so the
+        # measured drain overhead IS most of the wall time — park the
+        # budget loop (run_adaptive_sweep exercises it on a real workload)
+        overhead_budget=1.0,
+    ))
+    injector = FaultInjector([
+        TensorFault(FAULT_SCOPE, "x", step=NAN_STEP, kind="nan"),
+    ])
+    fp_before = runtime.plan_fingerprint
 
-    phase_log = []
-    drained_log = []
+    mon = scalpel.Monitor(spec, telemetry=runtime.telemetry,
+                          counter_axes=())
+    key = jax.random.PRNGKey(0)
+    w1, w2, w3 = (jax.random.normal(k, (64, 64)) * 0.2
+                  for k in jax.random.split(key, 3))
 
-    def hook(runtime, reports):
-        """Adaptive logic on drained snapshots (paper C5: runtime decisions).
+    def workload(x, step):
+        h = jnp.tanh(x @ w1)
+        with scalpel.function("layer/attn"):
+            # the fault corrupts only the PROBED copy: the anomaly shows up
+            # in exactly one scope's counters and nowhere downstream
+            scalpel.probe(x=injector.corrupt(FAULT_SCOPE, "x", step, h))
+        m = jnp.tanh(h @ w2)
+        with scalpel.function("layer/mlp"):
+            scalpel.probe(x=m)
+        y = m @ w3
+        with scalpel.function("head"):
+            scalpel.probe(x=y)
+        return x, step + 1
 
-        Runs on the telemetry drain thread with the ring snapshot's reports —
-        the train step that produced these counters has long since returned.
-        """
-        est = {r.scope: {s.slot_id: s.estimate for s in r.slots}
-               for r in reports}
-        g = est.get("grads", {}).get("MEAN:gnorm")
-        if g is not None:
-            phase_log.append(f"drained-hook: grad-norm estimate {g:.3f} "
-                             f"(reloads so far: {runtime.reload_count}, "
-                             f"cadence: {runtime.telemetry.cadence}, "
-                             f"plans: {runtime.plan_fingerprint[:12]})")
-        # after the first hook, hot-swap the config via SIGUSR1 — exactly
-        # the paper's 'new configuration file may be loaded at any time by
-        # sending a signal to the application'
-        if runtime.reload_count == 0:
-            with open(cfg_path, "w") as f:
-                f.write(CONFIG_PHASE2)
-            os.kill(os.getpid(), signal.SIGUSR1)
-        elif len(drained_log) >= 2 and runtime.telemetry.cadence < 8:
-            # adaptive telemetry: once phase-2 statistics are flowing,
-            # monitoring has told us what we need — back the ring-append
-            # cadence off (a dynamic-input swap: the step never re-traces)
-            runtime.telemetry.set_cadence(8)
-            phase_log.append("adaptive: relaxed telemetry cadence to 8")
+    step_fn = mon.jit(workload)
+    mstate = mon.init()
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    step = jnp.zeros((), jnp.int32)
+    for _ in range(STEPS):
+        # pick up the controller's latest mask/period/cadence decisions —
+        # reference swaps into the carried pytree, never a re-trace
+        mstate = mon.sync(mstate, runtime=runtime)
+        (x, step), mstate = step_fn(mstate, x, step)
+        runtime.on_step(mstate.counters, ring=mstate.ring)
+        # deterministic demo: drain synchronously so controller decisions
+        # land at fixed steps (production leaves this to the drain thread)
+        runtime.flush()
 
-    def on_snapshot(snap):
-        """Raw-sink view of the same plane: per-snapshot delta decoding."""
-        drained_log.append(
-            f"snapshot seq={snap.seq} step={snap.step} "
-            f"delta-calls={int(snap.delta.calls.sum())}"
-        )
+    print(f"plan fingerprint: {fp_before[:12]} -> "
+          f"{runtime.plan_fingerprint[:12]} (unchanged: no re-trace)")
+    print(ctl.describe())
+    print(mon.report(mstate.counters, title="ScALPEL adaptive demo"))
 
-    scalpel.ScalpelRuntime._example_sink = on_snapshot
-    out = fit(
-        arch,
-        OptConfig(lr=1e-3, warmup_steps=5),
-        DataConfig(vocab=arch.cfg.vocab, seq_len=64, global_batch=4),
-        TrainLoopConfig(steps=16, log_every=8, ckpt_every=0, hook_every=4,
-                        monitor_config_path=cfg_path),
-        on_report=hook,
-    )
-    rt = out["runtime"]
-    # install_signal is off by default in fit(); emulate the signal path:
-    # (the runtime object exposes reload() which the handler calls)
-    print("\n".join(phase_log))
-    print("\n".join(drained_log))
-    print(f"\nconfig reloads during run: {rt.reload_count}")
-    print(f"plan fingerprint after reloads: {rt.plan_fingerprint[:12]} "
-          "(constant — reconfig re-selects compiled per-set plans, "
-          "never re-traces)")
-    print("per-(scope, event set) probe plans in effect:")
-    print(rt.describe_plans())
-    print(f"final telemetry cadence: {rt.telemetry.cadence} "
-          f"(ring writes drained: {len(drained_log)}, "
-          f"dropped: {rt.telemetry.dropped_snapshots}, "
-          f"ring slots copied: {rt.telemetry.slots_copied})")
-    print(rt.report("final report (phase-2 contexts, multiplexed)"))
-    est = rt.estimates()
-    attn = next((s for s in est if s.endswith("attn")), None)
-    if attn:
-        print(f"\nattn multiplexed estimates: {est[attn]}")
+    # ---- smoke assertions (CI adaptive-smoke job greps for PASS) --------
+    assert runtime.plan_fingerprint == fp_before
+    wide = [t for t in ctl.transitions if t.to == "wide"]
+    assert wide, f"no escalation happened: {ctl.events}"
+    assert all(t.scope == FAULT_SCOPE for t in wide), \
+        f"escalated the wrong scope(s): {wide}"
+    # localized within K drained snapshots of the faulty step's snapshot
+    t = wide[0]
+    assert t.step - NAN_STEP <= CADENCE * K_DRAINS, (t, NAN_STEP)
+    assert "NAN_COUNT" in t.reason
+    # the ladder decayed once quiet: the faulty scope stepped back down and
+    # quiet scopes reached the sentinel rung (presence counters only)
+    assert ctl.stats["deescalations"] > 0, ctl.events
+    assert ctl.levels[FAULT_SCOPE] != "wide", ctl.levels
+    assert "sentinel" in ctl.levels.values(), ctl.levels
+    # escalation raised the snapshot rate, the decay restored it
+    assert runtime.telemetry.cadence == CADENCE, runtime.telemetry.cadence
+    print("ADAPTIVE-SMOKE: PASS")
+    runtime.shutdown()
 
 
 if __name__ == "__main__":
-    # fit() builds its own runtime; install the SIGUSR1 handler globally
-    # (and this example's raw snapshot sink) by monkeypatching
-    # ScalpelRuntime defaults for this example
-    orig = scalpel.ScalpelRuntime.__init__
-
-    def patched(self, *a, **kw):
-        kw["install_signal"] = True
-        orig(self, *a, **kw)
-        sink_fn = getattr(scalpel.ScalpelRuntime, "_example_sink", None)
-        if sink_fn is not None:
-            self.telemetry.add_sink(scalpel.CallbackSink(sink_fn))
-
-    scalpel.ScalpelRuntime.__init__ = patched
-    try:
-        main()
-    finally:
-        scalpel.ScalpelRuntime.__init__ = orig
+    main()

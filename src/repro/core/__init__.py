@@ -16,6 +16,10 @@ The legacy hand-threaded region API (``collecting`` + ``state.add(col.delta)``)
 is DEPRECATED — it survives as a shim over ``Monitor.open``; see the README
 migration table.
 """
+from .adaptive import (  # noqa: F401
+    AdaptiveConfig,
+    AdaptiveController,
+)
 from .config_file import (  # noqa: F401
     ConfigError,
     ScalpelConfig,
@@ -59,8 +63,11 @@ from .plan import (  # noqa: F401
     CompactDelta,
     MomentPlan,
     ScopePlans,
+    SentinelLane,
+    SentinelSet,
     SlotLayout,
     compile_scope_plans,
+    compile_sentinels,
     describe_plans,
     spec_fingerprint,
     spec_layout,

@@ -171,10 +171,15 @@ class Monitor:
     def sync(self, mstate: MonitorState,
              params: MonitorParams | None = None,
              tparams: telemetry_lib.TelemetryParams | None = None,
-             runtime=None) -> MonitorState:
+             runtime=None, controller=None) -> MonitorState:
         """Refresh the dynamic knobs riding in the state (host-side swap —
         same shapes, never a re-trace).  Pass a ``ScalpelRuntime`` to pick
-        up both its live params and telemetry cadence in one call."""
+        up both its live params and telemetry cadence in one call, or an
+        ``AdaptiveController`` (adaptive.py) to pick up the closed loop's
+        latest mask/period/cadence decisions without a runtime."""
+        if controller is not None:
+            params = controller.params if params is None else params
+            tparams = controller.tparams if tparams is None else tparams
         if runtime is not None:
             params = runtime.params if params is None else params
             tparams = runtime.telemetry.params if tparams is None else tparams

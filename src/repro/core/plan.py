@@ -361,6 +361,82 @@ class CompactDelta:
 
 
 # ---------------------------------------------------------------------------
+# Sentinel sets — the compiled detector-lane table of the adaptive ladder
+# ---------------------------------------------------------------------------
+
+# detector kinds the adaptive controller runs over drained deltas
+DETECT_TRIPWIRE = "tripwire"    # any positive delta trips (NaN/Inf counts)
+DETECT_SPIKE = "spike"          # |x - EWMA| > sigma * MAD (zero fractions)
+DETECT_COLLAPSE = "collapse"    # EWMA - x > sigma * MAD (entropy collapse)
+
+_DETECTOR_BY_EVENT = {
+    "NAN_COUNT": DETECT_TRIPWIRE,
+    "INF_COUNT": DETECT_TRIPWIRE,
+    "ACT_ZERO_FRAC": DETECT_SPIKE,
+    "ATTN_ENTROPY": DETECT_COLLAPSE,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelLane:
+    """One anomaly-detector lane of a scope: which flat dense-layout lane
+    to read off a drained ``CompactDelta`` and which detector to run."""
+
+    scope: str
+    scope_index: int
+    slot_index: int     # slot index within the scope context
+    lane: int           # flat SlotLayout lane (compact values/samples index)
+    slot_id: str
+    detector: str       # DETECT_TRIPWIRE | DETECT_SPIKE | DETECT_COLLAPSE
+
+    @property
+    def key(self) -> int:
+        """Stable baseline key (the flat lane is unique spec-wide)."""
+        return self.lane
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelSet:
+    """A scope's compiled detector lanes — empty when the scope computes no
+    detector-capable events (such scopes can only be woken by the global
+    step-time detector)."""
+
+    scope: str
+    scope_index: int
+    lanes: tuple[SentinelLane, ...]
+
+
+@functools.lru_cache(maxsize=None)
+def compile_sentinels(spec: MonitorSpec) -> tuple[SentinelSet, ...]:
+    """Compile the spec's sentinel sets: per scope, the detector lanes the
+    adaptive controller watches on every drained snapshot.
+
+    Like the probe plans, this is static/trace-free and cached on the
+    hashable spec: the controller pays O(#detector lanes) host arithmetic
+    per drain — no report construction, no device work.  The lane index
+    targets the spec-wide dense layout (``spec_layout``), i.e. the compact
+    ``CompactDelta`` carriers Monitor rings snapshot; padded CounterState
+    deltas are addressed via ``(scope_index, slot_index)`` instead.
+    """
+    lay = spec_layout(spec)
+    out = []
+    for si, ctx in enumerate(spec.contexts):
+        lanes = []
+        for i, slot in enumerate(ctx.slots):
+            det = _DETECTOR_BY_EVENT.get(slot.event)
+            if det is None:
+                continue
+            lanes.append(SentinelLane(
+                scope=ctx.scope, scope_index=si, slot_index=i,
+                lane=lay.offsets[si] + i, slot_id=slot.slot_id,
+                detector=det,
+            ))
+        out.append(SentinelSet(scope=ctx.scope, scope_index=si,
+                               lanes=tuple(lanes)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # Spec fingerprint — plans are part of the spec's identity
 # ---------------------------------------------------------------------------
 

@@ -52,6 +52,7 @@ class ScalpelRuntime:
         ring_depth: int = 8,
         sinks: tuple = (),
         drain_interval_s: float = 0.01,
+        graceful_shutdown: bool = False,
     ):
         self.spec = spec
         self._lock = threading.Lock()
@@ -60,6 +61,9 @@ class ScalpelRuntime:
         self._hooks: list[Callable] = []
         self._step = 0
         self._closed = False
+        self.controller = None
+        self._shutdown_installed = False
+        self._prev_handlers: dict[int, object] = {}
         self.state = CounterState.zeros(spec)
         self.reload_count = 0
         self.last_reload_errors: list[str] = []
@@ -83,6 +87,8 @@ class ScalpelRuntime:
             signal.signal(signal.SIGUSR1, self._on_sigusr1)
         if report_at_exit:
             atexit.register(self._exit_report)
+        if graceful_shutdown:
+            self.install_shutdown()
 
     # -- config reload ----------------------------------------------------
     def _params_from_file(self, path: str) -> MonitorParams:
@@ -186,6 +192,67 @@ class ScalpelRuntime:
         reports = snap.reports
         for fn in list(self._hooks):
             fn(self, reports)
+
+    # -- adaptive controller (core/adaptive.py) ---------------------------
+    def attach_controller(self, config=None):
+        """Attach and install an ``AdaptiveController`` on this runtime's
+        telemetry plane — the closed adaptive loop (escalate / de-escalate /
+        budget) driving ``set_params``/``set_cadence`` from drained
+        snapshots.  Returns the controller; the step loop's existing
+        ``mon.sync(mstate, runtime=runtime)`` picks up its decisions."""
+        from . import adaptive as adaptive_lib
+
+        ctl = adaptive_lib.AdaptiveController(self, config=config)
+        ctl.install()
+        self.controller = ctl
+        return ctl
+
+    # -- graceful shutdown -------------------------------------------------
+    def install_shutdown(self, signals=(signal.SIGTERM,)) -> None:
+        """Install a SIGTERM + atexit path through ``shutdown()``.
+
+        The signal handler chains to whatever handler was installed before
+        (including re-raising a default-disposition signal after the flush,
+        so the process still dies of SIGTERM).  Idempotent; a no-op off the
+        main thread (signal.signal raises there)."""
+        if self._shutdown_installed:
+            return
+        self._shutdown_installed = True
+        atexit.register(self.shutdown)
+        for sig in signals:
+            try:
+                self._prev_handlers[int(sig)] = signal.signal(
+                    sig, self._on_shutdown_signal)
+            except (ValueError, OSError):  # non-main thread / exotic signal
+                pass
+
+    def _on_shutdown_signal(self, signum, frame):
+        self.shutdown()
+        prev = self._prev_handlers.get(int(signum), signal.SIG_DFL)
+        if callable(prev):
+            prev(signum, frame)
+        elif prev == signal.SIG_DFL:
+            # restore the default disposition and re-deliver: the process
+            # must still terminate from SIGTERM, just after the flush
+            signal.signal(signum, signal.SIG_DFL)
+            import os
+
+            os.kill(os.getpid(), signum)
+
+    def shutdown(self) -> str | None:
+        """Graceful shutdown: flush the ring, drain pending snapshots,
+        emit a final report, then close.  Idempotent with ``close()`` —
+        whichever runs first wins and the other is a no-op.  Returns the
+        final report text (None if already closed)."""
+        if self._closed:
+            return None
+        try:
+            report = self.report("ScALPEL final report")
+            print(report)
+        except Exception:  # pragma: no cover - shutdown robustness
+            report = None
+        self.close()
+        return report
 
     def close(self) -> None:
         """Stop the drain thread and flush/close every sink.

@@ -43,6 +43,7 @@ import atexit
 import dataclasses
 import sys
 import threading
+import time
 import weakref
 from typing import Any, Callable
 
@@ -297,6 +298,21 @@ class CallbackSink(Sink):
 # The plane: background drain + fan-out
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class _SinkRecord:
+    """Per-sink failure accounting (drain-thread hardening).
+
+    ``retry_at`` is in units of ``drain_count`` — exponential backoff in
+    drains, not wall time, so a paused producer doesn't burn retries."""
+
+    name: str
+    errors: int = 0
+    consecutive: int = 0
+    retry_at: int = 0
+    dropped: bool = False
+    logged: bool = False
+
+
 _PLANES: "weakref.WeakSet[TelemetryPlane]" = weakref.WeakSet()
 _ATEXIT_INSTALLED = False
 
@@ -322,9 +338,19 @@ class TelemetryPlane:
         self.spec = spec
         self.depth = max(1, int(depth))
         self.interval_s = float(interval_s)
-        self.sinks: list[Sink] = list(sinks)
+        self.sinks: list[Sink] = []
         self._cadence = max(0, int(cadence))
         self.params = TelemetryParams.of(self._cadence)
+
+        # drain-thread hardening: per-sink failure records — a raising sink
+        # is retried with exponential backoff and dropped after
+        # ``max_sink_failures`` consecutive failures, never killing drains
+        self._sink_records: dict[int, _SinkRecord] = {}
+        self._sink_seq = 0
+        self.max_sink_failures = 5
+        self.dropped_sinks: list[str] = []
+        for s in sinks:
+            self.add_sink(s)
 
         self._ring: SnapshotRing | None = None      # latest published ring
         self._own_ring: SnapshotRing | None = None  # host-driven mode
@@ -340,6 +366,9 @@ class TelemetryPlane:
         # incremental drain copies only slots newer than the cursor, so at
         # depth ≫ pending this is far below drain_count * depth)
         self.slots_copied = 0
+        # host seconds spent inside _drain_once (transfers + sink emits) —
+        # the adaptive budget loop's measured monitoring overhead
+        self.drain_seconds = 0.0
 
         self._lock = threading.Lock()          # ring ref + counters
         # RLock: a hook/sink may call runtime.report()/flush() from inside
@@ -369,7 +398,52 @@ class TelemetryPlane:
 
     def add_sink(self, sink: Sink) -> Sink:
         self.sinks.append(sink)
+        self._sink_seq += 1
+        self._sink_records.setdefault(
+            id(sink),
+            _SinkRecord(name=f"{type(sink).__name__}#{self._sink_seq}"),
+        )
         return sink
+
+    @property
+    def sink_errors(self) -> dict[str, int]:
+        """Cumulative emit/flush failures per sink (empty when healthy)."""
+        return {
+            r.name: r.errors for r in self._sink_records.values()
+            if r.errors
+        }
+
+    def _sink_failed(self, sink: Sink, rec: _SinkRecord,
+                     where: str = "emit") -> None:
+        rec.errors += 1
+        rec.consecutive += 1
+        if not rec.logged:
+            rec.logged = True
+            print(
+                f"scalpel telemetry: sink {rec.name} raised in {where} "
+                f"({sys.exc_info()[0].__name__}: {sys.exc_info()[1]}); "
+                "retrying with backoff (logged once)",
+                file=sys.stderr,
+            )
+        if rec.consecutive >= self.max_sink_failures:
+            rec.dropped = True
+            self.dropped_sinks.append(rec.name)
+            try:
+                self.sinks.remove(sink)
+            except ValueError:
+                pass
+            print(
+                f"scalpel telemetry: sink {rec.name} dropped after "
+                f"{rec.consecutive} consecutive failures",
+                file=sys.stderr,
+            )
+            try:
+                sink.close()
+            except Exception:
+                pass
+        else:
+            # exponential backoff in drains: skip 2, 4, 8, ... drains
+            rec.retry_at = self.drain_count + (1 << rec.consecutive)
 
     def _reset_epoch(self) -> None:
         """Drain pending slots, then reset the drain cursor + delta base."""
@@ -448,7 +522,12 @@ class TelemetryPlane:
         """Synchronously drain every pending ring slot and flush sinks."""
         snaps = self._drain_once()
         for s in list(self.sinks):
-            s.flush()
+            try:
+                s.flush()
+            except Exception:
+                rec = self._sink_records.get(id(s))
+                if rec is not None:
+                    self._sink_failed(s, rec, where="flush")
         return snaps
 
     def close(self) -> None:
@@ -489,6 +568,17 @@ class TelemetryPlane:
                 pass
 
     def _drain_once(self) -> list[TelemetrySnapshot]:
+        # time INSIDE the lock: drain_seconds is the budget loop's measured
+        # monitoring overhead, and lock-wait is not work — two threads
+        # racing a drain must not double-count the same wall time
+        with self._drain_lock:
+            t0 = time.perf_counter()
+            try:
+                return self._drain_once_inner()
+            finally:
+                self.drain_seconds += time.perf_counter() - t0
+
+    def _drain_once_inner(self) -> list[TelemetrySnapshot]:
         with self._drain_lock:
             with self._lock:
                 ring = self._ring
@@ -564,10 +654,25 @@ class TelemetryPlane:
                 self.slots_copied += depth
             self._drained_head = head
             self.drain_count += 1
-            for snap in out:
-                for s in list(self.sinks):
+            # hardened fan-out: a raising sink never kills the drain loop —
+            # its failure is recorded, it backs off exponentially (in
+            # drains), and after max_sink_failures consecutive failures it
+            # is dropped; healthy sinks are untouched either way.
+            for s in list(self.sinks):
+                rec = self._sink_records.get(id(s))
+                if rec is None:     # registered behind add_sink's back
+                    self._sink_seq += 1
+                    rec = _SinkRecord(
+                        name=f"{type(s).__name__}#{self._sink_seq}")
+                    self._sink_records[id(s)] = rec
+                if rec.retry_at > self.drain_count:
+                    continue        # backing off
+                for snap in out:
                     try:
                         s.emit(snap)
-                    except Exception:  # pragma: no cover - sink bug guard
-                        pass
+                        rec.consecutive = 0
+                        rec.retry_at = 0
+                    except Exception:
+                        self._sink_failed(s, rec)
+                        break       # this drain is over for this sink
             return out

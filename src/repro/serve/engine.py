@@ -99,6 +99,19 @@ class Engine:
 
         ``seed``: per-request seed; by default the engine's RNG is split and
         carried across calls so repeated sampled generations differ.
+
+        RNG strategy: a seeded request derives its whole sampling stream
+        from ``PRNGKey(seed)`` alone — it never reads or advances the
+        engine-level carried RNG, and the per-token keys are split from
+        the request key, not from any monitoring state.  Consequences the
+        adaptive loop depends on: (a) two requests with the same seed and
+        prompt sample identical tokens regardless of how many unseeded
+        requests ran in between (engine split order is irrelevant), and
+        (b) a monitoring plan swap mid-decode (``runtime.set_params`` /
+        cadence change picked up by the per-token ``mon.sync``) cannot
+        perturb sampling — MonitorParams are masks over counter lanes,
+        data-flow-disjoint from logits and keys.  Tested in
+        test_train_serve.py::test_serve_seeded_rng_independent.
         """
         max_new = max_new or self.cfg.max_new_tokens
         if seed is not None:

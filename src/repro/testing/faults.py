@@ -1,0 +1,150 @@
+"""Deterministic, spec-addressable fault injection (adaptive-loop harness).
+
+The adaptive controller's contract — "an injected mid-run NaN is localized
+to the correct scope within K drained snapshots" — is only testable with
+faults that are (a) deterministic, (b) addressed the same way the monitor
+addresses things (scope + probe-tensor name + step), and (c) in-graph
+where the fault must flow through the probe path.  Three injector kinds:
+
+* ``TensorFault`` — splice NaN/Inf into a named scope's probed tensor at
+  step S (optionally repeating).  ``FaultInjector.corrupt`` is called
+  inside the traced step with a *traced* step scalar, so arming/firing is
+  a ``jnp.where`` on data — the graph never re-traces across the fault
+  boundary, exactly like the monitoring plane it exercises.  The corrupted
+  value is whatever the caller probes; inject on a probe-only copy to keep
+  the fault from propagating into the model state.
+* ``StragglerDelay`` — a host-side sleep at step S
+  (``FaultInjector.host_step`` from the step loop), tripping step-time
+  outlier detectors without touching the graph.
+* ``FailingSink`` / ``SlowSink`` — telemetry-plane IO faults: emits that
+  raise (drain-hardening tests) or stall (overhead-budget tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+
+from repro.core import telemetry as telemetry_lib
+
+_BAD = {"nan": float("nan"), "inf": float("inf")}
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorFault:
+    """NaN/Inf splice into scope ``scope``'s probed tensor ``tensor``.
+
+    Fires when the (traced) step equals ``step`` — or, with ``every > 0``,
+    on every ``every``-th step from ``step`` onward (a never-quiet scope).
+    ``count`` leading elements of the flattened tensor are corrupted.
+    """
+
+    scope: str
+    tensor: str
+    step: int
+    kind: str = "nan"       # "nan" | "inf"
+    count: int = 1
+    every: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _BAD:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerDelay:
+    """Host-side sleep of ``seconds`` before step ``step`` retires —
+    a simulated straggler for step-time outlier detectors."""
+
+    step: int
+    seconds: float
+    every: int = 0
+
+
+class FaultInjector:
+    """The armed fault set. One instance serves a whole run; every fault
+    is addressed by (scope, tensor, step), so the same injector can be
+    handed to the traced step (``corrupt``) and the host loop
+    (``host_step``)."""
+
+    def __init__(self, faults=()):
+        self.tensor_faults: list[TensorFault] = [
+            f for f in faults if isinstance(f, TensorFault)
+        ]
+        self.host_faults: list[StragglerDelay] = [
+            f for f in faults if isinstance(f, StragglerDelay)
+        ]
+        self.fired: list[str] = []      # host-side audit (host faults only)
+
+    # -- in-graph ---------------------------------------------------------
+    def corrupt(self, scope: str, tensor: str, step, x):
+        """Apply every armed TensorFault matching (scope, tensor) to ``x``.
+
+        ``step`` is a traced i32 scalar (e.g. the carried step stamp): the
+        returned graph is fault-free data-flow except a ``jnp.where`` per
+        armed fault — adding or moving a fault never re-traces anything,
+        it is a different *constant*, same program shape.
+        """
+        step = jnp.asarray(step, jnp.int32)
+        for f in self.tensor_faults:
+            if f.scope != scope or f.tensor != tensor:
+                continue
+            if f.every > 0:
+                hit = (step >= f.step) & ((step - f.step) % f.every == 0)
+            else:
+                hit = step == f.step
+            flat = x.reshape(-1)
+            n = max(1, min(int(f.count), flat.shape[0]))
+            bad = jnp.asarray(_BAD[f.kind], x.dtype)
+            flat = flat.at[:n].set(jnp.where(hit, bad, flat[:n]))
+            x = flat.reshape(x.shape)
+        return x
+
+    # -- host-side --------------------------------------------------------
+    def host_step(self, step: int) -> None:
+        """Run host faults due at ``step`` (call once per step, host loop)."""
+        for f in self.host_faults:
+            if f.every > 0:
+                due = step >= f.step and (step - f.step) % f.every == 0
+            else:
+                due = step == f.step
+            if due:
+                time.sleep(f.seconds)
+                self.fired.append(f"straggler {f.seconds}s @ step {step}")
+
+
+class FailingSink(telemetry_lib.Sink):
+    """A sink whose ``emit`` raises deterministically.
+
+    ``fail_first=N``: the first N emit attempts raise, then it heals.
+    ``fail_always=True``: every emit raises (exercises the drop path).
+    Successful emits record ``snap.step`` in ``emitted``.
+    """
+
+    def __init__(self, fail_first: int = 0, fail_always: bool = False,
+                 exc: type = OSError):
+        self.fail_first = int(fail_first)
+        self.fail_always = bool(fail_always)
+        self.exc = exc
+        self.attempts = 0
+        self.emitted: list[int] = []
+
+    def emit(self, snap) -> None:
+        self.attempts += 1
+        if self.fail_always or self.attempts <= self.fail_first:
+            raise self.exc("injected sink failure")
+        self.emitted.append(snap.step)
+
+
+class SlowSink(telemetry_lib.Sink):
+    """A sink that sleeps in ``emit`` — inflates measured drain overhead
+    so budget-loop tests can force the proportional controller to act."""
+
+    def __init__(self, seconds: float = 0.02):
+        self.seconds = float(seconds)
+        self.emitted: list[int] = []
+
+    def emit(self, snap) -> None:
+        time.sleep(self.seconds)
+        self.emitted.append(snap.step)

@@ -43,6 +43,11 @@ class TrainLoopConfig:
     ring_depth: int = 8        # device-side snapshot ring depth
     max_in_flight: int = 2     # bounded dispatch window (steps)
     strict_plan_resume: bool = True  # raise (vs warn) on plan mismatch
+    # closed adaptive loop: True (default AdaptiveConfig) or an
+    # AdaptiveConfig — installs an AdaptiveController on the runtime; the
+    # loop's existing mon.sync picks up its escalation/cadence decisions
+    adaptive: Any = None
+    graceful_shutdown: bool = False  # SIGTERM/atexit flush + final report
 
 
 def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
@@ -59,7 +64,13 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
         jsonl_path=loop_cfg.jsonl_path,
         hook_every=loop_cfg.hook_every,
         ring_depth=loop_cfg.ring_depth,
+        graceful_shutdown=loop_cfg.graceful_shutdown,
     )
+    controller = None
+    if loop_cfg.adaptive:
+        controller = runtime.attach_controller(
+            None if loop_cfg.adaptive is True else loop_cfg.adaptive
+        )
     timer = HostTimer()
     events: list[str] = []
 
@@ -195,8 +206,11 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
         mgr.wait()
 
     report = runtime.report()  # flushes the ring through every sink
+    if controller is not None:
+        events.extend(controller.events)
     runtime.close()  # stop the drain thread; sinks are flushed + closed
     return {
+        "controller": controller,
         "losses": losses,
         "final_loss": losses[-1] if losses else float("nan"),
         "step_stats": timer.stats("train_step"),

@@ -1,0 +1,473 @@
+"""The closed adaptive loop: escalation/localization, hysteresis bounds,
+degradation-ladder round trips with exact counters, drain-thread survival
+through injected sink failures, the overhead budget loop, and graceful
+shutdown.  Faults come from the deterministic harness in
+``repro.testing.faults``."""
+import os
+import signal
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as scalpel
+from repro.core import plan as plan_lib
+from repro.core import telemetry as telemetry_lib
+from repro.core.adaptive import AdaptiveConfig, AdaptiveController
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.core.counters import CounterState, MonitorParams
+from repro.testing.faults import (
+    FailingSink,
+    FaultInjector,
+    SlowSink,
+    StragglerDelay,
+    TensorFault,
+)
+
+EVENTS = ("ACT_RMS", "ACT_ZERO_FRAC", "NAN_COUNT", "INF_COUNT")
+
+
+def _spec(scopes=("hot", "cold")):
+    return MonitorSpec.of([
+        ScopeContext.exhaustive(s, [EventSpec(e, "x") for e in EVENTS])
+        for s in scopes
+    ])
+
+
+def _drive(spec, runtime, steps, injector=None, warmup=0,
+           attach=None):
+    """A monitored loop probing a CONSTANT tensor per scope (so estimates
+    are invariant to WHICH calls get sampled — the round-trip tests compare
+    them across different controller schedules).  ``runtime.flush()`` every
+    step makes controller ticks deterministic.  ``attach`` (if given) runs
+    after the ``warmup`` steps — e.g. installing the controller once jit
+    compile time is out of the step-time baseline."""
+    mon = scalpel.Monitor(spec, telemetry=runtime.telemetry,
+                          counter_axes=())
+    base = jnp.full((16,), 1.5)
+
+    def work(step):
+        for s in spec.scopes:
+            v = base
+            if injector is not None:
+                v = injector.corrupt(s, "x", step, v)
+            with scalpel.function(s):
+                scalpel.probe(x=v)
+        return step + 1
+
+    fn = mon.jit(work)
+    mstate = mon.init()
+    step = jnp.zeros((), jnp.int32)
+    for i in range(warmup):
+        mstate = mon.sync(mstate, runtime=runtime)
+        step, mstate = fn(mstate, step)
+        runtime.on_step(mstate.counters, ring=mstate.ring)
+        runtime.flush()
+    if attach is not None:
+        attach()
+    for i in range(warmup, steps):
+        mstate = mon.sync(mstate, runtime=runtime)
+        step, mstate = fn(mstate, step)
+        runtime.on_step(mstate.counters, ring=mstate.ring)
+        if injector is not None:
+            injector.host_step(i)
+        runtime.flush()
+    return mon, mstate
+
+
+# ---------------------------------------------------------------------------
+# sentinel-set compilation (plan.py)
+# ---------------------------------------------------------------------------
+
+def test_compile_sentinels_table():
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive("a", [EventSpec("ACT_RMS", "x"),
+                                      EventSpec("NAN_COUNT", "x")]),
+        ScopeContext.exhaustive("b", [EventSpec("ACT_ZERO_FRAC", "x"),
+                                      EventSpec("ATTN_ENTROPY", "p"),
+                                      EventSpec("INF_COUNT", "x")]),
+    ])
+    table = plan_lib.compile_sentinels(spec)
+    assert [t.scope for t in table] == ["a", "b"]
+    a, b = table
+    # ACT_RMS carries no detector; lanes target the spec-wide dense layout
+    assert [(l.slot_id, l.detector, l.lane) for l in a.lanes] == [
+        ("NAN_COUNT:x", plan_lib.DETECT_TRIPWIRE, 1),
+    ]
+    assert [(l.slot_id, l.detector, l.lane) for l in b.lanes] == [
+        ("ACT_ZERO_FRAC:x", plan_lib.DETECT_SPIKE, 2),
+        ("ATTN_ENTROPY:p", plan_lib.DETECT_COLLAPSE, 3),
+        ("INF_COUNT:x", plan_lib.DETECT_TRIPWIRE, 4),
+    ]
+    # lanes line up with the layout the compact carriers use
+    assert a.lanes[0].lane == spec.slot_lane("a", "NAN_COUNT:x")
+    assert b.lanes[2].lane == spec.slot_lane("b", "INF_COUNT:x")
+
+
+# ---------------------------------------------------------------------------
+# escalation: localization within K drained snapshots
+# ---------------------------------------------------------------------------
+
+def test_nan_localized_to_correct_scope_within_k_drains():
+    spec = _spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    ctl = runtime.attach_controller(AdaptiveConfig(
+        quiet_drains=100, cooldown_drains=2, overhead_budget=1.0,
+    ))
+    injector = FaultInjector([TensorFault("hot", "x", step=8)])
+    _drive(spec, runtime, steps=16, injector=injector)
+    runtime.close()
+
+    wide = [t for t in ctl.transitions if t.to == "wide"]
+    assert len(wide) == 1 and wide[0].scope == "hot", ctl.events
+    # K=5 acceptance bound (cadence 1: snapshots == steps); detection is
+    # same-snapshot, so the latency is the append+drain pipeline only
+    assert wide[0].step - 8 <= 5, wide[0]
+    assert "NAN_COUNT:x" in wide[0].reason
+    # the hot-swap actually widened the live params for that scope alone
+    hi, ci = spec.scope_index("hot"), spec.scope_index("cold")
+    p = runtime.params
+    assert float(p.scope_mask[hi]) == 1.0
+    assert np.asarray(p.slot_mask)[hi].min() == 1.0
+    assert int(p.period[hi]) == 1
+    assert ctl.levels["cold"] == "configured"
+    # and raised the ring cadence while escalated
+    assert runtime.telemetry.cadence == 1
+
+
+def test_inf_fault_also_trips():
+    spec = _spec(scopes=("hot",))
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    ctl = runtime.attach_controller(AdaptiveConfig(
+        quiet_drains=100, overhead_budget=1.0,
+    ))
+    injector = FaultInjector([TensorFault("hot", "x", step=5, kind="inf")])
+    _drive(spec, runtime, steps=10, injector=injector)
+    runtime.close()
+    wide = [t for t in ctl.transitions if t.to == "wide"]
+    assert len(wide) == 1 and "INF_COUNT:x" in wide[0].reason
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: a never-quiet scope cannot thrash plans
+# ---------------------------------------------------------------------------
+
+def test_never_quiet_scope_escalates_once_and_stays():
+    spec = _spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    ctl = runtime.attach_controller(AdaptiveConfig(
+        quiet_drains=3, cooldown_drains=2, overhead_budget=1.0,
+    ))
+    # NaN on EVERY step from 0: the scope never goes quiet
+    injector = FaultInjector([TensorFault("hot", "x", step=0, every=1)])
+    _drive(spec, runtime, steps=30, injector=injector)
+    runtime.close()
+
+    assert ctl.stats["drains"] >= 25
+    hot_t = [t for t in ctl.transitions if t.scope == "hot"]
+    # the hysteresis bound: ONE escalation, zero flapping after it
+    assert [(t.frm, t.to) for t in hot_t] == [("configured", "wide")]
+    assert ctl.levels["hot"] == "wide"
+    # cold decays to sentinel exactly once — total plan swaps stay bounded
+    # by ladder depth, not by drain count
+    cold_t = [t for t in ctl.transitions if t.scope == "cold"]
+    assert [(t.frm, t.to) for t in cold_t] == [("configured", "sentinel")]
+    assert ctl.stats["plan_swaps"] == len(ctl.transitions) == 2
+
+
+# ---------------------------------------------------------------------------
+# round trip: de-escalation/re-escalation keeps counters exact
+# ---------------------------------------------------------------------------
+
+def _roundtrip_run(with_controller: bool):
+    spec = _spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    ctl = None
+
+    def attach():
+        nonlocal ctl
+        if with_controller:
+            ctl = runtime.attach_controller(AdaptiveConfig(
+                quiet_drains=2, cooldown_drains=1, warmup_drains=2,
+                step_time_sigma=6.0, overhead_budget=1.0,
+            ))
+
+    injector = FaultInjector([StragglerDelay(step=20, seconds=0.25)])
+    mon, mstate = _drive(spec, runtime, steps=32, injector=injector,
+                         warmup=4, attach=attach)
+    calls = np.asarray(mstate.calls).copy()
+    est = mon.estimates(mstate)
+    runtime.close()
+    return calls, est, ctl
+
+
+def test_roundtrip_keeps_counters_exact_vs_always_wide():
+    calls_on, est_on, ctl = _roundtrip_run(with_controller=True)
+    calls_off, est_off, _ = _roundtrip_run(with_controller=False)
+
+    # the ladder actually cycled: decay to sentinel, step-time wake back up
+    down = [t for t in ctl.transitions if t.to == "sentinel"]
+    up = [t for t in ctl.transitions if t.frm == "sentinel"
+          and t.to == "configured"]
+    assert down and up, ctl.events
+    assert ctl.stats["step_time_wakes"] >= 1
+
+    # interception is free at every rung: calls are EXACT either way
+    np.testing.assert_array_equal(calls_on, calls_off)
+    # anomaly-free scopes probe a stationary tensor, so the estimates are
+    # invariant to which calls the controller's schedule sampled
+    for scope in est_off:
+        for slot_id, v_off in est_off[scope].items():
+            v_on = est_on[scope][slot_id]
+            assert np.isfinite(v_on) == np.isfinite(v_off), (scope, slot_id)
+            if np.isfinite(v_off):
+                np.testing.assert_allclose(v_on, v_off, rtol=1e-6,
+                                           err_msg=f"{scope}/{slot_id}")
+
+
+# ---------------------------------------------------------------------------
+# drain-thread hardening (satellite: sinks that raise must not kill drains)
+# ---------------------------------------------------------------------------
+
+def _plane(spec, cadence=1, depth=4):
+    # interval_s long enough that only explicit flush() drains — the tests
+    # own the drain clock
+    return telemetry_lib.TelemetryPlane(spec, depth=depth, cadence=cadence,
+                                        interval_s=60.0)
+
+
+def _pump(plane, spec, n, start=0):
+    """Append+flush n snapshots synchronously; returns drained steps."""
+    seen = []
+    for i in range(start, start + n):
+        plane.append(CounterState.zeros(spec), step=i + 1)
+        plane.flush()
+        seen.append(i + 1)
+    return seen
+
+
+def test_drain_survives_sink_failure_and_heals():
+    spec = _spec()
+    plane = _plane(spec)
+    bad = FailingSink(fail_first=2)
+    good: list[int] = []
+    plane.add_sink(bad)
+    plane.add_sink(telemetry_lib.CallbackSink(
+        lambda s: good.append(s.step)))
+    _pump(plane, spec, 12)
+    # the healthy sink saw EVERY snapshot despite its neighbor raising
+    assert good == list(range(1, 13))
+    # the failing sink backed off exponentially (drains 1, 3, 7: two
+    # failures, then healed) and its errors are accounted
+    assert bad.attempts >= 3 and bad.emitted, (bad.attempts, bad.emitted)
+    errs = plane.sink_errors
+    assert list(errs.values()) == [2], errs
+    assert "FailingSink" in next(iter(errs))
+    assert plane.dropped_sinks == []
+    plane.close()
+
+
+def test_sink_dropped_after_consecutive_failures():
+    spec = _spec()
+    plane = _plane(spec)
+    bad = FailingSink(fail_always=True)
+    good: list[int] = []
+    plane.add_sink(bad)
+    plane.add_sink(telemetry_lib.CallbackSink(
+        lambda s: good.append(s.step)))
+    # backoff schedule retries at drains 1, 3, 7, 15, 31 — the 5th
+    # consecutive failure drops the sink
+    _pump(plane, spec, 34)
+    assert bad.attempts == 5
+    assert bad not in plane.sinks
+    assert len(plane.dropped_sinks) == 1
+    assert "FailingSink" in plane.dropped_sinks[0]
+    assert list(plane.sink_errors.values()) == [5]
+    assert good == list(range(1, 35))  # drains never stopped
+    plane.close()
+
+
+def test_flush_failure_is_accounted_not_raised():
+    class BadFlush(telemetry_lib.Sink):
+        def emit(self, snap):
+            pass
+
+        def flush(self):
+            raise OSError("disk full")
+
+    spec = _spec()
+    plane = _plane(spec)
+    plane.add_sink(BadFlush())
+    _pump(plane, spec, 2)
+    assert sum(plane.sink_errors.values()) >= 1
+    plane.close()
+
+
+# ---------------------------------------------------------------------------
+# budget loop: hold measured overhead within the configured fraction
+# ---------------------------------------------------------------------------
+
+def test_budget_loop_raises_cadence_under_overhead():
+    spec = _spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    # a sink stalling 30ms per snapshot: drain overhead dwarfs the 5%
+    # budget, the proportional controller must back the cadence off
+    runtime.telemetry.add_sink(SlowSink(seconds=0.03))
+    ctl = runtime.attach_controller(AdaptiveConfig(
+        overhead_budget=0.05, quiet_drains=1000,
+    ))
+    _drive(spec, runtime, steps=14)
+    runtime.close()
+    assert runtime.telemetry.cadence > 1, ctl.events
+    assert ctl.stats["cadence_changes"] >= 1
+    assert ctl.overhead_frac > 0.05
+
+
+def test_drain_seconds_accounting_monotonic():
+    spec = _spec()
+    plane = _plane(spec)
+    assert plane.drain_seconds == 0.0
+    _pump(plane, spec, 3)
+    after = plane.drain_seconds
+    assert after > 0.0
+    plane.flush()   # empty drain still ticks the clock (head probe)
+    assert plane.drain_seconds >= after
+    plane.close()
+
+
+# ---------------------------------------------------------------------------
+# standalone controller (no runtime): Monitor.sync picks it up
+# ---------------------------------------------------------------------------
+
+def test_monitor_sync_picks_up_controller_without_runtime():
+    spec = _spec()
+    plane = _plane(spec, cadence=4)
+    ctl = AdaptiveController(
+        spec=spec, params=MonitorParams.all_on(spec), telemetry=plane,
+        config=AdaptiveConfig(escalated_cadence=1),
+    ).install()
+    mon = scalpel.Monitor(spec, telemetry=plane, counter_axes=())
+    mstate = mon.init()
+    assert int(mstate.tparams.cadence) == 4
+    ctl.escalate("hot")
+    m2 = mon.sync(mstate, controller=ctl)
+    assert m2.params is ctl.params
+    assert float(m2.params.scope_mask[spec.scope_index("hot")]) == 1.0
+    # the escalation pinned the plane cadence down; sync carried it in
+    assert plane.cadence == 1 and int(m2.tparams.cadence) == 1
+    assert ctl.levels["hot"] == "wide"
+    plane.close()
+
+
+def test_controller_levels_and_transitions_are_auditable():
+    spec = _spec()
+    plane = _plane(spec)
+    ctl = AdaptiveController(spec=spec, params=MonitorParams.all_on(spec),
+                             telemetry=plane).install()
+    assert set(ctl.levels.values()) == {"configured"}
+    ctl.escalate("cold", "manual")
+    t = ctl.transitions[-1]
+    assert (t.scope, t.frm, t.to) == ("cold", "configured", "wide")
+    assert ctl.stats["escalations"] == 1
+    assert "wide" in ctl.describe()
+    plane.close()
+
+
+# ---------------------------------------------------------------------------
+# graceful shutdown (satellite): SIGTERM/atexit path, idempotent with close
+# ---------------------------------------------------------------------------
+
+def test_shutdown_is_idempotent_with_close(capsys):
+    spec = _spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    runtime.on_step(CounterState.zeros(spec))
+    rep = runtime.shutdown()
+    assert rep is not None and "ScALPEL final report" in rep
+    assert runtime.closed
+    assert runtime.shutdown() is None     # second shutdown: no-op
+    runtime.close()                        # close after shutdown: no-op
+    out = capsys.readouterr().out
+    assert out.count("ScALPEL final report") == 1
+
+
+def test_close_first_makes_shutdown_noop():
+    spec = _spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    runtime.close()
+    assert runtime.shutdown() is None
+
+
+def test_sigterm_flushes_and_chains_previous_handler():
+    calls: list[str] = []
+    prev = signal.signal(signal.SIGTERM, lambda s, f: calls.append("prev"))
+    try:
+        spec = _spec()
+        runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+        runtime.install_shutdown()
+        runtime.install_shutdown()        # idempotent
+        os.kill(os.getpid(), signal.SIGTERM)
+        deadline = time.time() + 5
+        while not calls and time.time() < deadline:
+            time.sleep(0.01)
+        assert calls == ["prev"]          # chained, exactly once
+        assert runtime.closed             # flushed + closed before chaining
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+
+
+# ---------------------------------------------------------------------------
+# fit() integration: the adaptive knob
+# ---------------------------------------------------------------------------
+
+def test_fit_with_adaptive_controller():
+    from repro.configs import model_config
+    from repro.data import DataConfig
+    from repro.models.registry import Arch
+    from repro.optim import OptConfig
+    from repro.train.loop import TrainLoopConfig, fit
+
+    arch = Arch(model_config("xlstm_125m", smoke=True))
+    out = fit(
+        arch,
+        OptConfig(lr=3e-3, warmup_steps=2, total_steps=200,
+                  weight_decay=0.01),
+        DataConfig(vocab=512, seq_len=32, global_batch=4),
+        TrainLoopConfig(steps=10, log_every=0, ckpt_every=0, hook_every=2,
+                        adaptive=AdaptiveConfig(overhead_budget=1.0)),
+    )
+    ctl = out["controller"]
+    assert ctl is not None and ctl.stats["drains"] > 0
+    assert np.isfinite(out["final_loss"])
+
+
+# ---------------------------------------------------------------------------
+# fault harness unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_tensor_fault_is_step_addressed_and_trace_stable():
+    import jax
+
+    inj = FaultInjector([TensorFault("s", "x", step=3, count=2)])
+    traces = []
+
+    @jax.jit
+    def f(step, x):
+        traces.append(1)
+        return inj.corrupt("s", "x", step, x)
+
+    x = jnp.ones((4,))
+    clean = f(jnp.asarray(2, jnp.int32), x)
+    hit = f(jnp.asarray(3, jnp.int32), x)
+    assert len(traces) == 1               # step is data, not a trace key
+    np.testing.assert_array_equal(np.asarray(clean), np.ones((4,)))
+    assert np.isnan(np.asarray(hit)[:2]).all()
+    assert np.isfinite(np.asarray(hit)[2:]).all()
+    # unmatched scope/tensor: untouched
+    same = inj.corrupt("other", "x", jnp.asarray(3, jnp.int32), x)
+    np.testing.assert_array_equal(np.asarray(same), np.ones((4,)))
+
+
+def test_fault_kind_validated():
+    with pytest.raises(ValueError):
+        TensorFault("s", "x", step=0, kind="bogus")

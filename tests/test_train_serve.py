@@ -155,6 +155,35 @@ def test_serve_engine_generate(tiny):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
 
 
+def test_serve_seeded_rng_independent(tiny):
+    """The RNG strategy Engine.generate documents: a seeded request's
+    sampling stream comes from PRNGKey(seed) alone — independent of how
+    many unseeded requests advanced the engine RNG in between, and of any
+    monitoring plan swap mid-decode (MonitorParams are data-flow-disjoint
+    from logits and sampling keys)."""
+    from repro.core.counters import MonitorParams
+
+    params = tiny.init(jax.random.PRNGKey(0))
+    cfg = ServeConfig(cache_len=64, max_new_tokens=6, temperature=0.8)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              tiny.cfg.vocab)
+    eng = Engine(tiny, params, cfg)
+    a, _ = eng.generate({"tokens": toks}, seed=7)
+    # advance the engine's carried RNG with unseeded requests...
+    u1, _ = eng.generate({"tokens": toks})
+    u2, _ = eng.generate({"tokens": toks})
+    # ...and swap the monitoring plan + cadence mid-flight
+    eng.runtime.set_params(MonitorParams.all_off(eng.spec))
+    eng.runtime.hook_every = 3
+    b, _ = eng.generate({"tokens": toks}, seed=7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # sampled (temperature) unseeded requests do differ run to run
+    assert not np.array_equal(np.asarray(u1), np.asarray(u2))
+    # a different seed gives a different stream
+    c, _ = eng.generate({"tokens": toks}, seed=8)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
 def test_serve_runtime_reconfig_between_steps(tiny, tmp_path):
     params = tiny.init(jax.random.PRNGKey(0))
     eng = Engine(tiny, params, ServeConfig(cache_len=64, max_new_tokens=2))
