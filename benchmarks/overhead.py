@@ -531,6 +531,7 @@ def run_monitor_sweep(probe_sizes=(1 << 12, 1 << 14), k: int = 16,
             "min_ms": round(best["monitor_manual"] * 1e3, 3),
             "med_ms": round(med["monitor_manual"] * 1e3, 3),
             "calls": k, "probe_size": n, "probe_kib": kib,
+            "steps_per_commit": 1,
             "state_lanes": spec.n_scopes * spec.max_slots,
         })
         rows.append({
@@ -538,6 +539,7 @@ def run_monitor_sweep(probe_sizes=(1 << 12, 1 << 14), k: int = 16,
             "min_ms": round(best["monitor_wrap"] * 1e3, 3),
             "med_ms": round(med["monitor_wrap"] * 1e3, 3),
             "calls": k, "probe_size": n, "probe_kib": kib,
+            "steps_per_commit": 1,
             "state_lanes": lay.total,
             "manual_med_ms": round(med["monitor_manual"] * 1e3, 3),
             "wrap_over_manual_ratio": round(med_ratio, 4),
@@ -545,6 +547,158 @@ def run_monitor_sweep(probe_sizes=(1 << 12, 1 << 14), k: int = 16,
             "wrap_allclose": allclose,
         })
     return rows
+
+
+def run_megastep_sweep(probe_size: int = 1 << 10, ks=(1, 4, 16),
+                       steps_per_round: int = 64, rounds: int = 3):
+    """Steps-per-commit sweep: ``mon.jit(work, steps_per_commit=K)`` — the
+    K-step ``Monitor.scan`` megastep — against K=1, per-step, on a
+    SHORT-step workload (single hot scope, 4 KiB probe, ~100µs steps).
+
+    Short steps are where the per-call fixed cost — host dispatch, open a
+    collector, commit, rebuild the state wrapper — dominates; the megastep
+    amortizes all of it over K steps inside one ``lax.scan``.  Every case
+    runs the same TOTAL number of monitored steps per timed block (a K=16
+    block makes 16x fewer host dispatches, not less work), and the K>1
+    counters are asserted exactly against K unrolled K=1 steps from the
+    same init — fused and unrolled megasteps are the same program.
+    """
+    import statistics
+    import time as time_lib
+
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive("hot",
+                                [EventSpec(e, "x") for e in PROBE_EVENTS]),
+    ])
+    x0 = jnp.ones((probe_size,)) * 1.5
+    mon = scalpel.Monitor(spec, counter_axes=())
+
+    def work(x):
+        with scalpel.function("hot"):
+            x = x * 1.0001 + 0.1
+            scalpel.probe(x=x)
+        return x
+
+    ks = tuple(sorted(set(ks)))
+    assert 1 in ks and all(steps_per_round % K == 0 for K in ks)
+    built = {K: mon.jit(work, steps_per_commit=K, donate_state=True)
+             for K in ks}
+
+    # exactness first: one K-step megastep == K unrolled commits
+    plain = mon.jit(work)   # un-donated K=1 reference
+    allclose = {}
+    for K in ks:
+        ms_a = mon.init()
+        _, ms_a = built[K](ms_a, x0)
+        ms_b, xb = mon.init(), x0
+        for _ in range(K):
+            xb, ms_b = plain(ms_b, xb)
+        allclose[K] = bool(
+            np.allclose(np.asarray(ms_a.values), np.asarray(ms_b.values),
+                        rtol=1e-5, atol=1e-7)
+            and np.array_equal(np.asarray(ms_a.samples),
+                               np.asarray(ms_b.samples))
+            and np.array_equal(np.asarray(ms_a.calls),
+                               np.asarray(ms_b.calls))
+            and int(ms_a.step) == int(ms_b.step) == K
+        )
+
+    def block_time(K) -> float:
+        """Seconds per MONITORED STEP over a block of steps_per_round."""
+        f, ms, x = built[K], mon.init(), x0
+        for _ in range(2):
+            x, ms = f(ms, x)
+        jax.block_until_ready((x, ms.step))
+        t0 = time_lib.perf_counter()
+        for _ in range(steps_per_round // K):
+            x, ms = f(ms, x)
+        jax.block_until_ready((x, ms.step))
+        return (time_lib.perf_counter() - t0) / steps_per_round
+
+    results = {K: [] for K in ks}
+    order = list(ks)
+    for rnd in range(max(6, rounds * 2)):
+        for K in (order if rnd % 2 == 0 else reversed(order)):
+            results[K].append(block_time(K))
+    med = {K: statistics.median(results[K]) for K in ks}
+
+    rows = []
+    for K in ks:
+        row = {
+            "workload": f"megastep n={probe_size}", "case": "monitor_scan",
+            "steps_per_commit": K, "probe_size": probe_size,
+            "per_step_us": round(med[K] * 1e6, 2),
+            "min_per_step_us": round(min(results[K]) * 1e6, 2),
+            "scan_allclose": allclose[K],
+        }
+        if K != 1:
+            # paired per-round ratios: both block times of a round run
+            # close together, so host drift cancels (same verdict rule as
+            # the wrap-vs-manual sweep)
+            ratios = [a / b for a, b in zip(results[K], results[1])]
+            med_ratio = statistics.median(ratios)
+            row["k1_per_step_us"] = round(med[1] * 1e6, 2)
+            row["scan_over_k1_ratio"] = round(med_ratio, 4)
+            row["scan_gain_pct"] = round(100.0 * (1.0 - med_ratio), 1)
+        rows.append(row)
+    return rows
+
+
+def run_train_boundary_check(k: int = 4) -> list[dict]:
+    """The leaf-wise TRAIN jit boundary: the compiled megastep takes the
+    read-only ``MonitorParams``/``TelemetryParams`` as inputs but never
+    outputs them (the host wrapper reattaches the caller's objects), and
+    the ``TrainState`` is donated — checked on the smoke xlstm via object
+    identity, compiled output-leaf accounting, and the HLO's
+    input_output_alias table.
+    """
+    from repro.configs import model_config
+    from repro.models.registry import Arch
+    from repro.optim import OptConfig
+    from repro.train.step import (TrainState, build_monitor_spec,
+                                  make_train_megastep)
+
+    cfg = model_config("xlstm_125m", smoke=True)
+    arch = Arch(cfg)
+    rng = np.random.default_rng(0)
+    b, s = 2, 16
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                               jnp.int32),
+    }
+    spec = build_monitor_spec(arch, batch)
+    mon = scalpel.Monitor(spec, counter_axes=())
+    step = make_train_megastep(arch, OptConfig(), spec, monitor=mon)
+    jit_step = mon.jit_wrapped(step, donate_argnums=(1,))  # donate tstate
+
+    tstate = TrainState.create(arch, OptConfig(), jax.random.PRNGKey(0))
+    ms = mon.init()
+    batches = jax.tree.map(lambda v: jnp.stack([v] * k), batch)
+    core_args = (ms.calls, ms.values, ms.samples, ms.sched_calls, ms.step,
+                 ms.ring, ms.params, ms.tparams, batches, tstate)
+    abstract = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), a.dtype), core_args)
+    n_out_leaves = len(jax.tree.leaves(
+        jax.eval_shape(jit_step._cjit, *abstract)))
+    n_param_leaves = len(jax.tree.leaves((ms.params, ms.tparams)))
+    hlo = jit_step._cjit.lower(*abstract).compile().as_text()
+    tstate_donated = "input_output_alias" in hlo
+
+    (tstate2, outs), ms2 = jit_step(ms, batches, tstate)
+    return [{
+        "workload": "train xlstm_125m smoke",
+        "case": "train_megastep_boundary", "steps_per_commit": k,
+        # the boundary claim: the SAME host objects come back — params
+        # never leave (or re-enter through) the compiled program
+        "params_reattached": bool(ms2.params is ms.params
+                                  and ms2.tparams is ms.tparams),
+        "compiled_out_leaves": n_out_leaves,
+        "param_leaves_excluded": n_param_leaves,
+        "tstate_donated": bool(tstate_donated),
+        "loss_finite": bool(np.isfinite(np.asarray(outs["loss"])).all()),
+        "steps_taken": int(ms2.step),
+    }]
 
 
 _PSUM_2DEV_SCRIPT = r"""
@@ -638,7 +792,26 @@ def _monitor_summary(rows: list[dict]) -> dict:
     """Aggregate Monitor.wrap vs manual verdicts for the trajectory JSON."""
     wrap = [r for r in rows if r.get("case") == "monitor_wrap"]
     psum = [r for r in rows if r.get("case") == "monitor_psum_2dev"]
+    scan = [r for r in rows if r.get("case") == "monitor_scan"]
+    k16 = [r for r in scan if r.get("steps_per_commit") == 16]
+    train = [r for r in rows if r.get("case") == "train_megastep_boundary"]
     return {
+        # megastep (steps-per-commit) verdicts
+        "megastep_k16_gain_pct": max(
+            (r["scan_gain_pct"] for r in k16), default=None
+        ),
+        "megastep_speedup_15pct": bool(k16) and all(
+            r["scan_over_k1_ratio"] <= 0.85 for r in k16
+        ),
+        "megastep_allclose": bool(scan) and all(
+            r.get("scan_allclose", False) for r in scan
+        ),
+        "train_params_not_output": bool(train) and all(
+            r.get("params_reattached", False) for r in train
+        ),
+        "train_tstate_donated": bool(train) and all(
+            r.get("tstate_donated", False) for r in train
+        ),
         "compared": len(wrap),
         "wrap_not_slower": sum(
             1 for r in wrap if r["wrap_over_manual_ratio"] <= 1.0
@@ -1101,7 +1274,15 @@ def main(fast: bool = False):
         iters=5 if fast else 7,
         rounds=6 if fast else 8,
     )
+    # still fresh-process territory: the megastep ratios compare ~100µs
+    # steps and need the same clean allocator the wrap/manual pairs get
+    rows += run_megastep_sweep(
+        ks=(1, 4, 16),
+        steps_per_round=32 if fast else 64,
+        rounds=3 if fast else 4,
+    )
     rows += run_monitor_psum_check()
+    rows += run_train_boundary_check()
     rows += run_arch_workloads(iters=iters)
     # Fig. 3's axis spans tens to thousands of calls; full mode keeps the
     # 1024-call point (its 6-event unrolled graphs take minutes of XLA CPU
@@ -1154,6 +1335,15 @@ def main(fast: bool = False):
               "vs manual collecting() baseline + 2-device psum check",
     ))
     print(fmt_table(
+        [r for r in rows
+         if r.get("case") in ("monitor_scan", "train_megastep_boundary")],
+        ["workload", "case", "steps_per_commit", "per_step_us",
+         "scan_over_k1_ratio", "scan_gain_pct", "scan_allclose",
+         "params_reattached", "tstate_donated", "loss_finite"],
+        title="Megastep driver: K steps per commit/dispatch (Monitor.scan) "
+              "+ leaf-wise train jit boundary",
+    ))
+    print(fmt_table(
         [r for r in rows if str(r.get("case", "")).startswith("readback_")],
         ["workload", "case", "hook_every", "ring_depth", "min_ms",
          "per_step_us", "readback_gain_pct", "readback_allclose",
@@ -1202,6 +1392,13 @@ def main(fast: bool = False):
         f"{monitor['psum_2dev_equal']}"
     )
     print(
+        f"megastep: K=16 gain {monitor['megastep_k16_gain_pct']}% per step "
+        f"(>=15%: {monitor['megastep_speedup_15pct']}); counters == "
+        f"unrolled: {monitor['megastep_allclose']}; train boundary "
+        f"params-not-output: {monitor['train_params_not_output']} "
+        f"(tstate donated: {monitor['train_tstate_donated']})"
+    )
+    print(
         f"per-set plans vs union: faster in {plans['per_set_faster']}/"
         f"{plans['compared']} configs "
         f"(strict: {plans['strictly_faster']}, max gain "
@@ -1222,7 +1419,7 @@ def main(fast: bool = False):
         f"counters allclose vs always-wide: {adaptive['counters_allclose']}"
     )
     return {
-        "schema": "scalpel-overhead-v6",
+        "schema": "scalpel-overhead-v7",
         "backend": jax.default_backend(),
         "probe_events": list(PROBE_EVENTS),
         "plan_sets": [list(s) for s in PLAN_SETS],

@@ -39,8 +39,10 @@ SCOPES = ("layer/attn", "layer/mlp", "head")
 FAULT_SCOPE = "layer/attn"
 # The NaN must land while its scope still monitors (a scope that already
 # decayed to the sentinel rung is blind to tensor anomalies by design —
-# only the global step-time detector wakes sentinels): with quiet_drains=6
-# and cadence 2, scopes hibernate around step 12, so inject at step 10.
+# only the global step-time detector wakes sentinels): with quiet_steps=12
+# the scopes hibernate around step 12, so inject at step 10.  Patience is
+# denominated in STEPS (snapshot stamp spans), not drained snapshots, so
+# the timing here is independent of the ring cadence.
 NAN_STEP = 10        # carried step at which the NaN is spliced in
 STEPS = 56
 CADENCE = 2          # baseline ring-append cadence (steps per snapshot)
@@ -59,7 +61,7 @@ def main():
     runtime = scalpel.ScalpelRuntime(spec, hook_every=CADENCE,
                                      graceful_shutdown=True)
     ctl = runtime.attach_controller(AdaptiveConfig(
-        quiet_drains=6, cooldown_drains=2, warmup_drains=2,
+        quiet_steps=12, cooldown_steps=4, warmup_drains=2,
         escalated_cadence=1,
         # this demo drains synchronously inside a trivial workload, so the
         # measured drain overhead IS most of the wall time — park the

@@ -25,8 +25,10 @@ Three loops close per drained snapshot:
   outlier detector): widen that scope's event set (scope+slot masks all-on,
   multiplex period 1) and drop the ring cadence to ``escalated_cadence`` so
   snapshots arrive densely while the anomaly is live.
-* **de-escalate** — a scope quiet for ``quiet_drains`` consecutive drained
-  snapshots steps DOWN the degradation ladder: WIDE → CONFIGURED (the
+* **de-escalate** — a scope quiet for ``quiet_steps`` monitored STEPS
+  (measured by the drained deltas' step-stamp spans, so a K-step megastep
+  publishing one snapshot per K steps does not make the ladder K× more
+  patient) steps DOWN the degradation ladder: WIDE → CONFIGURED (the
   params the controller was installed with) → SENTINEL.  The sentinel
   level is ``scope_mask = 0``: the probe path's ``lax.cond`` skips every
   event sweep while interception still counts calls — presence counters
@@ -38,11 +40,20 @@ Three loops close per drained snapshot:
   ``TelemetryPlane.drain_seconds`` against wall time between step stamps)
   within ``overhead_budget`` of step time.
 
+The step-time and budget loops measure per-DRAIN, normalized by the step
+span: snapshots drained in one batch arrive back-to-back (a K-step
+megastep flushes several cadence snapshots at once) with ~zero wall time
+between them, so per-snapshot intervals would feed the EWMA+MAD baselines
+garbage.  Deltas accumulate into a window keyed by the plane's
+``drain_count`` and the detectors tick once per closed window — the
+wall-clock and step spans both cover the full drain interval, and the
+per-step baselines survive a steps-per-commit swap.
+
 Hysteresis: every level change arms a per-scope cooldown of
-``cooldown_drains`` drained snapshots during which further changes for
-that scope are suppressed — a flapping scope cannot thrash plans.  The
-one asymmetry: tripwire escalations (NaN/Inf) bypass the cooldown; losing
-a step's NaN localization to hysteresis would defeat the point.
+``cooldown_steps`` monitored steps during which further changes for that
+scope are suppressed — a flapping scope cannot thrash plans.  The one
+asymmetry: tripwire escalations (NaN/Inf) bypass the cooldown; losing a
+step's NaN localization to hysteresis would defeat the point.
 """
 from __future__ import annotations
 
@@ -82,8 +93,16 @@ class AdaptiveConfig:
     step_time_floor_s: float = 1e-3  # MAD floor for step time (seconds)
 
     # -- hysteresis ladder ------------------------------------------------
-    cooldown_drains: int = 3        # suppress level changes after a change
-    quiet_drains: int = 8           # consecutive quiet drains to step down
+    # Quiet/cooldown accounting is in monitored STEPS (snapshot step-stamp
+    # spans), not drained snapshots: with one snapshot per K-step megastep
+    # the ladder's patience stays constant in steps across a K swap.  The
+    # legacy ``*_drains`` names remain the defaults for the step-valued
+    # knobs (at cadence 1, one drain == one step — identical behavior).
+    cooldown_drains: int = 3        # default for cooldown_steps (legacy name)
+    quiet_drains: int = 8           # default for quiet_steps (legacy name)
+    cooldown_steps: int | None = None  # suppress level changes this many
+                                       # steps after a change
+    quiet_steps: int | None = None     # consecutive quiet steps to step down
     sentinel_enabled: bool = True   # allow CONFIGURED → SENTINEL decay
 
     # -- escalated monitoring ---------------------------------------------
@@ -181,14 +200,22 @@ class AdaptiveController:
 
         n = spec.n_scopes
         self._level = np.full((n,), CONFIGURED, np.int32)
+        # quiet/cooldown ride step stamps, not drain counts (megastep-safe)
         self._quiet = np.zeros((n,), np.int64)
-        self._cooldown_until = np.zeros((n,), np.int64)
+        self._cooldown_until_step = np.zeros((n,), np.int64)
         self._baselines: dict[int, _Baseline] = {}
         self._step_time = _Baseline()
         self._drains = 0
+        self._last_stamp = 0
         self._prev_wall: float | None = None
         self._prev_step: int | None = None
         self._prev_drain_s = float(getattr(telemetry, "drain_seconds", 0.0))
+        # the per-drain measurement window (see module docstring): deltas
+        # accumulate here; the step-time/budget detectors tick on close
+        self._win_id: int | None = None
+        self._acc_wall = 0.0
+        self._acc_steps = 0
+        self._acc_drain_s = 0.0
         self._overhead_frac = 0.0
 
         self._lock = threading.Lock()
@@ -237,6 +264,19 @@ class AdaptiveController:
             self._escalate(self.spec.scope_index(scope), reason,
                            step=-1, tripwire=True)
 
+    # -- resolved ladder knobs (legacy *_drains names are the defaults) ---
+    @property
+    def _quiet_steps(self) -> int:
+        cfg = self.cfg
+        return cfg.quiet_steps if cfg.quiet_steps is not None \
+            else cfg.quiet_drains
+
+    @property
+    def _cooldown_steps(self) -> int:
+        cfg = self.cfg
+        return cfg.cooldown_steps if cfg.cooldown_steps is not None \
+            else cfg.cooldown_drains
+
     # -- the drain-thread callback ----------------------------------------
     def on_snapshot(self, snap: telemetry_lib.TelemetrySnapshot) -> None:
         """One controller tick.  Runs on the drain thread; host work only."""
@@ -244,14 +284,17 @@ class AdaptiveController:
         with self._lock:
             self._drains += 1
             self.stats["drains"] = self._drains
+            step = int(snap.step)
+            # the step span this snapshot's delta covers — the stamp
+            # distance to the previously drained snapshot (>= 1: a K-step
+            # megastep at cadence K spans K steps per snapshot)
+            span = max(1, step - self._last_stamp)
             anomalies = self._detect(snap)
             for idx, (reason, trip) in anomalies.items():
-                self._escalate(idx, reason, step=snap.step, tripwire=trip)
-            self._decay(anomalies, snap.step)
-            self._step_time_tick(snap, now)
-            self._budget_tick(snap, now)
-            self._prev_wall = now
-            self._prev_step = int(snap.step)
+                self._escalate(idx, reason, step=step, tripwire=trip)
+            self._decay(anomalies, step, span)
+            self._interval_tick(snap, now)
+            self._last_stamp = max(self._last_stamp, step)
 
     # -- detectors --------------------------------------------------------
     def _lane_value(self, delta, lane: int, scope_idx: int, slot_idx: int):
@@ -303,15 +346,47 @@ class AdaptiveController:
                 bl.update(x, cfg.ewma_alpha)   # only clean values feed it
         return out
 
-    def _step_time_tick(self, snap, now: float) -> None:
+    # -- per-drain measurement window -------------------------------------
+    def _interval_tick(self, snap, now: float) -> None:
+        """Accumulate this snapshot's wall/step/drain-seconds deltas into
+        the current measurement window; close the window when the plane's
+        ``drain_count`` moves on.
+
+        Snapshots drained in one batch (a K-step megastep flushes several
+        cadence appends at once) share a ``drain_count`` and arrive
+        back-to-back — their per-snapshot wall deltas are ~0 and would
+        poison the per-step baselines.  Summed over a whole window the
+        deltas cover the full drain interval: total wall over total steps
+        is the true per-step time, total drain seconds over total wall is
+        the true overhead fraction, whatever steps-per-commit is.
+        """
+        step = int(snap.step)
+        drain_s_total = float(getattr(self.telemetry, "drain_seconds", 0.0))
+        win = getattr(self.telemetry, "drain_count", None)
+        if self._prev_wall is None:
+            self._prev_wall = now
+            self._prev_step = step
+            self._prev_drain_s = drain_s_total
+            self._win_id = win
+            return
+        if win != self._win_id and self._acc_steps > 0 \
+                and self._acc_wall > 0:
+            self._step_time_tick(self._acc_wall / self._acc_steps, step)
+            self._budget_tick(self._acc_drain_s, self._acc_wall)
+            self._acc_wall = 0.0
+            self._acc_steps = 0
+            self._acc_drain_s = 0.0
+        self._win_id = win
+        self._acc_wall += now - self._prev_wall
+        self._acc_steps += max(0, step - self._prev_step)
+        self._acc_drain_s += max(0.0, drain_s_total - self._prev_drain_s)
+        self._prev_wall = now
+        self._prev_step = step
+        self._prev_drain_s = drain_s_total
+
+    def _step_time_tick(self, per_step: float, step: int) -> None:
         """Global step-time outlier detector — the wake path for sentinel
         scopes (which are blind to tensor anomalies by construction)."""
-        if self._prev_wall is None or self._prev_step is None:
-            return
-        dsteps = int(snap.step) - self._prev_step
-        if dsteps <= 0:
-            return
-        per_step = (now - self._prev_wall) / dsteps
         cfg = self.cfg
         if self._step_time.outlier(per_step, cfg.step_time_sigma,
                                    cfg.step_time_floor_s, cfg.warmup_drains):
@@ -321,8 +396,8 @@ class AdaptiveController:
             woke = False
             for idx in range(self.spec.n_scopes):
                 if self._level[idx] == SENTINEL and \
-                        self._drains >= self._cooldown_until[idx]:
-                    self._set_level(idx, CONFIGURED, reason, snap.step)
+                        step >= self._cooldown_until_step[idx]:
+                    self._set_level(idx, CONFIGURED, reason, step)
                     woke = True
             if not woke:
                 self.events.append(
@@ -337,12 +412,12 @@ class AdaptiveController:
         self._quiet[idx] = 0
         if self._level[idx] >= WIDE:
             return
-        if not tripwire and self._drains < self._cooldown_until[idx]:
+        if not tripwire and step < self._cooldown_until_step[idx]:
             self.stats["suppressed"] += 1
             return
         self._set_level(idx, WIDE, reason, step)
 
-    def _decay(self, anomalies: dict, step: int) -> None:
+    def _decay(self, anomalies: dict, step: int, span: int) -> None:
         cfg = self.cfg
         floor = SENTINEL if cfg.sentinel_enabled else CONFIGURED
         for idx in range(self.spec.n_scopes):
@@ -355,11 +430,13 @@ class AdaptiveController:
             if self._level[idx] == CONFIGURED and \
                     self._base_scope[idx] == 0.0:
                 continue
-            self._quiet[idx] += 1
-            if self._quiet[idx] >= cfg.quiet_drains and \
-                    self._drains >= self._cooldown_until[idx]:
+            # quiet accrues the snapshot's STEP span, not one-per-drain:
+            # a K-step megastep's snapshot attests K quiet steps
+            self._quiet[idx] += span
+            if self._quiet[idx] >= self._quiet_steps and \
+                    step >= self._cooldown_until_step[idx]:
                 self._set_level(idx, int(self._level[idx]) - 1,
-                                f"quiet for {int(self._quiet[idx])} drains",
+                                f"quiet for {int(self._quiet[idx])} steps",
                                 step)
                 self._quiet[idx] = 0
 
@@ -369,7 +446,9 @@ class AdaptiveController:
         if level == prev:
             return
         self._level[idx] = level
-        self._cooldown_until[idx] = self._drains + self.cfg.cooldown_drains
+        # manual escalate() passes step=-1 — anchor on the last stamp then
+        self._cooldown_until_step[idx] = \
+            max(int(step), self._last_stamp) + self._cooldown_steps
         t = Transition(
             drain=self._drains, step=int(step),
             scope=self.spec.scopes[idx],
@@ -413,13 +492,14 @@ class AdaptiveController:
             return max(1, self.cfg.escalated_cadence)
         return self._base_cadence
 
-    def _budget_tick(self, snap, now: float) -> None:
+    def _budget_tick(self, drain_s: float, wall: float) -> None:
         """Proportional cadence retune holding measured monitoring overhead
         within ``overhead_budget`` of wall time.
 
-        Overhead = drain-thread seconds spent between the previous and the
-        current controller tick (``TelemetryPlane.drain_seconds``), over
-        the wall time between step stamps — the step stamp is the clock.
+        Ticks once per closed measurement window (``_interval_tick``):
+        overhead = drain-thread seconds accumulated over the window
+        (``TelemetryPlane.drain_seconds`` deltas), over the window's wall
+        time.
 
         A budget of 1.0 (100% of wall time) or more means "no budget":
         the loop is disabled outright rather than left one measurement
@@ -427,17 +507,9 @@ class AdaptiveController:
         trivial workloads measure drain fractions that legitimately graze
         (and, with tick/drain interval skew, transiently exceed) 1.0.
         """
-        if self.cfg.overhead_budget >= 1.0:
+        if self.cfg.overhead_budget >= 1.0 or wall <= 0:
             return
-        drain_s_total = float(getattr(self.telemetry, "drain_seconds", 0.0))
-        if self._prev_wall is None:
-            self._prev_drain_s = drain_s_total
-            return
-        wall = now - self._prev_wall
-        if wall <= 0:
-            return
-        frac = (drain_s_total - self._prev_drain_s) / wall
-        self._prev_drain_s = drain_s_total
+        frac = drain_s / wall
         a = self.cfg.ewma_alpha
         self._overhead_frac += a * (frac - self._overhead_frac)
 

@@ -255,14 +255,117 @@ class Monitor:
         )
 
     # -- the transformation ----------------------------------------------
-    def wrap(self, fn: Callable) -> Callable:
+    def scan(self, body: Callable, steps_per_commit: int | None = None, *,
+             wrapped: bool = False, unroll: int = 1) -> Callable:
+        """The K-step **megastep** driver: one commit-boundary crossing per
+        ``steps_per_commit`` monitored steps.
+
+        ``wrap`` pays the per-call fixed cost — open a collector, commit,
+        round-trip the host dispatch path — once per step; once steps are
+        short (~100µs) that cost dominates.  ``scan`` drives K steps inside
+        ONE ``lax.scan`` over a single ``MonitorState`` carry instead:
+
+        * compact ``CompactDelta`` counters accumulate in-carry (the same
+          dense-lane machinery ``scan_with_counters`` rides);
+        * the multiplex schedule base ``sched_calls`` advances K× PER-SHARD
+          inside the scan — the mesh-reduced totals never feed the schedule
+          (the ROADMAP invariant);
+        * ``ring_append`` runs INSIDE the scan body, once per inner step, so
+          ``TelemetryParams.cadence`` snapshots land on their true step
+          stamps even when the cadence does not divide K.
+
+        ``body(carry, x) -> (carry', y)`` is an ordinary scan body using
+        ``scalpel.function``/``probe``; the driver opens the collection
+        region and commits per inner step.  With ``wrapped=True`` the body
+        instead has the wrapped signature ``body(mstate, carry, x) ->
+        ((carry', y), mstate')`` and owns its regions — it must fold its
+        delta through ``commit`` exactly once (custom threading, e.g. the
+        train step's ``value_and_grad`` aux collection).
+
+        Returns ``mega(mstate, carry, xs=None) -> ((carry', ys), mstate')``.
+        ``xs`` (per-step inputs stacked on a leading axis) sets the step
+        count when given; otherwise ``steps_per_commit`` does.  Dynamic
+        knob swaps (``mon.sync``) take effect at the next megastep boundary
+        — params/tparams are scan constants, so the adaptive loop reacts at
+        megastep granularity (see README).
+        """
+        if steps_per_commit is not None and steps_per_commit < 1:
+            raise ValueError(
+                f"steps_per_commit must be >= 1, got {steps_per_commit}")
+
+        def mega(mstate: MonitorState, carry, xs=None):
+            if xs is None and steps_per_commit is None:
+                raise ValueError(
+                    "Monitor.scan needs steps_per_commit or per-step xs")
+            # params/tparams are loop constants, not carries: they cannot
+            # change inside a megastep, and keeping them out of the carry
+            # is what lets the jit boundary drop them from the outputs
+            params, tparams = mstate.params, mstate.tparams
+
+            def rebuild(leaves):
+                calls, values, samples, sched, step, ring = leaves
+                return MonitorState(
+                    calls=calls, values=values, samples=samples,
+                    sched_calls=sched, step=step, ring=ring,
+                    params=params, tparams=tparams,
+                    fingerprint=self.spec.fingerprint,
+                )
+
+            def sbody(c, x):
+                leaves, cur = c
+                ms = rebuild(leaves)
+                if wrapped:
+                    (cur2, y), ms2 = body(ms, cur, x)
+                else:
+                    base = ms.sched_calls if ms.sched_calls is not None \
+                        else ms.calls
+                    with self.open(params, calls_base=base) as col:
+                        cur2, y = body(cur, x)
+                    ms2 = self.commit(ms, col.compact_delta())
+                return ((ms2.calls, ms2.values, ms2.samples,
+                         ms2.sched_calls, ms2.step, ms2.ring), cur2), y
+
+            init = ((mstate.calls, mstate.values, mstate.samples,
+                     mstate.sched_calls, mstate.step, mstate.ring), carry)
+            (leaves, carry2), ys = jax.lax.scan(
+                sbody, init, xs,
+                length=steps_per_commit if xs is None else None,
+                unroll=unroll,
+            )
+            return (carry2, ys), rebuild(leaves)
+
+        mega.__name__ = f"scalpel_megastep[{getattr(body, '__name__', 'fn')}]"
+        mega.monitor = self
+        return mega
+
+    def wrap(self, fn: Callable, steps_per_commit: int = 1) -> Callable:
         """``fn(*args, **kw) -> out``  ⟶  ``(mstate, *args, **kw) -> (out,
         mstate')`` — the functional monitored step.
 
         ``fn`` is ordinary model/step code using ``scalpel.function`` /
         ``probe`` / ``scan_with_counters``; nested wrapped calls compose
         (the inner region folds into the outer collector's stack).
+
+        ``steps_per_commit > 1`` turns the wrapped call into a K-step
+        megastep on the ``scan`` driver: ``fn`` must then be a self-map of
+        ONE positional argument (``fn(x) -> x'`` with the output matching
+        the input's structure — a step function whose result feeds the next
+        step), and one wrapped call advances the state by K steps while
+        crossing the commit/dispatch boundary once.
         """
+        if steps_per_commit > 1:
+            mega = self.scan(lambda c, _: (fn(c), None),
+                             steps_per_commit=steps_per_commit)
+
+            def wrapped(mstate: MonitorState, x):
+                (x2, _), ms2 = mega(mstate, x)
+                return x2, ms2
+
+            wrapped.__name__ = \
+                f"scalpel_monitor[{getattr(fn, '__name__', 'fn')}" \
+                f"/K={steps_per_commit}]"
+            wrapped.monitor = self
+            return wrapped
 
         def wrapped(mstate: MonitorState, *args, **kwargs):
             # the collector's call-count base is the PER-SHARD schedule
@@ -278,8 +381,9 @@ class Monitor:
         wrapped.monitor = self
         return wrapped
 
-    def jit(self, fn: Callable, *, donate_argnums=(),
-            donate_state: bool = False, **jit_kwargs) -> Callable:
+    def jit(self, fn: Callable, *, steps_per_commit: int = 1,
+            donate_argnums=(), donate_state: bool = False,
+            **jit_kwargs) -> Callable:
         """``jax.jit(wrap(fn))`` with the state boundary drawn leaf-wise.
 
         ``wrap`` alone returns the whole MonitorState from the jitted
@@ -300,8 +404,35 @@ class Monitor:
         observers (``runtime.on_step(mstate.counters)``) keep such
         references, so leave it off in loops that publish to a runtime.
         The ring is NEVER donated (the telemetry drain thread reads it).
+
+        ``steps_per_commit > 1`` compiles the K-step megastep form of
+        ``wrap`` (see there for the self-map contract): one dispatch per K
+        steps, with the same leaf-wise boundary.
         """
-        wrapped = self.wrap(fn)
+        return self.jit_wrapped(
+            self.wrap(fn, steps_per_commit=steps_per_commit),
+            donate_argnums=donate_argnums, donate_state=donate_state,
+            _name=getattr(fn, "__name__", "fn"), **jit_kwargs,
+        )
+
+    def jit_wrapped(self, wrapped: Callable, *, donate_argnums=(),
+                    donate_state: bool = False, _name: str | None = None,
+                    **jit_kwargs) -> Callable:
+        """Draw the leaf-wise jit boundary around an ALREADY-wrapped step.
+
+        ``wrapped(mstate, *args) -> (out, mstate')`` — anything with the
+        wrapped signature: ``mon.wrap(fn)``, a ``mon.scan`` megastep, or a
+        hand-built step (e.g. ``train.make_train_megastep``) that opens its
+        own regions and commits itself.  The compiled program takes the
+        state leaf-wise, keeps the read-only ``params``/``tparams`` as
+        inputs only (reattached outside the graph — they stop round-tripping
+        the step), and outputs exactly what changed: counter lanes, step
+        stamp, ring.  Donation semantics as in ``jit``.
+
+        The returned callable exposes the underlying ``jax.jit`` object as
+        ``._cjit`` (for cache-stats/no-retrace assertions and lowering/HLO
+        inspection: the donation checks the benchmarks record).
+        """
 
         def core(calls, values, samples, sched_calls, step, ring, params,
                  tparams, *args):
@@ -339,9 +470,11 @@ class Monitor:
                 fingerprint=mstate.fingerprint,
             )
 
-        stepped.__name__ = \
-            f"scalpel_monitor_jit[{getattr(fn, '__name__', 'fn')}]"
+        stepped.__name__ = "scalpel_monitor_jit[{}]".format(
+            _name if _name is not None
+            else getattr(wrapped, "__name__", "fn"))
         stepped.monitor = self
+        stepped._cjit = cjit
         return stepped
 
     def shard_wrap(self, fn: Callable, mesh, in_specs, out_specs) -> Callable:

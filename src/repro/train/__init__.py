@@ -1,2 +1,3 @@
-from .step import TrainState, build_monitor_spec, make_train_step  # noqa: F401
+from .step import (TrainState, build_monitor_spec,  # noqa: F401
+                   make_train_megastep, make_train_step)
 from .loop import TrainLoopConfig, fit  # noqa: F401

@@ -17,6 +17,7 @@ import time
 from typing import Any, Callable
 
 import jax
+import numpy as np
 
 from repro import core as scalpel
 from repro.checkpoint import CheckpointManager
@@ -24,7 +25,7 @@ from repro.core.backends.host_time import HostTimer
 from repro.data import DataConfig, SyntheticLM, prefetch, shard_batch
 from repro.models.registry import Arch
 from repro.optim import OptConfig
-from .step import TrainState, build_monitor_spec, make_train_step
+from .step import TrainState, build_monitor_spec, make_train_megastep
 
 
 @dataclasses.dataclass
@@ -41,7 +42,12 @@ class TrainLoopConfig:
     jsonl_path: str | None = None
     hook_every: int = 10       # telemetry ring-append cadence (steps)
     ring_depth: int = 8        # device-side snapshot ring depth
-    max_in_flight: int = 2     # bounded dispatch window (steps)
+    max_in_flight: int = 2     # bounded dispatch window (megasteps)
+    # steps per commit/dispatch: K>1 fuses K train steps into one compiled
+    # megastep (lax.scan) — one host dispatch, one counter commit boundary,
+    # ring snapshots still on true per-step stamps.  mon.sync (and so the
+    # adaptive controller's decisions) applies at megastep boundaries.
+    steps_per_commit: int = 1
     strict_plan_resume: bool = True  # raise (vs warn) on plan mismatch
     # closed adaptive loop: True (default AdaptiveConfig) or an
     # AdaptiveConfig — installs an AdaptiveController on the runtime; the
@@ -103,12 +109,16 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
     # the functional monitor: ONE pytree threads compact counters, the
     # telemetry ring, the step stamp and the runtime params through the step
     mon = scalpel.Monitor(spec, telemetry=runtime.telemetry)
-    step_fn = make_train_step(arch, opt_cfg, spec,
-                              microbatches=loop_cfg.microbatches,
-                              monitor=mon)
-    # donate the train state only — the MonitorState (whose ring buffers the
-    # drain thread reads while later steps run) must stay valid.
-    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    step_fn = make_train_megastep(arch, opt_cfg, spec,
+                                  microbatches=loop_cfg.microbatches,
+                                  monitor=mon)
+    # leaf-wise jit boundary (the serve engine's): the read-only
+    # MonitorParams/TelemetryParams enter the compiled megastep but are
+    # never outputs — they stop round-tripping the step.  Donate the train
+    # state only (argnum 1 past mstate: batches sit at 0) — the
+    # MonitorState's ring buffers are read by the drain thread while later
+    # steps run and must stay valid.
+    jit_step = mon.jit_wrapped(step_fn, donate_argnums=(1,))
 
     mgr = (CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.ckpt_keep)
            if loop_cfg.ckpt_dir else None)
@@ -153,47 +163,78 @@ def fit(arch: Arch, opt_cfg: OptConfig, data_cfg: DataConfig,
     inflight: collections.deque = collections.deque()
 
     def retire(window: int) -> None:
-        """Block on steps beyond the in-flight window, oldest first."""
+        """Block on megasteps beyond the in-flight window, oldest first.
+        ``out`` leaves are stacked per-step ``[K]`` arrays."""
         while len(inflight) > window:
             rstep, out = inflight.popleft()
             jax.block_until_ready(out["loss"])
-            losses.append(float(out["loss"]))
+            losses.extend(
+                float(v) for v in np.asarray(out["loss"]).reshape(-1))
             last_logged.update(
                 step=rstep, loss=losses[-1],
-                gnorm=float(out["grad_norm"]), lr=float(out["lr"]),
+                gnorm=float(np.asarray(out["grad_norm"]).reshape(-1)[-1]),
+                lr=float(np.asarray(out["lr"]).reshape(-1)[-1]),
             )
 
-    it = prefetch(
-        (data.batch_at(s) for s in range(start_step, loop_cfg.steps)), 2
-    )
-    for step, host_batch in enumerate(it, start=start_step):
-        batch = shard_batch(host_batch, mesh)
+    K = max(1, loop_cfg.steps_per_commit)
+
+    def megabatches():
+        """Host batches grouped into K-step leading-axis stacks (the final
+        chunk may be ragged — a shorter stack traces once per distinct K)."""
+        buf: list = []
+        first = start_step
+        for s in range(start_step, loop_cfg.steps):
+            buf.append(data.batch_at(s))
+            if len(buf) == K or s == loop_cfg.steps - 1:
+                yield first, s, jax.tree.map(
+                    lambda *xs: np.stack(xs), *buf)
+                buf, first = [], s + 1
+
+    it = prefetch(megabatches(), 2)
+    for first_step, last_step, host_batches in it:
+        k_actual = last_step - first_step + 1
+        # the per-step batch axis now sits under the stacked step axis
+        batches = shard_batch(
+            host_batches, mesh,
+            axes={name: (None, "batch") + (None,) * (np.ndim(v) - 2)
+                  for name, v in host_batches.items()},
+        )
         t0 = time.perf_counter()
         # refresh the dynamic knobs riding in the state (mask/period/cadence
-        # — reference swaps, never a re-trace), then run the wrapped step
+        # — reference swaps, never a re-trace); swaps take effect at the
+        # NEXT megastep boundary, so the adaptive loop reacts with up to K
+        # steps of latency
         mstate = mon.sync(mstate, runtime=runtime)
-        tstate, out, mstate = jit_step(tstate, batch, mstate)
-        inflight.append((step, out))
-        # bounded in-flight dispatch: only the step leaving the window is
-        # synchronized, so device and host overlap up to max_in_flight steps
-        # (amortized, the recorded time still equals the true step time).
+        (tstate, out), mstate = jit_step(mstate, batches, tstate)
+        inflight.append((last_step, out))
+        # bounded in-flight dispatch: only the megastep leaving the window
+        # is synchronized, so device and host overlap up to max_in_flight
+        # megasteps (amortized, the recorded time still equals the true
+        # per-step time).
         retire(max_in_flight - 1)
         runtime.on_step(mstate.counters, ring=mstate.ring)
-        timer.record("train_step", time.perf_counter() - t0)
-        if loop_cfg.log_every and step % loop_cfg.log_every == 0 \
-                and last_logged:
-            # metrics belong to the most recently RETIRED step (the window
-            # lags dispatch) — label them with that step, not the current
+        # recorded PER STEP (megastep wall / K): straggler baselines and
+        # step_stats survive a steps_per_commit swap
+        timer.record("train_step",
+                     (time.perf_counter() - t0) / k_actual)
+        if loop_cfg.log_every and last_logged and any(
+                s % loop_cfg.log_every == 0
+                for s in range(first_step, last_step + 1)):
+            # metrics belong to the most recently RETIRED megastep (the
+            # window lags dispatch) — label them with its last step
             print(f"step {last_logged['step']:5d} "
                   f"loss {last_logged['loss']:.4f} "
                   f"gnorm {last_logged['gnorm']:.3f} "
                   f"lr {last_logged['lr']:.2e} "
                   f"dt {timer.stats('train_step').mean_s*1e3:.1f}ms "
-                  f"(dispatched {step}, window {len(inflight)})")
+                  f"(dispatched {last_step}, window {len(inflight)})")
         if mgr is not None and loop_cfg.ckpt_every and \
-                (step + 1) % loop_cfg.ckpt_every == 0:
+                (last_step + 1) // loop_cfg.ckpt_every \
+                > first_step // loop_cfg.ckpt_every:
+            # the cadence can only fire on megastep boundaries; save the
+            # state that exists — after last_step+1 steps
             retire(0)
-            mgr.save(step + 1,
+            mgr.save(last_step + 1,
                      {"model": tstate,
                       "monitor": mon.checkpoint_payload(mstate)},
                      extra=runtime.save_metadata())

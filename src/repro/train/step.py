@@ -83,28 +83,17 @@ def build_monitor_spec(arch: Arch, batch,
     return spec
 
 
-def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
-                    microbatches: int = 1, counter_axes="auto",
-                    monitor: scalpel.Monitor | None = None):
-    """Build the jittable ``train_step(tstate, batch, mstate) ->
-    (tstate', out, mstate')``.
+def _make_step_core(arch: Arch, opt_cfg: OptConfig, spec, microbatches: int,
+                    mon: scalpel.Monitor):
+    """The single-step body in the WRAPPED signature:
+    ``step_core(mstate, tstate, batch) -> ((tstate', out), mstate')``.
 
-    ``mstate`` is the functional MonitorState pytree (``monitor.init()``):
-    compact counters, telemetry ring, step stamp, and the runtime
-    MonitorParams/TelemetryParams — all dynamic inputs, so mask/period/
-    cadence swaps between steps never re-trace.  It must NOT be donated:
-    the telemetry drain thread reads the carried ring's buffers while the
-    next step runs.
-
-    ``counter_axes``: mesh axes to psum counters over (the paper's MPI
-    support).  The default "auto" reduces over whichever ambient-mesh axes
-    the trace binds — cluster-wide sums under ``shard_map``/pmap, a no-op
-    under plain jit or on a single device.  Pass ``monitor`` to share a
-    configured Monitor (e.g. one owning a telemetry plane) instead.
+    Opens its own collection regions (the forward probes ride a
+    ``value_and_grad`` aux, so the ambient-collector path cannot carry
+    them) and folds the step's compact delta through ``mon.commit``
+    exactly once — which makes it directly drivable by
+    ``Monitor.scan(..., wrapped=True)`` for megasteps.
     """
-    mon = monitor if monitor is not None else scalpel.Monitor(
-        spec, counter_axes=counter_axes
-    )
 
     def mb_loss(params, mb, calls_base, mparams):
         with mon.open(mparams, calls_base=calls_base) as col:
@@ -113,7 +102,7 @@ def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
 
     vag = jax.value_and_grad(mb_loss, has_aux=True)
 
-    def train_step(tstate: TrainState, batch, mstate: scalpel.MonitorState):
+    def step_core(mstate: scalpel.MonitorState, tstate: TrainState, batch):
         params = tstate.params
         # the multiplex schedule follows THIS shard's own call counts —
         # never the mesh-reduced totals in mstate.calls (which double as
@@ -174,7 +163,86 @@ def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
         new_state = TrainState(
             params=new_params, opt=new_opt, step=tstate.step + 1,
         )
-        return new_state, {"loss": loss, **stats}, mstate
+        return (new_state, {"loss": loss, **stats}), mstate
+
+    return step_core
+
+
+def make_train_step(arch: Arch, opt_cfg: OptConfig, spec,
+                    microbatches: int = 1, counter_axes="auto",
+                    monitor: scalpel.Monitor | None = None):
+    """Build the jittable ``train_step(tstate, batch, mstate) ->
+    (tstate', out, mstate')``.
+
+    ``mstate`` is the functional MonitorState pytree (``monitor.init()``):
+    compact counters, telemetry ring, step stamp, and the runtime
+    MonitorParams/TelemetryParams — all dynamic inputs, so mask/period/
+    cadence swaps between steps never re-trace.  It must NOT be donated:
+    the telemetry drain thread reads the carried ring's buffers while the
+    next step runs.
+
+    ``counter_axes``: mesh axes to psum counters over (the paper's MPI
+    support).  The default "auto" reduces over whichever ambient-mesh axes
+    the trace binds — cluster-wide sums under ``shard_map``/pmap, a no-op
+    under plain jit or on a single device.  Pass ``monitor`` to share a
+    configured Monitor (e.g. one owning a telemetry plane) instead.
+
+    For the megastep form (one commit/dispatch per K steps) see
+    ``make_train_megastep`` — this single-step signature is kept for
+    callers that drive and jit one step at a time.
+    """
+    mon = monitor if monitor is not None else scalpel.Monitor(
+        spec, counter_axes=counter_axes
+    )
+    step_core = _make_step_core(arch, opt_cfg, spec, microbatches, mon)
+
+    def train_step(tstate: TrainState, batch, mstate: scalpel.MonitorState):
+        (new_state, out), mstate = step_core(mstate, tstate, batch)
+        return new_state, out, mstate
 
     train_step.monitor = mon
     return train_step
+
+
+def make_train_megastep(arch: Arch, opt_cfg: OptConfig, spec,
+                        microbatches: int = 1, counter_axes="auto",
+                        monitor: scalpel.Monitor | None = None):
+    """Build the K-step megastep train driver on ``Monitor.scan``:
+    ``train_megastep(mstate, batches, tstate) -> ((tstate', outs),
+    mstate')``.
+
+    ``batches`` is a per-step batch pytree stacked on a leading axis — its
+    length IS the steps-per-commit for the call (a ragged final chunk just
+    passes a shorter stack; each distinct K traces once).  All K steps run
+    inside one ``lax.scan``: counters accumulate compactly in-carry, the
+    per-shard ``sched_calls`` schedule base advances K×, and the telemetry
+    ring appends on every inner step's true stamp at the dynamic cadence —
+    while the host dispatch/commit boundary is crossed once.
+
+    The wrapped signature plugs straight into ``Monitor.jit_wrapped`` for
+    the leaf-wise boundary (read-only ``params``/``tparams`` enter the
+    compiled step but never leave it; donate ``tstate`` via
+    ``donate_argnums=(1,)`` — ``batches`` sits at 0).
+
+    ``outs`` leaves are stacked ``[K, ...]`` (per-step loss/gnorm/lr).
+    """
+    mon = monitor if monitor is not None else scalpel.Monitor(
+        spec, counter_axes=counter_axes
+    )
+    step_core = _make_step_core(arch, opt_cfg, spec, microbatches, mon)
+
+    def body(mstate, tstate, batch):
+        (tstate, out), mstate = step_core(mstate, tstate, batch)
+        return ((tstate, out), mstate)
+
+    mega = mon.scan(body, wrapped=True)
+
+    def train_megastep(mstate: scalpel.MonitorState, batches,
+                       tstate: TrainState):
+        # the scan carry holds the final TrainState; ys stack each step's
+        # out dict on the leading axis
+        (tstate, outs), mstate = mega(mstate, tstate, batches)
+        return (tstate, outs), mstate
+
+    train_megastep.monitor = mon
+    return train_megastep

@@ -156,8 +156,12 @@ def test_inf_fault_also_trips():
 def test_never_quiet_scope_escalates_once_and_stays():
     spec = _spec()
     runtime = scalpel.ScalpelRuntime(spec, hook_every=1)
+    # step_time_floor_s pins the wall-clock wake path off: this test is
+    # about the tensor-anomaly ladder, and the sub-ms harness steps would
+    # otherwise let a scheduler hiccup wake the sentinel mid-assert
     ctl = runtime.attach_controller(AdaptiveConfig(
         quiet_drains=3, cooldown_drains=2, overhead_budget=1.0,
+        step_time_floor_s=10.0,
     ))
     # NaN on EVERY step from 0: the scope never goes quiet
     injector = FaultInjector([TensorFault("hot", "x", step=0, every=1)])

@@ -1,0 +1,270 @@
+"""Megastep driver (``Monitor.scan`` / ``steps_per_commit``): fused K-step
+commits equal unrolled single steps exactly, ring snapshots land on true
+per-step stamps even when the cadence does not divide K, dynamic knob swaps
+apply at the next megastep boundary without a re-trace, ring-epoch resets
+mid-run keep draining, and the adaptive ladder's quiet accounting stays
+step-denominated under megastep snapshots."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as scalpel
+from repro.core import telemetry as T
+from repro.core.adaptive import AdaptiveConfig, AdaptiveController
+from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+from repro.core.counters import MonitorParams
+
+
+def _spec():
+    return MonitorSpec.of([
+        ScopeContext.multiplexed("hot", [
+            [EventSpec("MEAN", "x")],
+            [EventSpec("L2NORM", "x")],
+        ]),
+        ScopeContext.exhaustive("cold", [EventSpec("ACT_RMS", "x"),
+                                         EventSpec("NUMEL", "x")]),
+    ])
+
+
+def _work(x):
+    for i in range(4):
+        with scalpel.function("hot"):
+            scalpel.probe(x=x * (i + 1))
+    with scalpel.function("cold"):
+        scalpel.probe(x=x + 1)
+    return x * 2.0
+
+
+def _state_equal(a, b):
+    assert np.array_equal(np.asarray(a.calls), np.asarray(b.calls))
+    assert np.array_equal(np.asarray(a.samples), np.asarray(b.samples))
+    np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
+                               rtol=1e-5, atol=1e-7)
+    assert int(a.step) == int(b.step)
+
+
+# ---------------------------------------------------------------------------
+# exactness: one K-step megastep == K unrolled commits
+# ---------------------------------------------------------------------------
+
+def test_megastep_counters_match_unrolled():
+    spec = _spec()
+    mon = scalpel.Monitor(spec, counter_axes=())
+    K = 6
+    mega = mon.jit(_work, steps_per_commit=K)
+    single = jax.jit(mon.wrap(_work))
+
+    ms_a = mon.init()
+    _, ms_a = mega(ms_a, jnp.ones(8))
+
+    ms_b, x = mon.init(), jnp.ones(8)
+    for _ in range(K):
+        x, ms_b = single(ms_b, x)
+
+    _state_equal(ms_a, ms_b)
+    assert int(ms_a.step) == K
+    # the multiplex schedule advanced K x 4 hot calls — the estimates see
+    # both event sets of the 2-way multiplexed scope
+    est = mon.estimates(ms_a)
+    assert np.isfinite(est["hot"]["MEAN:x"])
+    assert np.isfinite(est["hot"]["L2NORM:x"])
+
+
+def test_wrap_steps_per_commit_is_the_scan_driver():
+    spec = _spec()
+    mon = scalpel.Monitor(spec, counter_axes=())
+    w4 = mon.wrap(_work, steps_per_commit=4)
+    w1 = mon.wrap(_work)
+
+    ms_a = mon.init()
+    x_a, ms_a = w4(ms_a, jnp.ones(4))
+
+    ms_b, x_b = mon.init(), jnp.ones(4)
+    for _ in range(4):
+        x_b, ms_b = w1(ms_b, x_b)
+
+    _state_equal(ms_a, ms_b)
+    np.testing.assert_allclose(np.asarray(x_a), np.asarray(x_b))
+
+
+def test_scan_xs_mode_stacks_ys_and_sets_length():
+    spec = _spec()
+    mon = scalpel.Monitor(spec, counter_axes=())
+
+    def body(c, x):
+        with scalpel.function("cold"):
+            scalpel.probe(x=x)
+        return c + jnp.sum(x), c
+
+    mega = mon.scan(body)   # length comes from xs
+    xs = jnp.arange(10.0).reshape(5, 2)
+    (carry, ys), ms = mega(mon.init(), jnp.zeros(()), xs)
+    assert int(ms.step) == 5
+    assert ys.shape == (5,)
+    assert int(np.asarray(ms.calls)[spec.scope_index("cold")]) == 5
+
+
+def test_scan_rejects_bad_k():
+    mon = scalpel.Monitor(_spec(), counter_axes=())
+    with pytest.raises(ValueError):
+        mon.scan(lambda c, x: (c, None), steps_per_commit=0)
+    mega = mon.scan(lambda c, x: (c, None))   # no K, no xs
+    with pytest.raises(ValueError):
+        mega(mon.init(), jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# telemetry: true step stamps when cadence does not divide K
+# ---------------------------------------------------------------------------
+
+def test_cadence_not_dividing_k_lands_true_stamps():
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=32, cadence=3, interval_s=60.0)
+    mon = scalpel.Monitor(spec, telemetry=plane, counter_axes=())
+    mega = mon.jit(_work, steps_per_commit=5)   # cadence 3 does not divide 5
+    ms = mon.init()
+    for _ in range(3):                          # 15 steps
+        _, ms = mega(ms, jnp.ones(4))
+    plane.publish(ms.ring)
+    snaps = plane.flush()
+    assert sorted(s.step for s in snaps) == [3, 6, 9, 12, 15]
+    # snapshot deltas cover exactly one cadence interval each
+    assert all(int(s.delta.calls[spec.scope_index("cold")]) == 3
+               for s in snaps)
+    plane.close()
+
+
+def test_ring_epoch_reset_mid_run_keeps_draining():
+    spec = _spec()
+    plane = T.TelemetryPlane(spec, depth=16, cadence=2, interval_s=60.0)
+    mon = scalpel.Monitor(spec, telemetry=plane, counter_axes=())
+    mega = mon.jit(_work, steps_per_commit=5)
+    got = []
+    plane.add_sink(T.CallbackSink(
+        lambda s: got.append((int(s.step),
+                              int(s.delta.calls[spec.scope_index("cold")])))))
+
+    ms = mon.init()
+    _, ms = mega(ms, jnp.ones(4))
+    plane.publish(ms.ring)
+    plane.flush()
+    assert [s for s, _ in got] == [2, 4]
+
+    # restart the ring lineage mid-run (elastic resume / engine swap):
+    # counters carry on, the fresh epoch's head restarts at 0 — the plane
+    # must reset its cursor and delta base instead of going silent
+    ms = dataclasses.replace(ms, ring=plane.make_ring(compact=True))
+    _, ms = mega(ms, jnp.ones(4))
+    plane.publish(ms.ring)
+    plane.flush()
+    steps = [s for s, _ in got]
+    assert steps == [2, 4, 6, 8, 10]
+    # first post-reset snapshot's delta base is the epoch start: its delta
+    # carries the whole cumulative state (6 cold calls), not state - prev
+    deltas = dict(got)
+    assert deltas[6] == 6 and deltas[8] == 2
+    plane.close()
+
+
+# ---------------------------------------------------------------------------
+# dynamic knobs: swaps land at the next megastep boundary, no re-trace
+# ---------------------------------------------------------------------------
+
+def test_sync_swap_applies_at_next_megastep_without_retrace():
+    spec = _spec()
+    mon = scalpel.Monitor(spec, counter_axes=())
+    traces = []
+
+    def fn(x):
+        traces.append(1)
+        return _work(x)
+
+    mega = mon.jit(fn, steps_per_commit=4)
+    ms = mon.init()
+    _, ms = mega(ms, jnp.ones(4))
+    samples_on = np.asarray(ms.samples).copy()
+
+    # mask everything off: the swap is a reference swap inside the state,
+    # picked up by the NEXT megastep — same compiled program
+    ms = mon.sync(ms, params=MonitorParams.all_off(spec))
+    _, ms = mega(ms, jnp.ones(4))
+    assert len(traces) == 1
+    assert mega._cjit._cache_size() == 1
+    # all 4 inner steps of the second megastep saw the masked params:
+    # calls still count (interception is free) but nothing sampled
+    assert np.array_equal(np.asarray(ms.samples), samples_on)
+    assert int(ms.step) == 8
+    assert int(np.asarray(ms.calls)[spec.scope_index("hot")]) == 32
+
+
+# ---------------------------------------------------------------------------
+# train loop: fit at steps_per_commit=K reproduces single-step training
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fit_megastep_matches_single_step():
+    from repro.configs import model_config
+    from repro.data import DataConfig
+    from repro.models.registry import Arch
+    from repro.optim import OptConfig
+    from repro.train import TrainLoopConfig, fit
+
+    arch = Arch(model_config("xlstm_125m", smoke=True))
+    opt = OptConfig(lr=1e-3, warmup_steps=0)
+    data = DataConfig(vocab=256, seq_len=16, global_batch=4)
+
+    def run(k):
+        out = fit(arch, opt, data,
+                  TrainLoopConfig(steps=5, log_every=0, ckpt_every=0,
+                                  steps_per_commit=k))
+        return out["losses"]
+
+    base = run(1)
+    mega = run(2)   # ragged tail: megasteps of 2, 2, 1 — traces two K's
+    assert len(base) == len(mega) == 5
+    np.testing.assert_allclose(np.asarray(mega), np.asarray(base),
+                               rtol=2e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# adaptive: ladder patience is step-denominated under megastep snapshots
+# ---------------------------------------------------------------------------
+
+def _quiet_work(x):
+    with scalpel.function("hot"):
+        scalpel.probe(x=jnp.full((8,), 1.5))
+    return x
+
+
+def test_adaptive_quiet_accounting_counts_steps_not_drains():
+    spec = MonitorSpec.of([
+        ScopeContext.exhaustive("hot", [EventSpec("ACT_RMS", "x"),
+                                        EventSpec("NAN_COUNT", "x")]),
+    ])
+    K = 4
+    # cadence == K: each megastep publishes ONE snapshot spanning K steps
+    plane = T.TelemetryPlane(spec, depth=32, cadence=K, interval_s=60.0)
+    ctl = AdaptiveController(
+        spec=spec, telemetry=plane,
+        config=AdaptiveConfig(quiet_steps=6, cooldown_steps=1,
+                              overhead_budget=1.0),
+    ).install()
+    mon = scalpel.Monitor(spec, telemetry=plane, counter_axes=())
+    mega = mon.jit(_quiet_work, steps_per_commit=K)
+    ms = mon.init()
+    # 2 megasteps = 8 quiet steps seen as TWO snapshots: step-denominated
+    # patience (6 steps) de-escalates via the stamp spans; the old
+    # snapshot-counted ladder would sit at quiet=2, four snapshots short
+    for _ in range(2):
+        ms = mon.sync(ms, controller=ctl)
+        _, ms = mega(ms, jnp.ones(4))
+        plane.publish(ms.ring)
+        plane.flush()
+    down = [t for t in ctl.transitions
+            if t.frm == "configured" and t.to == "sentinel"]
+    assert down and down[0].step <= 2 * K
+    assert ctl.stats["drains"] == 2      # one spanning snapshot per megastep
+    plane.close()

@@ -107,6 +107,29 @@ mux_schedule_ok = bool(
     and np.asarray(mms.sched_calls).tolist() == [4]  # per-shard base
 )
 
+# ---- megastep under shard_map: per-shard schedule advances K x ---------
+# ONE K=4 megastep call must land exactly where the 4 unrolled calls above
+# did: counters psum-exact, sched_calls still the PER-SHARD base (feeding
+# the reduced totals through the scan carry would advance the set index 2x
+# per inner step and skip set 1 on every shard).
+from jax.experimental.shard_map import shard_map as _shard_map
+
+mm2 = scalpel.Monitor(mspec, counter_axes=("data",))
+mega = mm2.wrap(mwork, steps_per_commit=4)
+smega = jax.jit(_shard_map(
+    mega, mesh=mesh, in_specs=(P(), P("data")), out_specs=(P("data"), P()),
+    check_rep=False,
+))
+_, mega_ms = smega(mm2.init(), x)
+mega_mux_ok = bool(
+    np.asarray(mega_ms.samples).tolist() == [4, 4]
+    and np.asarray(mega_ms.calls).tolist() == [8]
+    and np.asarray(mega_ms.sched_calls).tolist() == [4]
+    and int(mega_ms.step) == 4
+    and np.allclose(np.asarray(mega_ms.values), np.asarray(mms.values),
+                    rtol=1e-6, atol=1e-8)
+)
+
 # ---- plain jit on the same mesh: reduction melts away ------------------
 with sharding_ctx(mesh):
     jstep = jax.jit(mon.wrap(work))
@@ -165,6 +188,7 @@ train_values_close = bool(np.allclose(
 print(json.dumps({
     "psum_equal": psum_equal,
     "mux_schedule_ok": mux_schedule_ok,
+    "mega_mux_ok": mega_mux_ok,
     "jit_ok": jit_ok,
     "train_calls_equal": train_calls_equal,
     "train_values_close": train_values_close,
@@ -188,6 +212,7 @@ def test_monitor_psum_2dev_subprocess():
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["psum_equal"], res
     assert res["mux_schedule_ok"], res
+    assert res["mega_mux_ok"], res
     assert res["jit_ok"], res
     assert res["train_calls_equal"], res
     assert res["train_values_close"], res
