@@ -1261,6 +1261,127 @@ def run_plan_dedup_sweep(m: int = 6, k: int = 8, probe_size: int = 4096,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# continuous-batching serve sweep: lane-packed megastep engine vs serial
+# ---------------------------------------------------------------------------
+
+def run_serve_throughput_sweep(streams=(1, 4, 16), prompt_len: int = 16,
+                               max_new: int = 32, n_lanes: int = 16,
+                               steps_per_commit: int = 8) -> list[dict]:
+    """Continuous-batching serve engine (serve/driver.py) vs the serial
+    per-request oracle, at increasing concurrent-stream counts.
+
+    serve_serial      one static Engine, requests generated back to back —
+                      one dispatch + host sample per token (the pre-lane
+                      engine; per-request wall times summed, the counter
+                      harvest between requests untimed).
+    serve_continuous  ContinuousEngine: all streams submitted up front,
+                      lane-packed K-token megasteps with on-device
+                      sampling, tokens egressing through the telemetry
+                      token ring a megastep behind.
+
+    Exactness is asserted IN-SWEEP, not just reported: greedy tokens must
+    be bitwise equal to the serial oracle per stream, and each request's
+    per-lane counter attribution must match the serial engine's
+    before/after counter delta for the same request.
+    """
+    from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+
+    cfg = model_config("xlstm_125m", smoke=True)
+    arch = Arch(cfg)
+    params = arch.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(cache_len=prompt_len + max_new + 16,
+                       max_new_tokens=max_new, temperature=0.0,
+                       n_lanes=n_lanes, steps_per_commit=steps_per_commit)
+    serial = Engine(arch, params, scfg)
+    cont = ContinuousEngine(arch, params, scfg, spec=serial.spec)
+    n_max = max(streams)
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(100 + i), (1, prompt_len),
+                           0, cfg.vocab)
+        for i in range(n_max)
+    ]
+
+    def counters_np(eng):
+        c = eng.counters
+        return (np.asarray(c.calls).copy(), np.asarray(c.values).copy(),
+                np.asarray(c.samples).copy())
+
+    # warmup both paths (compile prefill/decode/admit/megastep once; the
+    # engines persist across sweep points, so nothing recompiles below)
+    serial.generate({"tokens": prompts[0]})
+    cont.submit(prompts[0])
+    cont.run()
+
+    rows = []
+    for n in streams:
+        want, serial_ctrs, serial_s = [], [], 0.0
+        for p in prompts[:n]:
+            before = counters_np(serial)
+            t0 = time.perf_counter()
+            out, _ = serial.generate({"tokens": p})
+            serial_s += time.perf_counter() - t0
+            after = counters_np(serial)  # untimed harvest between requests
+            want.append(np.asarray(out)[0])
+            serial_ctrs.append(tuple(a - b for a, b in zip(after, before)))
+        toks = n * max_new
+        mega0 = cont.stats["megasteps"]
+        t0 = time.perf_counter()
+        rids = [cont.submit(p) for p in prompts[:n]]
+        res = cont.run()
+        cont_s = time.perf_counter() - t0
+        tokens_exact = all(
+            np.array_equal(res[r].tokens, w) for r, w in zip(rids, want))
+        counters_allclose = all(
+            np.array_equal(np.asarray(res[r].counters.calls), sc[0])
+            and np.allclose(np.asarray(res[r].counters.values), sc[1],
+                            rtol=1e-4, atol=1e-6)
+            and np.array_equal(np.asarray(res[r].counters.samples), sc[2])
+            for r, sc in zip(rids, serial_ctrs)
+        )
+        workload = f"serve N={n}"
+        rows.append({
+            "workload": workload, "case": "serve_serial", "streams": n,
+            "toks": toks, "min_ms": round(serial_s * 1e3, 1),
+            "toks_per_s": round(toks / serial_s, 1),
+            "n_lanes": 1, "steps_per_commit": 1,
+        })
+        rows.append({
+            "workload": workload, "case": "serve_continuous", "streams": n,
+            "toks": toks, "min_ms": round(cont_s * 1e3, 1),
+            "toks_per_s": round(toks / cont_s, 1),
+            "n_lanes": n_lanes, "steps_per_commit": steps_per_commit,
+            "megasteps": cont.stats["megasteps"] - mega0,
+            "serial_toks_per_s": round(toks / serial_s, 1),
+            "speedup_x": round(serial_s / cont_s, 2),
+            "tokens_exact": bool(tokens_exact),
+            "counters_allclose": bool(counters_allclose),
+            "dropped_tokens": cont.runtime.telemetry.dropped_tokens,
+        })
+    return rows
+
+
+def _serve_summary(rows: list[dict]) -> dict:
+    """Aggregate continuous-vs-serial serve verdicts for the trajectory
+    JSON (the acceptance bar: >=3x at the 16-stream point, exact tokens,
+    allclose per-request counters)."""
+    cont = [r for r in rows if r.get("case") == "serve_continuous"]
+    wide = [r for r in cont if r.get("streams", 0) >= 16]
+    return {
+        "compared": len(cont),
+        "tokens_exact_all": bool(cont) and all(
+            r.get("tokens_exact", False) for r in cont),
+        "counters_allclose_all": bool(cont) and all(
+            r.get("counters_allclose", False) for r in cont),
+        "no_dropped_tokens": all(
+            r.get("dropped_tokens", 0) == 0 for r in cont),
+        "speedup_at_16": max(
+            (r["speedup_x"] for r in wide), default=None),
+        "speedup_3x_at_16": bool(wide) and all(
+            r["speedup_x"] >= 3.0 for r in wide),
+    }
+
+
 def main(fast: bool = False):
     iters = 3 if fast else 5
     # the Monitor-vs-manual comparison runs FIRST, on a fresh process: the
@@ -1311,6 +1432,10 @@ def main(fast: bool = False):
         rounds=4 if fast else 6,
     )
     rows += run_plan_dedup_sweep(rounds=2 if fast else 3)
+    rows += run_serve_throughput_sweep(
+        streams=(1, 4, 16),
+        max_new=16 if fast else 32,
+    )
     save_json("overhead.json", rows, sub="bench")
     print(fmt_table(
         rows,
@@ -1367,6 +1492,13 @@ def main(fast: bool = False):
         title="Plan-dedup compile sweep: m identical multiplexed sets "
               "(1 shared branch body) vs m distinct sets (m bodies)",
     ))
+    print(fmt_table(
+        [r for r in rows if str(r.get("case", "")).startswith("serve_")],
+        ["workload", "case", "streams", "toks", "min_ms", "toks_per_s",
+         "megasteps", "speedup_x", "tokens_exact", "counters_allclose"],
+        title="Continuous-batching serve: lane-packed K-token megasteps "
+              "(on-device sampling, token-ring egress) vs serial engine",
+    ))
     # the paper's hierarchy, asserted softly (plan/readback rows carry no
     # perfmon case)
     by = {}
@@ -1383,6 +1515,7 @@ def main(fast: bool = False):
     readback = _readback_summary(rows)
     monitor = _monitor_summary(rows)
     adaptive = _adaptive_summary(rows)
+    serve = _serve_summary(rows)
     print(f"\nhierarchy check: perfmon slowest in {ok}/{len(hier)} workloads")
     print(
         f"Monitor.wrap vs manual: not-slower in "
@@ -1418,8 +1551,14 @@ def main(fast: bool = False):
         f"(within 5%: {adaptive['ctl_within_5pct']}); quiet-scope "
         f"counters allclose vs always-wide: {adaptive['counters_allclose']}"
     )
+    print(
+        f"serve: continuous speedup at 16 streams "
+        f"{serve['speedup_at_16']}x (>=3x: {serve['speedup_3x_at_16']}); "
+        f"greedy tokens == serial: {serve['tokens_exact_all']}; "
+        f"per-request counters allclose: {serve['counters_allclose_all']}"
+    )
     return {
-        "schema": "scalpel-overhead-v7",
+        "schema": "scalpel-overhead-v8",
         "backend": jax.default_backend(),
         "probe_events": list(PROBE_EVENTS),
         "plan_sets": [list(s) for s in PLAN_SETS],
@@ -1434,6 +1573,7 @@ def main(fast: bool = False):
         "monitor": monitor,
         "readback": readback,
         "adaptive": adaptive,
+        "serve": serve,
         "hierarchy_ok": ok,
     }
 

@@ -32,7 +32,8 @@ def _write_overhead_json(payload: dict) -> None:
           f"(plans: {payload.get('plans')}; "
           f"monitor: {payload.get('monitor')}; "
           f"readback: {payload.get('readback')}; "
-          f"adaptive: {payload.get('adaptive')})")
+          f"adaptive: {payload.get('adaptive')}; "
+          f"serve: {payload.get('serve')})")
 
 
 def main() -> int:

@@ -58,7 +58,12 @@ from .instrument import (  # noqa: F401
     scan_with_counters,
     spec_from_discovery,
 )
-from .monitor import Monitor, MonitorState, monitored  # noqa: F401
+from .monitor import (  # noqa: F401
+    LaneMonitorState,
+    Monitor,
+    MonitorState,
+    monitored,
+)
 from .plan import (  # noqa: F401
     CompactDelta,
     MomentPlan,
@@ -90,5 +95,7 @@ from .telemetry import (  # noqa: F401
     TelemetryPlane,
     TelemetrySnapshot,
     TextSink,
+    TokenRing,
     ring_append,
+    token_ring_append,
 )

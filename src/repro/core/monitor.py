@@ -37,6 +37,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # NOTE: the package re-exports a *function* named ``instrument``, which
 # shadows the module attribute — import the needed symbols directly.
@@ -110,6 +111,75 @@ class MonitorState:
             "monitor_step": int(jax.device_get(self.step)),
             "slot_lanes": int(self.values.shape[0]),
         }
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("lane_calls", "lane_values", "lane_samples", "lane_sched",
+                 "calls", "values", "samples", "step", "ring", "params",
+                 "tparams"),
+    meta_fields=("fingerprint",),
+)
+@dataclasses.dataclass
+class LaneMonitorState:
+    """Per-batch-lane monitor state — the continuous-batching serve engine's
+    carry.
+
+    Scopes stay the compile-time spec; the LANE axis is what's new: every
+    decode lane (one request slot in the packed slab) accumulates its own
+    copy of the compact counters, so anomalies attribute to individual
+    requests under load.  The aggregate lanes-summed counters are kept
+    alongside in the spec's ordinary compact shapes — they are what the
+    telemetry ring snapshots and the adaptive controller drains, so the
+    whole existing reporting/adaptive stack works unchanged.
+
+    lane_calls   [n_lanes, n_scopes] i32 — per-lane interception counts
+    lane_values  [n_lanes, total]    f32 — per-lane event values
+    lane_samples [n_lanes, total]    i32 — per-lane monitored-call counts
+    lane_sched   [n_lanes, n_scopes] i32 — per-lane multiplex schedule base
+                 (each lane advances its own event-set schedule; resets with
+                 the lane at admission — and, like ``sched_calls``, is never
+                 mesh-reduced)
+    calls/values/samples — lane-summed cumulative counters (compact layout)
+    step         scalar i32 — decode-step stamp (every inner megastep step)
+    ring         SnapshotRing | None — aggregate-counter telemetry ring
+    params/tparams — runtime knobs (dynamic inputs; megastep constants)
+    """
+
+    lane_calls: Array
+    lane_values: Array
+    lane_samples: Array
+    lane_sched: Array
+    calls: Array
+    values: Array
+    samples: Array
+    step: Array
+    ring: telemetry_lib.SnapshotRing | None
+    params: MonitorParams
+    tparams: telemetry_lib.TelemetryParams
+    fingerprint: str = ""
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.lane_calls.shape[0])
+
+    @property
+    def counters(self) -> plan_lib.CompactDelta:
+        """Aggregate (lane-summed) cumulative counters — what reports, the
+        ring, and the adaptive controller consume."""
+        return plan_lib.CompactDelta(
+            calls=self.calls, values=self.values, samples=self.samples
+        )
+
+    def lane_counters(self, lane: int) -> plan_lib.CompactDelta:
+        """One lane's cumulative counters (prefill + decode so far) — the
+        per-request attribution view.  Device arrays; eager slicing, so
+        calling this off the host loop is async until materialized."""
+        return plan_lib.CompactDelta(
+            calls=self.lane_calls[lane],
+            values=self.lane_values[lane],
+            samples=self.lane_samples[lane],
+        )
 
 
 class Monitor:
@@ -252,6 +322,130 @@ class Monitor:
         return dataclasses.replace(
             mstate, calls=calls, values=values, samples=samples,
             sched_calls=sched_calls, step=step, ring=ring,
+        )
+
+    # -- per-lane states (continuous-batching serving) ---------------------
+    def lane_init(self, n_lanes: int, step: int = 0) -> LaneMonitorState:
+        """A fresh LaneMonitorState: ``n_lanes`` zeroed counter rows plus
+        zeroed aggregate lanes (ring templated on the aggregate — compact
+        spec shapes, so drains/reports/adaptive see the usual layout)."""
+        if n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+        lay = plan_lib.spec_layout(self.spec)
+        if self.telemetry is not None:
+            ring = self.telemetry.make_ring(compact=True)
+            tparams = self.telemetry.params
+        else:
+            ring = None
+            tparams = telemetry_lib.TelemetryParams.of(0)
+        n, t = self.spec.n_scopes, lay.total
+        return LaneMonitorState(
+            lane_calls=jnp.zeros((n_lanes, n), jnp.int32),
+            lane_values=jnp.zeros((n_lanes, t), jnp.float32),
+            lane_samples=jnp.zeros((n_lanes, t), jnp.int32),
+            lane_sched=jnp.zeros((n_lanes, n), jnp.int32),
+            calls=jnp.zeros((n,), jnp.int32),
+            values=jnp.zeros((t,), jnp.float32),
+            samples=jnp.zeros((t,), jnp.int32),
+            step=jnp.asarray(int(step), jnp.int32),
+            ring=ring,
+            params=self.params,
+            tparams=tparams,
+            fingerprint=self.spec.fingerprint,
+        )
+
+    def commit_lanes(self, lstate: LaneMonitorState,
+                     delta: plan_lib.CompactDelta,
+                     active) -> LaneMonitorState:
+        """Fold one decode step's LANE-STACKED delta into the state.
+
+        ``delta`` leaves carry a leading ``[n_lanes]`` axis (a vmapped
+        collector's output); ``active`` is the ``[n_lanes]`` i32 lane mask.
+        Inactive lanes decode garbage under vmap — their deltas are masked
+        to zero, so retired/empty lanes contribute nothing to either the
+        per-lane rows or the aggregate.  The aggregate is the lane sum,
+        mesh-reduced like ``commit``; ``lane_sched`` advances by the
+        UNREDUCED masked calls (the per-shard schedule invariant).  The
+        step stamp advances once per decode step and the aggregate
+        cumulative counters ring-append at the dynamic cadence.
+        """
+        m = jnp.asarray(active, jnp.int32)
+        d_calls = delta.calls * m[:, None]
+        d_values = delta.values * m[:, None].astype(delta.values.dtype)
+        d_samples = delta.samples * m[:, None]
+        agg = self.reduce_delta(plan_lib.CompactDelta(
+            calls=d_calls.sum(axis=0),
+            values=d_values.sum(axis=0),
+            samples=d_samples.sum(axis=0),
+        ))
+        calls = lstate.calls + agg.calls
+        values = lstate.values + agg.values
+        samples = lstate.samples + agg.samples
+        step = lstate.step + 1
+        ring = lstate.ring
+        if ring is not None:
+            ring = telemetry_lib.ring_append(
+                ring,
+                plan_lib.CompactDelta(calls=calls, values=values,
+                                      samples=samples),
+                lstate.tparams, step,
+            )
+        return dataclasses.replace(
+            lstate,
+            lane_calls=lstate.lane_calls + d_calls,
+            lane_values=lstate.lane_values + d_values,
+            lane_samples=lstate.lane_samples + d_samples,
+            lane_sched=lstate.lane_sched + d_calls,
+            calls=calls, values=values, samples=samples,
+            step=step, ring=ring,
+        )
+
+    def admit_lane(self, lstate: LaneMonitorState, lane,
+                   delta: plan_lib.CompactDelta) -> LaneMonitorState:
+        """Seed lane ``lane`` with an admitted request's prefill delta.
+
+        Pure and trace-safe (``lane`` may be a traced i32 scalar — the
+        serve driver jits this into its admission program, so admitting
+        never re-traces or runs eager device ops).
+
+        The lane's counter rows RESET to the delta (the previous occupant
+        was harvested at retirement), its schedule base restarts with it,
+        and the delta folds into the aggregate — so the aggregate matches
+        what a serial engine would have accumulated over the same
+        requests.  Advances the step stamp (an admission is a monitored
+        event, like the serial engine's wrapped prefill).
+        """
+        calls = lstate.calls + delta.calls
+        values = lstate.values + delta.values
+        samples = lstate.samples + delta.samples
+        step = lstate.step + 1
+        ring = lstate.ring
+        if ring is not None:
+            ring = telemetry_lib.ring_append(
+                ring,
+                plan_lib.CompactDelta(calls=calls, values=values,
+                                      samples=samples),
+                lstate.tparams, step,
+            )
+        return dataclasses.replace(
+            lstate,
+            lane_calls=lstate.lane_calls.at[lane].set(delta.calls),
+            lane_values=lstate.lane_values.at[lane].set(delta.values),
+            lane_samples=lstate.lane_samples.at[lane].set(delta.samples),
+            lane_sched=lstate.lane_sched.at[lane].set(delta.calls),
+            calls=calls, values=values, samples=samples,
+            step=step, ring=ring,
+        )
+
+    @staticmethod
+    def lane_counters_host(delta: plan_lib.CompactDelta
+                           ) -> plan_lib.CompactDelta:
+        """Materialize a (possibly still in-flight) lane delta to host
+        numpy — the request-completion sync point."""
+        return plan_lib.CompactDelta(
+            calls=np.asarray(delta.calls),
+            values=np.asarray(delta.values),
+            samples=np.asarray(delta.samples),
         )
 
     # -- the transformation ----------------------------------------------

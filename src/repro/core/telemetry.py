@@ -201,6 +201,73 @@ def ring_append(ring: SnapshotRing, counters,
 
 
 # ---------------------------------------------------------------------------
+# Token egress (serving): per-lane sampled tokens ride the telemetry plane
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TokenRing:
+    """Device-side ring of per-lane sampled tokens — the serve engine's
+    egress lane.
+
+    Counters tolerate a cadence (``ring_append`` samples the cumulative
+    state); sampled tokens do NOT — dropping one corrupts the request's
+    output stream.  So the token ring is appended UNCONDITIONALLY once per
+    decode step inside the megastep scan, and the engine sizes ``depth``
+    to cover more inner steps than ever elapse between drains.
+
+    steps  [depth]           i32 — decode-step stamp per slot (-1 empty)
+    toks   [depth, n_lanes]  i32 — the token each lane CONSUMED this step
+    live   [depth, n_lanes]  i32 — 1 where the lane was active (the other
+                                   lanes' slots are decode garbage)
+    head   scalar            i32 — total appends ever (slot = seq % depth)
+    """
+
+    steps: Array
+    toks: Array
+    live: Array
+    head: Array
+
+    @staticmethod
+    def zeros(n_lanes: int, depth: int = 32) -> "TokenRing":
+        d, n = int(depth), int(n_lanes)
+        if d < 1 or n < 1:
+            raise ValueError(f"token ring needs depth/lanes >= 1, got "
+                             f"{depth}/{n_lanes}")
+        return TokenRing(
+            steps=jnp.full((d,), -1, jnp.int32),
+            toks=jnp.zeros((d, n), jnp.int32),
+            live=jnp.zeros((d, n), jnp.int32),
+            head=jnp.zeros((), jnp.int32),
+        )
+
+    @property
+    def depth(self) -> int:
+        return int(self.steps.shape[0])
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.toks.shape[1])
+
+
+def token_ring_append(ring: TokenRing, toks, live, step) -> TokenRing:
+    """Unconditional token append — pure device work, jit/scan safe.
+
+    ``toks``/``live``: [n_lanes] i32; ``step``: traced i32 scalar.
+    """
+    slot = ring.head % ring.steps.shape[0]
+    return TokenRing(
+        steps=jax.lax.dynamic_update_index_in_dim(
+            ring.steps, jnp.asarray(step, jnp.int32), slot, 0),
+        toks=jax.lax.dynamic_update_index_in_dim(
+            ring.toks, jnp.asarray(toks, jnp.int32), slot, 0),
+        live=jax.lax.dynamic_update_index_in_dim(
+            ring.live, jnp.asarray(live, jnp.int32), slot, 0),
+        head=ring.head + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Host side: snapshots and sinks
 # ---------------------------------------------------------------------------
 
@@ -357,6 +424,15 @@ class TelemetryPlane:
         self._append_fn = jax.jit(ring_append)
         self._appends = 0
 
+        # token-egress lineage (serving): independent ring + cursor — the
+        # engine's host loop drains it explicitly (pipelined one megastep
+        # behind the dispatch), it never rides the background drain thread
+        self._tok_ring: TokenRing | None = None
+        self._tok_cursor = 0
+        self.tok_slots_copied = 0
+        self.dropped_tokens = 0
+        self.token_drains = 0
+
         self._drained_head = 0
         self._prev_state: CounterState | None = None  # last drained (host)
         self._last_step = -1
@@ -471,6 +547,70 @@ class TelemetryPlane:
         if compact:
             return SnapshotRing.zeros_compact(self.spec, self.depth)
         return SnapshotRing.zeros(self.spec, self.depth)
+
+    def make_token_ring(self, n_lanes: int, depth: int = 32) -> TokenRing:
+        """A fresh token-egress ring; starts a new token lineage (the
+        cursor resets — a fresh ring's head restarts at 0)."""
+        with self._lock:
+            self._tok_ring = None
+            self._tok_cursor = 0
+        return TokenRing.zeros(n_lanes, depth)
+
+    def publish_tokens(self, ring: TokenRing) -> None:
+        """Hand the latest carried token ring to the plane (ref swap only).
+
+        Same contract as ``publish``: the ring's buffers must never be
+        donated to a later megastep — ``drain_tokens`` reads them while the
+        next megastep runs.
+        """
+        with self._lock:
+            self._tok_ring = ring
+
+    def drain_tokens(self) -> list[tuple[int, int, np.ndarray, np.ndarray]]:
+        """Drain pending token-ring slots past the token cursor.
+
+        Returns ``(seq, step, toks[n_lanes], live[n_lanes])`` per slot, in
+        append order.  Pure buffer transfers, exactly like the counter
+        drain: one scalar head probe when idle, one stacked copy
+        (``copy_to_host_async`` + host gather) when slots are pending —
+        NEVER device computation (the ROADMAP drain invariant; the np
+        materialization blocks only until the producing megastep retires,
+        which is the engine's sanctioned request-completion sync point).
+        """
+        with self._lock:
+            ring = self._tok_ring
+        self.token_drains += 1
+        if ring is None:
+            return []
+        head = int(jax.device_get(ring.head))
+        if head < self._tok_cursor:
+            # fresh lineage published without make_token_ring()
+            self._tok_cursor = 0
+        if head <= self._tok_cursor:
+            return []
+        depth = ring.depth
+        first = max(self._tok_cursor, head - depth)
+        # tokens are outputs, not samples: an overrun is data loss, so the
+        # engine sizes depth > steps-per-drain; account it loudly anyway
+        self.dropped_tokens += first - self._tok_cursor
+        try:
+            jax.tree.map(
+                lambda x: x.copy_to_host_async()
+                if hasattr(x, "copy_to_host_async") else None,
+                (ring.steps, ring.toks, ring.live),
+            )
+        except Exception:  # pragma: no cover - backend-dependent
+            pass
+        steps_h = np.asarray(ring.steps)
+        toks_h = np.asarray(ring.toks)
+        live_h = np.asarray(ring.live)
+        out = []
+        for seq in range(first, head):
+            s = seq % depth
+            out.append((seq, int(steps_h[s]), toks_h[s], live_h[s]))
+        self.tok_slots_copied += depth
+        self._tok_cursor = head
+        return out
 
     # -- producer side (step loop; never blocks on device) ----------------
     def publish(self, ring: SnapshotRing) -> None:

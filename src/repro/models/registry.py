@@ -85,8 +85,39 @@ class Arch:
         return self.module.init_cache(self.cfg, batch, cache_len,
                                       abstract=abstract)
 
+    def init_lane_cache(self, n_lanes: int, cache_len: int,
+                        abstract: bool = False):
+        """A lane SLAB: ``n_lanes`` stacked batch-1 decode caches.
+
+        The continuous-batching serve engine vmaps ``decode_step`` over the
+        leading lane axis (each lane is an independent request at its own
+        position — the per-lane scalar ``pos`` batches into a ``[n_lanes]``
+        leaf), and admission overwrites one lane's sub-cache in place via
+        ``write_lane``.  Works for every family: KV caches and O(1)
+        recurrent state alike are just pytrees of per-request leaves.
+        """
+        one = self.init_cache(1, cache_len, abstract=abstract)
+        if abstract:
+            return jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((n_lanes,) + x.shape,
+                                               x.dtype),
+                one,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            )
+        return jax.tree.map(
+            lambda x: jnp.zeros((n_lanes,) + jnp.shape(x),
+                                jnp.asarray(x).dtype), one
+        )
+
     def cache_axes(self):
         return self.module.cache_axes(self.cfg)
+
+    def lane_cache_axes(self):
+        """Partition axes for the lane slab: lanes ride the batch axis."""
+        return jax.tree.map(
+            lambda axes: ("batch",) + tuple(axes),
+            self.cache_axes(), is_leaf=lambda x: isinstance(x, tuple),
+        )
 
     # -- shapes ----------------------------------------------------------
     def input_specs(self, shape: ShapeConfig | str,
@@ -144,3 +175,22 @@ class Arch:
                 "(quadratic); see DESIGN.md"
             )
         return True, ""
+
+
+# -- lane-slab plumbing (continuous-batching serving) -----------------------
+
+def write_lane(slab, lane, cache):
+    """Write one request's batch-1 cache into lane ``lane`` of a slab.
+
+    ``lane`` may be a traced i32 scalar — one compiled update serves every
+    lane (dynamic-index scatter), so admission never re-traces.
+    """
+    return jax.tree.map(
+        lambda s, c: s.at[lane].set(jnp.asarray(c).astype(s.dtype)),
+        slab, cache,
+    )
+
+
+def read_lane(slab, lane):
+    """One lane's batch-1 cache view of a slab."""
+    return jax.tree.map(lambda s: s[lane], slab)

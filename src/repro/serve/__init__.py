@@ -1,1 +1,7 @@
-from .engine import Engine, ServeConfig  # noqa: F401
+from .driver import DecodeDriver  # noqa: F401
+from .engine import (  # noqa: F401
+    ContinuousEngine,
+    Engine,
+    ServeConfig,
+)
+from .scheduler import Request, Scheduler, ServeResult  # noqa: F401

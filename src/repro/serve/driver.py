@@ -1,0 +1,215 @@
+"""Device-resident decode driver for the continuous-batching engine.
+
+One jitted **megastep** advances every lane by K tokens without touching
+the host: a ``lax.scan`` (the ``Monitor.scan`` megastep shape — K inner
+steps per commit/dispatch boundary) whose body
+
+1. appends the lanes' CURRENT tokens to the token egress ring (tokens are
+   emitted the step they are consumed, matching the serial engine's
+   emit-then-decode order),
+2. vmaps the single-request ``decode_step`` + on-device sampling over the
+   lane axis, with a per-lane collector opened INSIDE the vmap so counters
+   attribute to lanes (each lane's per-token RNG key splits exactly like
+   the serial engine's, so seeded streams are bitwise identical to a
+   serial run — vmap semantics guarantee stacked-equals-individual),
+3. folds the lane-stacked delta through ``Monitor.commit_lanes`` (inactive
+   lanes masked out; aggregate counters ring-append at the telemetry
+   cadence), and
+4. advances the per-lane active/remaining masks — finished lanes retire
+   in-graph, no re-trace.
+
+K (``steps_per_commit``) bounds both the per-token dispatch amortization
+and the reaction latency: admission and adaptive/knob swaps land at
+megastep boundaries, up to K tokens late (the ROADMAP megastep-latency
+note) — so serving defaults to a modest K rather than the throughput
+optimum.
+
+The jit boundary is leaf-wise (``Monitor.jit_wrapped`` style): the
+read-only ``params``/``tparams``/model params are inputs only, and the
+slab + per-lane decode state are donated — the steady-state loop allocates
+nothing for the cache.  The rings are NEVER donated: the host drains their
+buffers while the next megastep runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import telemetry as telemetry_lib
+from repro.core.monitor import LaneMonitorState, Monitor
+from repro.models.registry import Arch, write_lane
+
+
+class DecodeDriver:
+    """Compiles and owns the three jitted serve programs: the K-step
+    megastep, the admission slab update, and the monitored prefill."""
+
+    def __init__(self, arch: Arch, mon: Monitor, *, cache_len: int,
+                 temperature: float, steps_per_commit: int):
+        if steps_per_commit < 1:
+            raise ValueError(
+                f"steps_per_commit must be >= 1, got {steps_per_commit}")
+        self.arch = arch
+        self.mon = mon
+        self.cache_len = int(cache_len)
+        self.temperature = float(temperature)
+        self.steps_per_commit = int(steps_per_commit)
+
+        sample = self.sample
+        fingerprint = mon.spec.fingerprint
+        k_steps = self.steps_per_commit
+
+        def megastep_core(lane_calls, lane_values, lane_samples, lane_sched,
+                          calls, values, samples, step, ring,
+                          mparams, tparams, params,
+                          slab, tok, keys, active, remaining, tok_ring):
+            def lane_step(sched, cache, t, key):
+                # collector opened INSIDE the vmap: trace-time call counts
+                # are identical across lanes (same program), and the delta
+                # comes back as an explicit lane-stacked output
+                with mon.open(mparams, calls_base=sched) as col:
+                    logits, cache2 = arch.decode_step(params, cache, t)
+                delta = col.compact_delta()
+                # serial contract, per lane: split, then sample with the sub
+                key2, sub = jax.random.split(key)
+                nxt = sample(logits, sub)
+                return cache2, nxt, key2, delta
+
+            def sbody(c, _):
+                (slab, tok, keys, active, remaining,
+                 lane_calls, lane_values, lane_samples, lane_sched,
+                 calls, values, samples, step, ring, tok_ring) = c
+                step2 = step + 1
+                # egress first: the token each lane consumes THIS step (the
+                # serial engine emits tok_i, then decodes it)
+                tok_ring2 = telemetry_lib.token_ring_append(
+                    tok_ring, tok[:, 0, 0], active, step2)
+                slab2, nxt, keys2, delta = jax.vmap(
+                    lane_step, in_axes=(0, 0, 0, 0)
+                )(lane_sched, slab, tok, keys)
+                ls = LaneMonitorState(
+                    lane_calls=lane_calls, lane_values=lane_values,
+                    lane_samples=lane_samples, lane_sched=lane_sched,
+                    calls=calls, values=values, samples=samples,
+                    step=step, ring=ring, params=mparams, tparams=tparams,
+                    fingerprint=fingerprint,
+                )
+                ls2 = mon.commit_lanes(ls, delta, active)
+                remaining2 = remaining - active
+                active2 = ((active > 0) & (remaining2 > 0)).astype(jnp.int32)
+                return (slab2, nxt, keys2, active2, remaining2,
+                        ls2.lane_calls, ls2.lane_values, ls2.lane_samples,
+                        ls2.lane_sched, ls2.calls, ls2.values, ls2.samples,
+                        ls2.step, ls2.ring, tok_ring2), None
+
+            init = (slab, tok, keys, active, remaining,
+                    lane_calls, lane_values, lane_samples, lane_sched,
+                    calls, values, samples, step, ring, tok_ring)
+            out, _ = jax.lax.scan(sbody, init, None, length=k_steps)
+            return out
+
+        # arg positions: 0-8 monitor leaves, 9-11 read-only knobs/params,
+        # 12-16 slab + per-lane decode state (donated — the engine holds
+        # only the outputs), 17 token ring (never donated; host-drained)
+        self._megastep = jax.jit(megastep_core,
+                                 donate_argnums=(12, 13, 14, 15, 16))
+
+        def admit_core(slab, tok, keys, active, remaining,
+                       lane_calls, lane_values, lane_samples, lane_sched,
+                       calls, values, samples, step, ring, tparams,
+                       lane, cache, tok0, key0, max_new, pdelta):
+            slab2 = write_lane(slab, lane, cache)
+            ls = LaneMonitorState(
+                lane_calls=lane_calls, lane_values=lane_values,
+                lane_samples=lane_samples, lane_sched=lane_sched,
+                calls=calls, values=values, samples=samples,
+                step=step, ring=ring, params=None, tparams=tparams,
+                fingerprint=fingerprint,
+            )
+            ls2 = mon.admit_lane(ls, lane, pdelta)
+            return ((slab2,
+                     tok.at[lane].set(tok0),
+                     keys.at[lane].set(key0),
+                     active.at[lane].set(1),
+                     remaining.at[lane].set(
+                         jnp.asarray(max_new, jnp.int32))),
+                    (ls2.lane_calls, ls2.lane_values, ls2.lane_samples,
+                     ls2.lane_sched, ls2.calls, ls2.values, ls2.samples,
+                     ls2.step, ls2.ring))
+
+        # lane/max_new are traced scalars: ONE compiled admission program
+        # serves every lane and request length — no re-trace on admission
+        self._admit = jax.jit(admit_core, donate_argnums=(0, 1, 2, 3, 4))
+
+        def prefill_core(params, mparams, tokens, key):
+            base = jnp.zeros((mon.spec.n_scopes,), jnp.int32)
+            with mon.open(mparams, calls_base=base) as col:
+                cache, logits = arch.prefill(
+                    params, {"tokens": tokens}, cache_len=cache_len)
+            # serial first-token contract: sample with the UNSPLIT request
+            # key on the prefill logits (the lane splits per token after)
+            tok0 = sample(logits, key)
+            return cache, tok0, col.compact_delta()
+
+        # retraces per distinct prompt length (the usual bucketing caveat)
+        self._prefill = jax.jit(prefill_core)
+
+    # -- host-visible entry points ----------------------------------------
+    def sample(self, logits, rng):
+        """Identical semantics to the serial ``Engine._sample``."""
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        logits = logits / self.temperature
+        return jax.random.categorical(rng, logits)[:, None].astype(jnp.int32)
+
+    def prefill(self, params, mparams, tokens, key):
+        """Monitored batch-1 prefill + first-token sample:
+        ``(cache, tok0, compact delta)`` — one dispatch, all async."""
+        return self._prefill(params, mparams,
+                             jnp.asarray(tokens, jnp.int32), key)
+
+    def admit(self, lstate: LaneMonitorState, slab, tok, keys, active,
+              remaining, lane, cache, tok0, key0, max_new, pdelta):
+        """Write an admitted request into lane ``lane`` and seed its
+        counter rows with the prefill delta — one async dispatch (donates
+        the previous slab/lane-state buffers; rings are never donated)."""
+        (state, leaves) = self._admit(
+            slab, tok, keys, active, remaining,
+            lstate.lane_calls, lstate.lane_values, lstate.lane_samples,
+            lstate.lane_sched, lstate.calls, lstate.values, lstate.samples,
+            lstate.step, lstate.ring, lstate.tparams,
+            jnp.asarray(int(lane), jnp.int32), cache, tok0, key0,
+            jnp.asarray(int(max_new), jnp.int32), pdelta,
+        )
+        (lane_calls, lane_values, lane_samples, lane_sched,
+         calls, values, samples, step, ring) = leaves
+        ls2 = LaneMonitorState(
+            lane_calls=lane_calls, lane_values=lane_values,
+            lane_samples=lane_samples, lane_sched=lane_sched,
+            calls=calls, values=values, samples=samples, step=step,
+            ring=ring, params=lstate.params, tparams=lstate.tparams,
+            fingerprint=lstate.fingerprint,
+        )
+        return state, ls2
+
+    def megastep(self, lstate: LaneMonitorState, params,
+                 slab, tok, keys, active, remaining, tok_ring):
+        """Dispatch one K-token megastep; returns the new lane decode state
+        tuple, the new LaneMonitorState, and the new token ring."""
+        (slab2, tok2, keys2, active2, remaining2,
+         lane_calls, lane_values, lane_samples, lane_sched,
+         calls, values, samples, step, ring, tok_ring2) = self._megastep(
+            lstate.lane_calls, lstate.lane_values, lstate.lane_samples,
+            lstate.lane_sched, lstate.calls, lstate.values, lstate.samples,
+            lstate.step, lstate.ring, lstate.params, lstate.tparams, params,
+            slab, tok, keys, active, remaining, tok_ring,
+        )
+        ls2 = LaneMonitorState(
+            lane_calls=lane_calls, lane_values=lane_values,
+            lane_samples=lane_samples, lane_sched=lane_sched,
+            calls=calls, values=values, samples=samples, step=step,
+            ring=ring, params=lstate.params, tparams=lstate.tparams,
+            fingerprint=lstate.fingerprint,
+        )
+        return (slab2, tok2, keys2, active2, remaining2), ls2, tok_ring2

@@ -1,19 +1,29 @@
-"""Batched serving engine: jitted prefill + decode with ScALPEL counters.
+"""Serving engines: jitted prefill + decode with ScALPEL counters.
 
-Static-batch engine (the production norm for TPU serving): a fixed batch of
-slots, one prefill per batch, token-synchronous decode steps.  Decode
-counters use the same MonitorSpec machinery as training, so a serving
-deployment gets per-scope KV/attention monitoring and the same runtime
-reconfiguration (mask/period swaps between decode steps).
+Two engines share the monitoring machinery:
 
-Monitoring rides the functional ``Monitor`` API: prefill and decode are
-``mon.wrap``-ped pure functions of ONE MonitorState pytree — the compact
-counters, the device-side telemetry ring, and the decode-step stamp that
-the old engine carried as three separate attributes.  Each wrapped call
-ring-appends in-graph (lax.cond-guarded on the runtime cadence) and the
-ring is drained by the telemetry plane's background thread.  The engine
-only synchronizes with the device for its outputs — prefill logits and the
-final sampled tokens — never for monitoring.
+* ``Engine`` — the static-batch reference: a fixed batch of slots, one
+  prefill per batch, token-synchronous decode steps driven by a host loop
+  (one dispatch + host sample per token).  Kept as the semantics oracle:
+  the continuous engine's greedy tokens and seeded RNG streams are
+  bitwise-checked against it.
+
+* ``ContinuousEngine`` — the production path (ROADMAP item 1): a packed
+  request SLAB of ``n_lanes`` decode lanes, each an independent request at
+  its own position over its own KV/recurrent cache, advanced K tokens per
+  dispatch by a device-resident megastep (``serve/driver.py``) with
+  on-device sampling.  New requests enter free lanes between megasteps
+  (one compiled admission program — no re-trace); finished lanes retire
+  in-graph via the active mask.  Sampled tokens leave through the
+  telemetry plane's token ring, drained one megastep behind the dispatch,
+  so the decode hot loop performs ZERO host syncs per token — the only
+  blocking readback is the final drain at request completion.
+
+Monitoring rides the functional ``Monitor`` API in both: the serial engine
+threads one ``MonitorState``; the continuous engine threads a
+``LaneMonitorState`` whose per-lane counter rows attribute NaN/entropy
+anomalies to individual requests while the lane-summed aggregate feeds the
+same ring → drain → adaptive-controller stack unchanged.
 """
 from __future__ import annotations
 
@@ -28,6 +38,9 @@ import numpy as np
 from repro import core as scalpel
 from repro.models.registry import Arch
 
+from .driver import DecodeDriver
+from .scheduler import Scheduler, ServeResult  # noqa: F401  (re-export)
+
 
 @dataclasses.dataclass
 class ServeConfig:
@@ -35,6 +48,34 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 => greedy
     seed: int = 0
+    # continuous-batching knobs (ignored by the serial Engine):
+    # n_lanes — decode lanes in the packed slab (concurrent requests).
+    # steps_per_commit — K tokens per megastep dispatch.  Bounds BOTH the
+    #   dispatch amortization and the reaction latency: admission, adaptive
+    #   decisions, and knob swaps land at megastep boundaries, up to K
+    #   tokens late (the ROADMAP megastep note) — so serving defaults to a
+    #   modest K instead of the pure-throughput optimum.
+    # token_ring_depth — token egress ring slots; 0 => max(2*K, 8) (the
+    #   pipelined drain consumes K slots per megastep).
+    n_lanes: int = 4
+    steps_per_commit: int = 8
+    token_ring_depth: int = 0
+
+
+def _discover_spec(arch: Arch, cfg: ServeConfig):
+    """Scope discovery from an abstract prefill + decode (shared by both
+    engines so they compile identical probe plans)."""
+
+    def probe_fn(p, toks):
+        cache, logits = arch.prefill(p, {"tokens": toks},
+                                     cache_len=cfg.cache_len)
+        return arch.decode_step(p, cache, toks[:, :1])
+
+    seen = scalpel.discover(
+        probe_fn, arch.abstract_params(),
+        jax.ShapeDtypeStruct((1, min(32, cfg.cache_len)), jnp.int32),
+    )
+    return scalpel.spec_from_discovery(seen)
 
 
 class Engine:
@@ -44,24 +85,17 @@ class Engine:
         self.params = params
         self.cfg = cfg
         if spec is None:
-            # discover scopes from an abstract prefill+decode
-            def probe_fn(p, toks):
-                cache, logits = arch.prefill(p, {"tokens": toks},
-                                             cache_len=cfg.cache_len)
-                return arch.decode_step(p, cache, toks[:, :1])
-
-            seen = scalpel.discover(
-                probe_fn, arch.abstract_params(),
-                jax.ShapeDtypeStruct((1, min(32, cfg.cache_len)), jnp.int32),
-            )
-            spec = scalpel.spec_from_discovery(seen)
+            spec = _discover_spec(arch, cfg)
         self.spec = spec
         self.runtime = runtime or scalpel.ScalpelRuntime(spec)
         # ONE pytree replaces the old (counters, ring, decode_step) triple:
         # the monitor borrows the runtime's telemetry plane for its ring.
         self.mon = scalpel.Monitor(spec, telemetry=self.runtime.telemetry)
         self.mstate = self.mon.init()
-        self.step_times: list[float] = []
+        # per-token decode times, keyed by (batch, max_new): medians of one
+        # regime never mix with another's (a [1,1]-shape decode is not
+        # comparable to a [16,1] one)
+        self.step_times: dict[tuple[int, int], list[float]] = {}
         # the RNG carries across generate() calls — reseeding per call would
         # make every generation sample identically (see generate()).
         self._rng = jax.random.PRNGKey(cfg.seed)
@@ -86,6 +120,10 @@ class Engine:
         """The engine's cumulative counters (compact dense layout)."""
         return self.mstate.counters
 
+    def reset_stats(self) -> None:
+        """Drop accumulated decode timings (all shape buckets)."""
+        self.step_times.clear()
+
     def _sample(self, logits, rng):
         logits = logits[:, -1, :].astype(jnp.float32)
         if self.cfg.temperature <= 0:
@@ -96,6 +134,9 @@ class Engine:
     def generate(self, batch: dict[str, Any], max_new: int | None = None,
                  seed: int | None = None):
         """batch: {'tokens': [b, s], ...extras}. Returns [b, n_new] tokens.
+
+        ``max_new=None`` falls back to the config default; an explicit
+        ``max_new=0`` is honored and returns an empty ``[b, 0]`` result.
 
         ``seed``: per-request seed; by default the engine's RNG is split and
         carried across calls so repeated sampled generations differ.
@@ -111,9 +152,18 @@ class Engine:
         cadence change picked up by the per-token ``mon.sync``) cannot
         perturb sampling — MonitorParams are masks over counter lanes,
         data-flow-disjoint from logits and keys.  Tested in
-        test_train_serve.py::test_serve_seeded_rng_independent.
+        test_train_serve.py::test_serve_seeded_rng_independent, and
+        inherited by the continuous engine's per-lane keys
+        (test_serve_batching.py).
         """
-        max_new = max_new or self.cfg.max_new_tokens
+        max_new = self.cfg.max_new_tokens if max_new is None else int(max_new)
+        if max_new <= 0:
+            b = int(np.shape(batch["tokens"])[0])
+            return (
+                jnp.zeros((b, 0), jnp.int32),
+                {"prefill_s": 0.0, "decode_total_s": 0.0,
+                 "decode_per_tok_s": 0.0, "decode_p50_s": 0.0},
+            )
         if seed is not None:
             rng = jax.random.PRNGKey(seed)
         else:
@@ -146,19 +196,168 @@ class Engine:
         out = jnp.concatenate(outs, axis=1)
         jax.block_until_ready(out)  # output sync: the sampled tokens
         decode_s = time.perf_counter() - t0
-        per_tok = decode_s / max_new if max_new else 0.0
-        self.step_times.append(per_tok)
+        per_tok = decode_s / max_new
+        shape_key = (int(np.shape(batch["tokens"])[0]), max_new)
+        bucket = self.step_times.setdefault(shape_key, [])
+        bucket.append(per_tok)
         return (
             out,
             {
                 "prefill_s": prefill_s,
                 "decode_total_s": decode_s,
                 "decode_per_tok_s": per_tok,
-                "decode_p50_s": float(np.median(self.step_times))
-                if self.step_times else 0.0,
+                # p50 over THIS call's (batch, max_new) bucket only
+                "decode_p50_s": float(np.median(bucket)),
             },
         )
 
     def report(self) -> str:
         self.runtime.observe(self.mstate.counters)
         return self.runtime.report("ScALPEL serving report")
+
+
+class ContinuousEngine:
+    """Continuous-batching engine: submit requests, run megasteps, join.
+
+    Usage::
+
+        eng = ContinuousEngine(arch, params, ServeConfig(n_lanes=8))
+        rid = eng.submit(tokens, max_new=64, seed=123)
+        results = eng.run()      # {rid: ServeResult(tokens, counters, lane)}
+
+    RNG contract (inherited from ``Engine.generate``): a seeded request's
+    stream derives from ``PRNGKey(seed)`` alone — the first token samples
+    with the unsplit key on the prefill logits, then each decode step
+    splits per token inside its lane.  vmap guarantees per-lane streams
+    are bitwise identical to a serial run, so identical seeds produce
+    identical tokens regardless of lane placement or concurrent unseeded
+    traffic.
+
+    Host-sync discipline: megastep dispatch, admission (prefill + slab
+    write), counter-ring publish and token-ring publish are all async; the
+    token ring is drained one megastep BEHIND the dispatch (its producer
+    already retired, so the copy doesn't wait on in-flight work).  The one
+    blocking readback is the final drain when all lanes empty — request
+    completion.  ``stats`` counts every dispatch and drain so tests can
+    attest the zero-syncs-per-token claim.
+    """
+
+    def __init__(self, arch: Arch, params, cfg: ServeConfig,
+                 spec=None, runtime=None):
+        self.arch = arch
+        self.params = params
+        self.cfg = cfg
+        if spec is None:
+            spec = _discover_spec(arch, cfg)
+        self.spec = spec
+        self.runtime = runtime or scalpel.ScalpelRuntime(spec)
+        self.mon = scalpel.Monitor(spec, telemetry=self.runtime.telemetry)
+        self.driver = DecodeDriver(
+            arch, self.mon, cache_len=cfg.cache_len,
+            temperature=cfg.temperature,
+            steps_per_commit=cfg.steps_per_commit,
+        )
+        n = int(cfg.n_lanes)
+        self.sched = Scheduler(n)
+        self.lstate = self.mon.lane_init(n)
+        # per-lane decode state: slab of batch-1 caches + current token +
+        # RNG key + active/remaining masks (all donated through megasteps)
+        self.slab = arch.init_lane_cache(n, cfg.cache_len)
+        self.tok = jnp.zeros((n, 1, 1), jnp.int32)
+        self.keys = jnp.stack([jax.random.PRNGKey(0)] * n)
+        self.active = jnp.zeros((n,), jnp.int32)
+        self.remaining = jnp.zeros((n,), jnp.int32)
+        depth = int(cfg.token_ring_depth) or max(2 * cfg.steps_per_commit, 8)
+        self.tok_ring = self.runtime.telemetry.make_token_ring(n, depth)
+        self._rng = jax.random.PRNGKey(cfg.seed)
+        self.stats = {
+            "megasteps": 0, "prefills": 0, "admissions": 0,
+            "tokens_out": 0, "token_drains": 0, "wall_s": 0.0,
+        }
+
+    @property
+    def counters(self):
+        """Aggregate (lane-summed) cumulative counters — serial-comparable."""
+        return self.lstate.counters
+
+    def submit(self, tokens, max_new: int | None = None,
+               seed: int | None = None) -> int:
+        """Queue a single request (tokens: [1, s]); returns its rid.
+        ``max_new=None`` falls back to the config; 0 completes immediately
+        with an empty result."""
+        max_new = self.cfg.max_new_tokens if max_new is None \
+            else int(max_new)
+        return self.sched.submit(tokens, max_new, seed)
+
+    def _admit_ready(self) -> None:
+        for lane in self.sched.free_lanes():
+            if not self.sched.queue:
+                break
+            req = self.sched.queue.popleft()
+            if req.seed is not None:
+                key = jax.random.PRNGKey(req.seed)
+            else:
+                self._rng, key = jax.random.split(self._rng)
+            # two async dispatches per admission: monitored prefill (+
+            # first-token sample with the UNSPLIT request key — the serial
+            # contract) and the slab/counter-row write
+            cache, tok0, pdelta = self.driver.prefill(
+                self.params, self.lstate.params, req.tokens, key)
+            (self.slab, self.tok, self.keys, self.active,
+             self.remaining), self.lstate = self.driver.admit(
+                self.lstate, self.slab, self.tok, self.keys, self.active,
+                self.remaining, lane, cache, tok0, key, req.max_new, pdelta)
+            self.sched.admit(lane, req)
+            self.stats["prefills"] += 1
+            self.stats["admissions"] += 1
+
+    def run(self) -> dict[int, ServeResult]:
+        """Drive megasteps until every submitted request completes."""
+        plane = self.runtime.telemetry
+        k = self.cfg.steps_per_commit
+        t0 = time.perf_counter()
+        while True:
+            # knob swaps (adaptive/runtime) land here — megastep boundary
+            self.lstate = self.mon.sync(self.lstate, runtime=self.runtime)
+            self._admit_ready()
+            if not self.sched.occupied:
+                break
+            (self.slab, self.tok, self.keys, self.active, self.remaining), \
+                self.lstate, self.tok_ring = self.driver.megastep(
+                    self.lstate, self.params, self.slab, self.tok,
+                    self.keys, self.active, self.remaining, self.tok_ring)
+            self.stats["megasteps"] += 1
+            # arithmetic completion: each occupied lane advanced by
+            # min(K, remaining) tokens — no device readback to retire
+            for lane, rid in self.sched.advance(k):
+                # harvest per-request counters as eager device slices
+                # (async); materialized at join
+                self.sched.set_counters(rid,
+                                        self.lstate.lane_counters(lane))
+            # async monitoring egress: aggregate ring to the drain thread
+            self.runtime.on_step(self.lstate.counters,
+                                 ring=self.lstate.ring)
+            # pipelined token drain: consume the PREVIOUS megastep's ring
+            # (its producer already retired) before publishing this one
+            self.stats["tokens_out"] += self.sched.attribute(
+                plane.drain_tokens())
+            self.stats["token_drains"] += 1
+            plane.publish_tokens(self.tok_ring)
+        # the one blocking readback: the final ring drain at completion
+        self.stats["tokens_out"] += self.sched.attribute(
+            plane.drain_tokens())
+        self.stats["token_drains"] += 1
+        self.stats["wall_s"] += time.perf_counter() - t0
+        if plane.dropped_tokens:
+            raise RuntimeError(
+                f"token ring overrun: {plane.dropped_tokens} slots lost — "
+                f"token_ring_depth must exceed appends per drain")
+        results = self.sched.results()
+        for r in results.values():
+            if r.counters is not None:
+                r.counters = scalpel.Monitor.lane_counters_host(r.counters)
+        return results
+
+    def report(self) -> str:
+        self.runtime.observe(self.lstate.counters)
+        return self.runtime.report("ScALPEL serving report (continuous)")

@@ -213,6 +213,70 @@ def test_drain_copies_one_slot_when_caught_up():
     plane.close()
 
 
+def test_token_drain_is_pure_transfer_with_exact_accounting(monkeypatch):
+    """The token-egress drain NEVER dispatches device computation — only
+    the scalar head probe plus buffer copies (the ROADMAP drain
+    invariant, extended to the serve path).  Attested by swapping the
+    module's ``jnp`` for a guard that raises on ANY op, and by the same
+    slots-copied accounting the counter drain uses."""
+    plane = T.TelemetryPlane(_spec(), depth=16, cadence=1, interval_s=60.0)
+    ring = plane.make_token_ring(3, depth=4)
+    append = jax.jit(T.token_ring_append)
+    toks = jnp.asarray([5, 6, 7], jnp.int32)
+    live = jnp.asarray([1, 0, 1], jnp.int32)
+    ring = append(ring, toks, live, jnp.asarray(1, jnp.int32))
+    ring = append(ring, toks + 1, live, jnp.asarray(2, jnp.int32))
+    plane.publish_tokens(ring)
+
+    class _NoDeviceOps:
+        def __getattr__(self, name):
+            raise AssertionError(
+                f"token drain dispatched a device op: jnp.{name}")
+
+    monkeypatch.setattr(T, "jnp", _NoDeviceOps())
+    out = plane.drain_tokens()
+    assert [(seq, step) for seq, step, _, _ in out] == [(0, 1), (1, 2)]
+    np.testing.assert_array_equal(out[0][2], [5, 6, 7])
+    np.testing.assert_array_equal(out[0][3], [1, 0, 1])
+    np.testing.assert_array_equal(out[1][2], [6, 7, 8])
+    assert plane.tok_slots_copied == 4      # one stacked copy, depth slots
+    assert plane.token_drains == 1
+    # idle drain: scalar head probe only — no slot copy
+    assert plane.drain_tokens() == []
+    assert plane.tok_slots_copied == 4 and plane.token_drains == 2
+    assert plane.dropped_tokens == 0
+    plane.close()
+
+
+def test_token_ring_overrun_counts_losses_and_epoch_resets():
+    """Tokens are outputs, not samples: slots lost to an overrun are
+    counted loudly (the engine raises on any).  A fresh lineage via
+    make_token_ring restarts the cursor at head 0."""
+    plane = T.TelemetryPlane(_spec(), depth=16, cadence=1, interval_s=60.0)
+    ring = plane.make_token_ring(2, depth=4)
+    live = jnp.asarray([1, 1], jnp.int32)
+    for step in range(1, 7):               # 6 appends into a depth-4 ring
+        ring = T.token_ring_append(
+            ring, jnp.asarray([step, -step], jnp.int32), live,
+            jnp.asarray(step, jnp.int32))
+    plane.publish_tokens(ring)
+    out = plane.drain_tokens()
+    assert plane.dropped_tokens == 2       # seqs 0-1 overwritten
+    assert [seq for seq, _, _, _ in out] == [2, 3, 4, 5]
+    np.testing.assert_array_equal(out[-1][2], [6, -6])
+    # new lineage: cursor self-resets to the fresh ring's head
+    ring2 = plane.make_token_ring(2, depth=4)
+    ring2 = T.token_ring_append(
+        ring2, jnp.asarray([9, 9], jnp.int32), live,
+        jnp.asarray(1, jnp.int32))
+    plane.publish_tokens(ring2)
+    out2 = plane.drain_tokens()
+    assert [seq for seq, _, _, _ in out2] == [0]
+    np.testing.assert_array_equal(out2[0][2], [9, 9])
+    assert plane.dropped_tokens == 2       # unchanged by the new epoch
+    plane.close()
+
+
 def test_background_drain_thread_runs_without_flush():
     spec = _spec()
     plane = T.TelemetryPlane(spec, depth=8, cadence=1, interval_s=0.005)
