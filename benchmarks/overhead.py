@@ -1361,12 +1361,191 @@ def run_serve_throughput_sweep(streams=(1, 4, 16), prompt_len: int = 16,
     return rows
 
 
+_SERVE_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import time
+import jax
+import numpy as np
+
+from repro.configs import model_config
+from repro.models.registry import Arch
+from repro.serve.engine import ContinuousEngine, ServeConfig
+
+assert len(jax.devices()) == 2
+N_LANES = %d
+MAX_NEW = %d
+N_REQ = %d
+
+arch = Arch(model_config("xlstm_125m", smoke=True))
+params = arch.init(jax.random.PRNGKey(0))
+prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i),
+                                         (1, 16), 0, arch.cfg.vocab))
+           for i in range(N_REQ)]
+
+
+def run(shards, spec=None):
+    cfg = ServeConfig(cache_len=16 + MAX_NEW + 16, max_new_tokens=MAX_NEW,
+                      n_lanes=N_LANES, steps_per_commit=8,
+                      lane_shards=shards)
+    eng = ContinuousEngine(arch, params, cfg, spec=spec)
+    # warmup: compile all three programs before the timed run
+    eng.submit(prompts[0])
+    eng.run()
+    t0 = time.perf_counter()
+    rids = [eng.submit(p) for p in prompts]
+    res = eng.run()
+    dt = time.perf_counter() - t0
+    return eng, [res[r] for r in rids], dt
+
+e1, res1, dt1 = run(1)
+e2, res2, dt2 = run(2, spec=e1.spec)
+
+tokens_exact = all(np.array_equal(a.tokens, b.tokens)
+                   for a, b in zip(res1, res2))
+counters_exact = all(
+    np.array_equal(np.asarray(a.counters.calls),
+                   np.asarray(b.counters.calls))
+    and np.array_equal(np.asarray(a.counters.samples),
+                       np.asarray(b.counters.samples))
+    for a, b in zip(res1, res2))
+values_allclose = all(
+    np.allclose(np.asarray(a.counters.values),
+                np.asarray(b.counters.values), rtol=1e-5, atol=1e-6)
+    for a, b in zip(res1, res2))
+
+toks = N_REQ * MAX_NEW
+print(json.dumps({
+    "toks": toks,
+    "ms_1shard": round(dt1 * 1e3, 1),
+    "ms_2shard": round(dt2 * 1e3, 1),
+    "toks_per_s_1shard": round(toks / dt1, 1),
+    "toks_per_s_2shard": round(toks / dt2, 1),
+    "tokens_exact": bool(tokens_exact),
+    "counters_exact": bool(counters_exact),
+    "values_allclose": bool(values_allclose),
+    "megastep_traces": e2.compile_stats()["megastep_traces"],
+}))
+"""
+
+
+def run_serve_shard_sweep(n_lanes: int = 8, max_new: int = 32,
+                          n_req: int = 12) -> list[dict]:
+    """Lane-sharded serve engine on a forced 2-host-device mesh: the SAME
+    total lane count split 1 vs 2 ways (``ServeConfig.lane_shards``), all
+    other knobs equal.
+
+    The contract is exactness, not host-CPU speed (two forced host devices
+    share the same cores — tokens/s parity is all one can ask): greedy
+    tokens bitwise equal across shardings, integer counters (calls,
+    samples) exactly equal, values allclose under psum reassociation.
+
+    Runs in a subprocess because the forced device count must be set
+    before JAX initializes.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _SERVE_SHARD_SCRIPT % (n_lanes, max_new, n_req)],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    row = {"workload": f"serve shard N={n_req}", "case": "serve_shard",
+           "streams": n_req, "n_lanes": n_lanes, "lane_shards": 2}
+    if proc.returncode != 0:
+        row.update(error=proc.stderr[-1000:], tokens_exact=False,
+                   counters_exact=False)
+        return [row]
+    row.update(json.loads(proc.stdout.strip().splitlines()[-1]))
+    row["min_ms"] = row.get("ms_2shard")
+    return [row]
+
+
+def run_prefill_bucket_sweep(n_req: int = 100, max_new: int = 4,
+                             n_lanes: int = 8) -> list[dict]:
+    """Prompt-length bucketing vs per-length re-tracing, end to end.
+
+    ``n_req`` requests with prompt lengths cycling over every value in
+    [3, 40] hit the admission path of two engines: one with pow2 buckets
+    (compiles once per BUCKET), one with exact-length prefill (compiles
+    once per DISTINCT LENGTH).  Both runs include compile time — that is
+    the point: the bucketed engine's trace count is bounded by its bucket
+    count, so it amortizes, while the baseline pays XLA per length.
+    """
+    from repro.serve.engine import ContinuousEngine, ServeConfig
+
+    cfg = model_config("xlstm_125m", smoke=True)
+    arch = Arch(cfg)
+    params = arch.init(jax.random.PRNGKey(0))
+    lengths = [3 + (i % 38) for i in range(n_req)]
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(200 + i), (1, s), 0,
+                           cfg.vocab)
+        for i, s in enumerate(lengths)
+    ]
+    scfg = dict(cache_len=64 + max_new + 16, max_new_tokens=max_new,
+                n_lanes=n_lanes, steps_per_commit=4)
+
+    def run(buckets):
+        eng = ContinuousEngine(
+            arch, params,
+            ServeConfig(prefill_buckets=buckets, **scfg))
+        t0 = time.perf_counter()
+        rids = [eng.submit(p) for p in prompts]
+        res = eng.run()
+        dt = time.perf_counter() - t0
+        return eng, res, rids, dt
+
+    import warnings
+
+    with warnings.catch_warnings():
+        # the exact-length baseline intentionally trips the re-trace alarm
+        warnings.simplefilter("ignore", RuntimeWarning)
+        b_eng, b_res, b_rids, b_dt = run(None)
+    eng, res, rids, dt = run("pow2")
+    tokens_exact = all(
+        np.array_equal(res[r].tokens, b_res[br].tokens)
+        for r, br in zip(rids, b_rids))
+    cs, bcs = eng.compile_stats(), b_eng.compile_stats()
+    n_buckets = len(cs["buckets_used"])
+    toks = n_req * max_new
+    workload = f"prefill bucket N={n_req}"
+    rows = [{
+        "workload": workload, "case": "prefill_bucket_baseline",
+        "streams": n_req, "toks": toks, "min_ms": round(b_dt * 1e3, 1),
+        "toks_per_s": round(toks / b_dt, 1),
+        "prefill_traces": bcs["prefill_traces"],
+        "distinct_lengths": len(set(lengths)),
+    }, {
+        "workload": workload, "case": "prefill_bucket",
+        "streams": n_req, "toks": toks, "min_ms": round(dt * 1e3, 1),
+        "toks_per_s": round(toks / dt, 1),
+        "prefill_traces": cs["prefill_traces"],
+        "n_buckets": n_buckets,
+        "buckets_used": cs["buckets_used"],
+        "pad_waste_frac": round(cs["pad_waste_frac"], 4),
+        "traces_bounded": bool(cs["prefill_traces"] <= n_buckets),
+        "speedup_x": round(b_dt / dt, 2),
+        "tokens_exact": bool(tokens_exact),
+    }]
+    return rows
+
+
 def _serve_summary(rows: list[dict]) -> dict:
     """Aggregate continuous-vs-serial serve verdicts for the trajectory
     JSON (the acceptance bar: >=3x at the 16-stream point, exact tokens,
     allclose per-request counters)."""
     cont = [r for r in rows if r.get("case") == "serve_continuous"]
     wide = [r for r in cont if r.get("streams", 0) >= 16]
+    shard = [r for r in rows if r.get("case") == "serve_shard"]
+    bucket = [r for r in rows if r.get("case") == "prefill_bucket"]
     return {
         "compared": len(cont),
         "tokens_exact_all": bool(cont) and all(
@@ -1379,6 +1558,20 @@ def _serve_summary(rows: list[dict]) -> dict:
             (r["speedup_x"] for r in wide), default=None),
         "speedup_3x_at_16": bool(wide) and all(
             r["speedup_x"] >= 3.0 for r in wide),
+        # lane-sharding: 2-shard mesh == single device, exactly
+        "shard_tokens_exact": bool(shard) and all(
+            r.get("tokens_exact", False) for r in shard),
+        "shard_counters_exact": bool(shard) and all(
+            r.get("counters_exact", False) for r in shard),
+        # bucketing: traces bounded by buckets, >=2x vs per-length retrace
+        "bucket_traces_bounded": bool(bucket) and all(
+            r.get("traces_bounded", False) for r in bucket),
+        "bucket_tokens_exact": bool(bucket) and all(
+            r.get("tokens_exact", False) for r in bucket),
+        "bucket_speedup_x": max(
+            (r["speedup_x"] for r in bucket), default=None),
+        "bucket_speedup_2x": bool(bucket) and all(
+            r["speedup_x"] >= 2.0 for r in bucket),
     }
 
 
@@ -1435,6 +1628,13 @@ def main(fast: bool = False):
     rows += run_serve_throughput_sweep(
         streams=(1, 4, 16),
         max_new=16 if fast else 32,
+    )
+    rows += run_serve_shard_sweep(
+        max_new=8 if fast else 32,
+        n_req=8 if fast else 12,
+    )
+    rows += run_prefill_bucket_sweep(
+        n_req=40 if fast else 100,
     )
     save_json("overhead.json", rows, sub="bench")
     print(fmt_table(
@@ -1499,6 +1699,23 @@ def main(fast: bool = False):
         title="Continuous-batching serve: lane-packed K-token megasteps "
               "(on-device sampling, token-ring egress) vs serial engine",
     ))
+    print(fmt_table(
+        [r for r in rows if r.get("case") == "serve_shard"],
+        ["workload", "case", "streams", "n_lanes", "lane_shards",
+         "ms_1shard", "ms_2shard", "tokens_exact", "counters_exact",
+         "values_allclose"],
+        title="Lane-sharded serve (2 forced host devices): shard_map "
+              "megasteps, 1 vs 2 shards over the same slab",
+    ))
+    print(fmt_table(
+        [r for r in rows
+         if str(r.get("case", "")).startswith("prefill_bucket")],
+        ["workload", "case", "streams", "min_ms", "toks_per_s",
+         "prefill_traces", "n_buckets", "pad_waste_frac", "speedup_x",
+         "tokens_exact"],
+        title="Prompt-length bucketing: pow2 pad buckets vs per-length "
+              "prefill re-trace (compile time included — that's the point)",
+    ))
     # the paper's hierarchy, asserted softly (plan/readback rows carry no
     # perfmon case)
     by = {}
@@ -1557,8 +1774,19 @@ def main(fast: bool = False):
         f"greedy tokens == serial: {serve['tokens_exact_all']}; "
         f"per-request counters allclose: {serve['counters_allclose_all']}"
     )
+    print(
+        f"serve shard: 2-shard tokens == 1-shard: "
+        f"{serve['shard_tokens_exact']}; integer counters exact: "
+        f"{serve['shard_counters_exact']}"
+    )
+    print(
+        f"prefill bucketing: traces bounded by buckets: "
+        f"{serve['bucket_traces_bounded']}; speedup vs per-length retrace "
+        f"{serve['bucket_speedup_x']}x (>=2x: {serve['bucket_speedup_2x']}); "
+        f"tokens exact: {serve['bucket_tokens_exact']}"
+    )
     return {
-        "schema": "scalpel-overhead-v8",
+        "schema": "scalpel-overhead-v9",
         "backend": jax.default_backend(),
         "probe_events": list(PROBE_EVENTS),
         "plan_sets": [list(s) for s in PLAN_SETS],

@@ -1,6 +1,8 @@
 """Continuous-batching serving with per-lane decode-time monitoring.
 
     PYTHONPATH=src python examples/serve_lm.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python examples/serve_lm.py --shards 2
 
 Serves a small transformer LM through the lane-packed continuous engine:
 requests enter free decode lanes as they arrive, every lane advances K
@@ -9,10 +11,15 @@ telemetry ring), and ScALPEL attributes NaN/entropy counters to each
 REQUEST via its lane's counter row — while the lane-summed aggregate
 feeds the usual runtime report.
 
-The demo oversubscribes 6 requests onto 3 lanes (mixed greedy + seeded
+The demo oversubscribes 6 requests onto the lanes (mixed greedy + seeded
 sampling), prints the per-lane attribution table, and cross-checks one
-greedy request bitwise against the serial engine.
+greedy request bitwise against the serial engine.  With ``--shards N``
+the decode slab spans N devices (``ServeConfig.lane_shards`` —
+shard_map'd megasteps, psum-reduced aggregate counters) and every check
+still holds bitwise.
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -21,11 +28,14 @@ from repro.models.registry import Arch
 from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
 
 
-def main():
+def main(shards: int = 1):
     arch = Arch(model_config("mistral_nemo_12b", smoke=True))
     params = arch.init(jax.random.PRNGKey(0))
+    # lane_shards must divide n_lanes: 3 lanes solo, 4 lanes over 2 shards
+    n_lanes = 3 if shards == 1 else 2 * shards
     cfg = ServeConfig(cache_len=96, max_new_tokens=12,
-                      n_lanes=3, steps_per_commit=4)
+                      n_lanes=n_lanes, steps_per_commit=4,
+                      lane_shards=shards)
     eng = ContinuousEngine(arch, params, cfg)
 
     prompts = [
@@ -82,4 +92,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the decode slab over this many devices")
+    main(shards=ap.parse_args().shards)

@@ -401,7 +401,8 @@ class Monitor:
         )
 
     def admit_lane(self, lstate: LaneMonitorState, lane,
-                   delta: plan_lib.CompactDelta) -> LaneMonitorState:
+                   delta: plan_lib.CompactDelta,
+                   owned=None) -> LaneMonitorState:
         """Seed lane ``lane`` with an admitted request's prefill delta.
 
         Pure and trace-safe (``lane`` may be a traced i32 scalar — the
@@ -414,7 +415,20 @@ class Monitor:
         what a serial engine would have accumulated over the same
         requests.  Advances the step stamp (an admission is a monitored
         event, like the serial engine's wrapped prefill).
+
+        ``owned`` (traced bool scalar, sharded serving): the lane rows are
+        PER-SHARD under ``shard_map`` — only the shard owning the (local,
+        clamped) ``lane`` index takes the row reset; the REPLICATED
+        aggregate/ring still folds the delta in unconditionally, exactly
+        once per shard's own copy (the prefill delta is replicated, never
+        psum-reduced — a psum would count it N times).
         """
+
+        def seed(rows, row):
+            if owned is None:
+                return rows.at[lane].set(row)
+            return rows.at[lane].set(jnp.where(owned, row, rows[lane]))
+
         calls = lstate.calls + delta.calls
         values = lstate.values + delta.values
         samples = lstate.samples + delta.samples
@@ -429,10 +443,10 @@ class Monitor:
             )
         return dataclasses.replace(
             lstate,
-            lane_calls=lstate.lane_calls.at[lane].set(delta.calls),
-            lane_values=lstate.lane_values.at[lane].set(delta.values),
-            lane_samples=lstate.lane_samples.at[lane].set(delta.samples),
-            lane_sched=lstate.lane_sched.at[lane].set(delta.calls),
+            lane_calls=seed(lstate.lane_calls, delta.calls),
+            lane_values=seed(lstate.lane_values, delta.values),
+            lane_samples=seed(lstate.lane_samples, delta.samples),
+            lane_sched=seed(lstate.lane_sched, delta.calls),
             calls=calls, values=values, samples=samples,
             step=step, ring=ring,
         )

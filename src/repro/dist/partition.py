@@ -40,6 +40,9 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "vocab": ("model",),
     "experts": ("model",),
     "layers": (),
+    # continuous-batching serve: the decode-lane slab axis (serve/driver.py
+    # shard_maps its programs over a dedicated 1-D "lanes" mesh)
+    "lanes": ("lanes",),
 }
 
 _TLS = threading.local()
@@ -153,6 +156,29 @@ def tree_shardings(abs_tree, ax_tree, mesh=None, rules=None):
         for l, ax in zip(leaves, ax_leaves)
     ]
     return jax.tree_util.tree_unflatten(treedef, shs)
+
+
+def lane_mesh(n_shards: int, axis: str = "lanes"):
+    """A 1-D device mesh for lane-parallel serving (the decode slab's
+    ``lanes`` axis).
+
+    Unlike the training mesh (launch/mesh.py), a serve mesh may use a
+    strict SUBSET of the local devices — a 2-way lane mesh on an 8-device
+    host leaves the rest to other engines — so this builds ``jax.Mesh``
+    directly from the first ``n_shards`` devices rather than going through
+    ``make_mesh`` (which wants them all).
+    """
+    if n_shards < 1:
+        raise ValueError(f"lane mesh needs >= 1 shard, got {n_shards}")
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"lane mesh needs {n_shards} devices, have {len(devs)} — "
+            f"reduce ServeConfig.lane_shards (or force host devices via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devs[:n_shards]), (axis,))
 
 
 def axis_size(name: str) -> int:

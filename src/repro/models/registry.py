@@ -70,11 +70,23 @@ class Arch:
         return self.module.forward(self.cfg, params, batch["tokens"],
                                    prefix_embeds=prefix, **kw)
 
-    def prefill(self, params, batch, cache_len: int):
+    @property
+    def supports_prefill_length(self) -> bool:
+        """Whether this family's prefill takes a traced ``length`` over
+        right-padded tokens (the serve engine's prompt-length bucketing)."""
+        return bool(getattr(self.module, "SUPPORTS_PREFILL_LENGTH", False))
+
+    def prefill(self, params, batch, cache_len: int, length=None):
         kw = {}
         if self.cfg.family == "encdec":
             kw["frames"] = batch["enc_frames"]
         prefix = batch.get("img_embeds") if self.cfg.family == "vlm" else None
+        if length is not None:
+            if not self.supports_prefill_length:
+                raise ValueError(
+                    f"family {self.cfg.family!r} has no length-masked "
+                    f"prefill — disable prompt bucketing for it")
+            kw["length"] = length
         return self.module.prefill(self.cfg, params, batch["tokens"],
                                    cache_len, prefix_embeds=prefix, **kw)
 
@@ -86,7 +98,8 @@ class Arch:
                                       abstract=abstract)
 
     def init_lane_cache(self, n_lanes: int, cache_len: int,
-                        abstract: bool = False):
+                        abstract: bool = False, mesh=None,
+                        lane_axis: str = "lanes"):
         """A lane SLAB: ``n_lanes`` stacked batch-1 decode caches.
 
         The continuous-batching serve engine vmaps ``decode_step`` over the
@@ -95,6 +108,11 @@ class Arch:
         leaf), and admission overwrites one lane's sub-cache in place via
         ``write_lane``.  Works for every family: KV caches and O(1)
         recurrent state alike are just pytrees of per-request leaves.
+
+        ``mesh``: place every leaf with a ``NamedSharding`` split on the
+        leading lane dimension over ``mesh``'s ``lane_axis`` (the sharded
+        serve driver's slab layout — its shard_map programs then consume
+        the slab without any resharding copy).
         """
         one = self.init_cache(1, cache_len, abstract=abstract)
         if abstract:
@@ -104,10 +122,16 @@ class Arch:
                 one,
                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
             )
-        return jax.tree.map(
+        slab = jax.tree.map(
             lambda x: jnp.zeros((n_lanes,) + jnp.shape(x),
                                 jnp.asarray(x).dtype), one
         )
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            sh = NamedSharding(mesh, PartitionSpec(lane_axis))
+            slab = jax.tree.map(lambda x: jax.device_put(x, sh), slab)
+        return slab
 
     def cache_axes(self):
         return self.module.cache_axes(self.cfg)
@@ -179,16 +203,25 @@ class Arch:
 
 # -- lane-slab plumbing (continuous-batching serving) -----------------------
 
-def write_lane(slab, lane, cache):
+def write_lane(slab, lane, cache, owned=None):
     """Write one request's batch-1 cache into lane ``lane`` of a slab.
 
     ``lane`` may be a traced i32 scalar — one compiled update serves every
     lane (dynamic-index scatter), so admission never re-traces.
+
+    ``owned`` (traced bool scalar, sharded admission): when False the
+    write is a no-op — inside ``shard_map`` every shard runs the same
+    admission program on its LOCAL slab block, but only the shard that
+    owns the (clamped) local lane index actually takes the new cache.
     """
-    return jax.tree.map(
-        lambda s, c: s.at[lane].set(jnp.asarray(c).astype(s.dtype)),
-        slab, cache,
-    )
+
+    def w(s, c):
+        c = jnp.asarray(c).astype(s.dtype)
+        if owned is not None:
+            c = jnp.where(owned, c, s[lane])
+        return s.at[lane].set(c)
+
+    return jax.tree.map(w, slab, cache)
 
 
 def read_lane(slab, lane):

@@ -24,8 +24,13 @@ from .spec import ModelConfig
 # depthwise causal conv1d (shared by mamba2 / mLSTM branches)
 # ---------------------------------------------------------------------------
 
-def causal_conv1d(x, w, state=None):
-    """x: [b,s,c], w: [k,c] depthwise. Returns (y, new_state [b,k-1,c])."""
+def causal_conv1d(x, w, state=None, length=None):
+    """x: [b,s,c], w: [k,c] depthwise. Returns (y, new_state [b,k-1,c]).
+
+    ``length`` (traced i32, None => s): with right-padded input, the carried
+    state must be the last k-1 REAL positions — the window ending at
+    ``length``, not at the pad tail.
+    """
     k = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
@@ -33,7 +38,14 @@ def causal_conv1d(x, w, state=None):
     y = sum(
         xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
     )
-    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    if k <= 1:
+        new_state = state
+    elif length is None:
+        new_state = xp[:, -(k - 1):, :]
+    else:
+        # xp index i holds x index i-(k-1): the k-1 inputs preceding
+        # position ``length`` live at xp[length : length + k-1]
+        new_state = jax.lax.dynamic_slice_in_dim(xp, length, k - 1, axis=1)
     return y, new_state
 
 
@@ -338,8 +350,16 @@ def _mlstm_chunked(q, k, v, log_i, log_f, chunk, C0=None, n0=None, m0=None):
     return hout, (C, n, m)
 
 
-def mlstm_block(cfg: ModelConfig, p, x, state=None):
-    """mLSTM mixer. x: [b,s,d] -> (y, state)."""
+def mlstm_block(cfg: ModelConfig, p, x, state=None, length=None):
+    """mLSTM mixer. x: [b,s,d] -> (y, state).
+
+    ``length`` (traced i32, None => s): positions >= length are right-pad.
+    They are neutralized with the SAME identity trick ``_mlstm_chunked``
+    uses for its own chunk padding — log_f=0 keeps the state, log_i=-1e30
+    adds nothing — so the carried state and every valid position's output
+    are exactly what an unpadded run produces (pad rows emit garbage that
+    the caller must never read).
+    """
     with scalpel.function("mlstm"):
         b, s, d = x.shape
         di = 2 * d
@@ -349,7 +369,7 @@ def mlstm_block(cfg: ModelConfig, p, x, state=None):
         xb, z = jnp.split(up, 2, axis=-1)
         conv_state = state[3] if state is not None else None
         xc, conv_state = causal_conv1d(xb, p["conv_w"].astype(x.dtype),
-                                       conv_state)
+                                       conv_state, length=length)
         xc = jax.nn.silu(
             (xc + p["conv_b"].astype(x.dtype)).astype(jnp.float32)
         ).astype(x.dtype)
@@ -362,6 +382,10 @@ def mlstm_block(cfg: ModelConfig, p, x, state=None):
         li_pre, lf_pre = jnp.split(gates, 2, axis=-1)  # [b,s,nh]
         log_i = -jax.nn.softplus(-li_pre)   # log sigmoid
         log_f = -jax.nn.softplus(-lf_pre)
+        if length is not None:
+            valid = (jnp.arange(s) < length)[None, :, None]
+            log_i = jnp.where(valid, log_i, -1e30)
+            log_f = jnp.where(valid, log_f, 0.0)
         qh = q.reshape(b, s, nh, hd)
         kh = k.reshape(b, s, nh, hd)
         vh = v.reshape(b, s, nh, hd)
@@ -443,8 +467,13 @@ def _slstm_cell(cfg: ModelConfig, p, wx, state):
     return (c2, n2, h2, m_new), h2
 
 
-def slstm_block(cfg: ModelConfig, p, x, state=None):
-    """sLSTM mixer + gated FFN. x: [b,s,d] -> (y, state)."""
+def slstm_block(cfg: ModelConfig, p, x, state=None, length=None):
+    """sLSTM mixer + gated FFN. x: [b,s,d] -> (y, state).
+
+    ``length`` (traced i32, None => s): pad positions run identity scan
+    steps — the cell computes but the carried state keeps its old value —
+    so the recurrent state leaving the block is exactly the unpadded one.
+    """
     with scalpel.function("slstm"):
         b, s, d = x.shape
         nh = cfg.n_heads
@@ -454,10 +483,22 @@ def slstm_block(cfg: ModelConfig, p, x, state=None):
             z = jnp.zeros((b, nh, dh), jnp.float32)
             state = (z, z, z, z - 10.0)
 
-        def step(carry, wxt):
-            return _slstm_cell(cfg, p, wxt, carry)
+        if length is None:
+            def step(carry, wxt):
+                return _slstm_cell(cfg, p, wxt, carry)
 
-        state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+            state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+        else:
+            def step(carry, inp):
+                wxt, keep = inp
+                new, h2 = _slstm_cell(cfg, p, wxt, carry)
+                new = jax.tree.map(
+                    lambda a, o: jnp.where(keep, a, o), new, carry)
+                return new, h2
+
+            valid = jnp.arange(s) < length
+            state, hs = jax.lax.scan(
+                step, state, (wx.transpose(1, 0, 2), valid))
         h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
         scalpel.probe(state=state[0])
         from .layers import rms_norm

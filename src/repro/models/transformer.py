@@ -18,6 +18,12 @@ from .params import stacked
 from .spec import ModelConfig
 
 
+# bucketed serving: prefill accepts a traced ``length`` with right-padded
+# tokens — causal attention already guarantees valid positions never read
+# the pad tail, and the decode path masks cache slots past ``pos``
+SUPPORTS_PREFILL_LENGTH = True
+
+
 def layer_specs(cfg: ModelConfig) -> dict:
     sp = {
         "ln1": L.rms_norm_spec(cfg.d_model),
@@ -94,10 +100,16 @@ def loss_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
-            prefix_embeds=None):
+            prefix_embeds=None, length=None):
     """Run the full prompt, build a KV cache of size ``cache_len``.
 
     Returns (cache, last_logits).  cache: {"k","v": [nL,b,S,kv,hd], "pos"}.
+
+    ``length`` (traced i32, None => full width): tokens beyond it are
+    right-pad.  Causal attention keeps valid positions exact (they never
+    attend forward into the pad), the logits are read at ``length - 1``,
+    and ``pos = length`` — decode overwrites the pad K/V slots one per
+    step and masks everything past ``pos``, so they are never read.
     """
     x = L.embed(cfg, params["embed"], tokens)
     if prefix_embeds is not None:
@@ -129,9 +141,14 @@ def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
 
     x, kvs = scalpel.scan_with_counters(body, x, params["layers"])
     x = L.rms_norm(x, params["final_norm"])
-    logits = L.unembed(cfg, params["embed"], x[:, -1:, :])
-    cache = {"k": kvs["k"], "v": kvs["v"],
-             "pos": jnp.asarray(s, jnp.int32)}
+    if length is None:
+        xl = x[:, -1:, :]
+        pos = jnp.asarray(s, jnp.int32)
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        pos = jnp.asarray(length, jnp.int32)
+    logits = L.unembed(cfg, params["embed"], xl)
+    cache = {"k": kvs["k"], "v": kvs["v"], "pos": pos}
     return cache, logits
 
 

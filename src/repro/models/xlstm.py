@@ -17,6 +17,12 @@ from .params import stacked
 from .spec import ModelConfig
 
 
+# bucketed serving: prefill accepts a traced ``length`` with right-padded
+# tokens (mask-correct gates/conv/scan — see ssm.py) so one compiled
+# program serves a whole prompt-length bucket
+SUPPORTS_PREFILL_LENGTH = True
+
+
 def _n_pairs(cfg: ModelConfig) -> int:
     assert cfg.n_layers % 2 == 0, "xlstm stack scans (mLSTM, sLSTM) pairs"
     return cfg.n_layers // 2
@@ -39,13 +45,13 @@ def specs(cfg: ModelConfig) -> dict:
     }
 
 
-def _pair(cfg: ModelConfig, lp, x, m_state=None, s_state=None):
+def _pair(cfg: ModelConfig, lp, x, m_state=None, s_state=None, length=None):
     with scalpel.function("layer"):
         h = L.rms_norm(x, lp["m_ln"])
-        y, m_state = ssm.mlstm_block(cfg, lp["m"], h, m_state)
+        y, m_state = ssm.mlstm_block(cfg, lp["m"], h, m_state, length=length)
         x = x + y
         h = L.rms_norm(x, lp["s_ln"])
-        y, s_state = ssm.slstm_block(cfg, lp["s"], h, s_state)
+        y, s_state = ssm.slstm_block(cfg, lp["s"], h, s_state, length=length)
         x = x + y
     return x, (m_state, s_state)
 
@@ -105,20 +111,31 @@ def cache_axes(cfg: ModelConfig):
 
 
 def prefill(cfg: ModelConfig, params, tokens, cache_len: int,
-            prefix_embeds=None):
-    """Run the prompt once, carrying recurrent states into the cache."""
+            prefix_embeds=None, length=None):
+    """Run the prompt once, carrying recurrent states into the cache.
+
+    ``length`` (traced i32, None => full width): tokens beyond it are
+    right-pad — the recurrent states ignore them (identity steps) and the
+    logits are read at position ``length - 1``, so ONE compiled program
+    serves every prompt length in a bucket.
+    """
     x = L.embed(cfg, params["embed"], tokens)
 
     def body(carry, lp):
-        out, (m_state, s_state) = _pair(cfg, lp, carry)
+        out, (m_state, s_state) = _pair(cfg, lp, carry, length=length)
         return out, (m_state, s_state)
 
     x, states = scalpel.scan_with_counters(body, x, params["pairs"])
     m_states, s_states = states
     x = L.rms_norm(x, params["final_norm"])
-    logits = L.unembed(cfg, params["embed"], x[:, -1:, :])
-    cache = {"m": m_states, "s": s_states,
-             "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    if length is None:
+        xl = x[:, -1:, :]
+        pos = jnp.asarray(tokens.shape[1], jnp.int32)
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        pos = jnp.asarray(length, jnp.int32)
+    logits = L.unembed(cfg, params["embed"], xl)
+    cache = {"m": m_states, "s": s_states, "pos": pos}
     return cache, logits
 
 

@@ -29,11 +29,39 @@ read-only ``params``/``tparams``/model params are inputs only, and the
 slab + per-lane decode state are donated — the steady-state loop allocates
 nothing for the cache.  The rings are NEVER donated: the host drains their
 buffers while the next megastep runs.
+
+Lane-mesh sharding (``mesh`` + ``lane_axis``): all three programs compile
+through ``shard_map`` over a 1-D ``lanes`` mesh (``partition.lane_mesh``)
+so the slab spans devices.  The invariants, per program:
+
+* megastep — lane-dim state (slab / tok / keys / masks / per-lane counter
+  rows / ``lane_sched`` / token-ring slots) stays PER-SHARD; only the
+  lane-SUMMED aggregate psum-reduces over the lane axis
+  (``Monitor.commit_lanes`` via ``counter_reduce_axes``), feeding the
+  unchanged replicated ring/adaptive stack.  ``lane_sched`` must never see
+  the psum (the ROADMAP mux invariant).
+* admission — every shard runs the same program on its local block; the
+  traced GLOBAL lane index maps to a local one, and only the owning shard
+  takes the write (clamped-index + ``owned`` mask; see ``write_lane`` /
+  ``Monitor.admit_lane``).
+* prefill — replicated (every shard computes the batch-1 prompt; no
+  transfers).  Its counter delta is replicated too and is deliberately
+  NOT psum-reduced — ``admit_lane`` folds it into the replicated
+  aggregate exactly once per shard's copy.
+
+Prompt-length bucketing: ``_prefill_bucketed`` takes right-padded tokens
+plus a traced ``length`` (mask-correct per family — see
+``models/*.SUPPORTS_PREFILL_LENGTH``), so admission + prefill compile once
+per BUCKET instead of once per distinct prompt length.
 """
 from __future__ import annotations
 
+import copy
+
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import telemetry as telemetry_lib
 from repro.core.monitor import LaneMonitorState, Monitor
@@ -42,22 +70,49 @@ from repro.models.registry import Arch, write_lane
 
 class DecodeDriver:
     """Compiles and owns the three jitted serve programs: the K-step
-    megastep, the admission slab update, and the monitored prefill."""
+    megastep, the admission slab update, and the monitored prefill
+    (exact-length + bucketed variants) — optionally shard_mapped over a
+    ``lanes`` mesh axis."""
 
     def __init__(self, arch: Arch, mon: Monitor, *, cache_len: int,
-                 temperature: float, steps_per_commit: int):
+                 temperature: float, steps_per_commit: int,
+                 mesh=None, lane_axis: str = "lanes"):
         if steps_per_commit < 1:
             raise ValueError(
                 f"steps_per_commit must be >= 1, got {steps_per_commit}")
         self.arch = arch
-        self.mon = mon
         self.cache_len = int(cache_len)
         self.temperature = float(temperature)
         self.steps_per_commit = int(steps_per_commit)
+        self.mesh = mesh
+        self.lane_axis = lane_axis
+        if mesh is not None:
+            # the driver's monitor copy psums counter aggregates over the
+            # lane axis INSIDE shard_map (explicit axes, like shard_wrap —
+            # no ambient sharding_ctx: the model's own logical-axis
+            # constraints must not name manual axes)
+            mon = copy.copy(mon)
+            mon.counter_axes = tuple(mesh.axis_names)
+        self.mon = mon
 
         sample = self.sample
         fingerprint = mon.spec.fingerprint
         k_steps = self.steps_per_commit
+        sharded = mesh is not None
+        LANE, REP = P(lane_axis), P()
+        ring_spec = telemetry_lib.TokenRing(
+            steps=REP, toks=P(None, lane_axis), live=P(None, lane_axis),
+            head=REP,
+        )
+
+        def compile_program(core, in_specs, out_specs, donate=()):
+            if not sharded:
+                return jax.jit(core, donate_argnums=donate)
+            return jax.jit(
+                shard_map(core, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False),
+                donate_argnums=donate,
+            )
 
         def megastep_core(lane_calls, lane_values, lane_samples, lane_sched,
                           calls, values, samples, step, ring,
@@ -111,14 +166,38 @@ class DecodeDriver:
         # arg positions: 0-8 monitor leaves, 9-11 read-only knobs/params,
         # 12-16 slab + per-lane decode state (donated — the engine holds
         # only the outputs), 17 token ring (never donated; host-drained)
-        self._megastep = jax.jit(megastep_core,
-                                 donate_argnums=(12, 13, 14, 15, 16))
+        self._megastep = compile_program(
+            megastep_core,
+            in_specs=(LANE, LANE, LANE, LANE, REP, REP, REP, REP, REP,
+                      REP, REP, REP, LANE, LANE, LANE, LANE, LANE,
+                      ring_spec),
+            out_specs=(LANE, LANE, LANE, LANE, LANE,
+                       LANE, LANE, LANE, LANE, REP, REP, REP, REP, REP,
+                       ring_spec),
+            donate=(12, 13, 14, 15, 16),
+        )
 
         def admit_core(slab, tok, keys, active, remaining,
                        lane_calls, lane_values, lane_samples, lane_sched,
                        calls, values, samples, step, ring, tparams,
                        lane, cache, tok0, key0, max_new, pdelta):
-            slab2 = write_lane(slab, lane, cache)
+            if sharded:
+                # global traced lane -> this shard's local block index;
+                # non-owners run the same program as a masked no-op
+                n_local = active.shape[0]
+                li = lane - jax.lax.axis_index(lane_axis) * n_local
+                own = (li >= 0) & (li < n_local)
+                li = jnp.clip(li, 0, n_local - 1)
+            else:
+                li, own = lane, None
+
+            def setm(arr, val):
+                val = jnp.asarray(val).astype(arr.dtype)
+                if own is None:
+                    return arr.at[li].set(val)
+                return arr.at[li].set(jnp.where(own, val, arr[li]))
+
+            slab2 = write_lane(slab, li, cache, owned=own)
             ls = LaneMonitorState(
                 lane_calls=lane_calls, lane_values=lane_values,
                 lane_samples=lane_samples, lane_sched=lane_sched,
@@ -126,20 +205,27 @@ class DecodeDriver:
                 step=step, ring=ring, params=None, tparams=tparams,
                 fingerprint=fingerprint,
             )
-            ls2 = mon.admit_lane(ls, lane, pdelta)
+            ls2 = mon.admit_lane(ls, li, pdelta, owned=own)
             return ((slab2,
-                     tok.at[lane].set(tok0),
-                     keys.at[lane].set(key0),
-                     active.at[lane].set(1),
-                     remaining.at[lane].set(
-                         jnp.asarray(max_new, jnp.int32))),
+                     setm(tok, tok0),
+                     setm(keys, key0),
+                     setm(active, 1),
+                     setm(remaining, jnp.asarray(max_new, jnp.int32))),
                     (ls2.lane_calls, ls2.lane_values, ls2.lane_samples,
                      ls2.lane_sched, ls2.calls, ls2.values, ls2.samples,
                      ls2.step, ls2.ring))
 
         # lane/max_new are traced scalars: ONE compiled admission program
         # serves every lane and request length — no re-trace on admission
-        self._admit = jax.jit(admit_core, donate_argnums=(0, 1, 2, 3, 4))
+        self._admit = compile_program(
+            admit_core,
+            in_specs=(LANE, LANE, LANE, LANE, LANE,
+                      LANE, LANE, LANE, LANE, REP, REP, REP, REP, REP, REP,
+                      REP, REP, REP, REP, REP, REP),
+            out_specs=((LANE, LANE, LANE, LANE, LANE),
+                       (LANE, LANE, LANE, LANE, REP, REP, REP, REP, REP)),
+            donate=(0, 1, 2, 3, 4),
+        )
 
         def prefill_core(params, mparams, tokens, key):
             base = jnp.zeros((mon.spec.n_scopes,), jnp.int32)
@@ -151,8 +237,26 @@ class DecodeDriver:
             tok0 = sample(logits, key)
             return cache, tok0, col.compact_delta()
 
-        # retraces per distinct prompt length (the usual bucketing caveat)
-        self._prefill = jax.jit(prefill_core)
+        def prefill_bucketed_core(params, mparams, tokens, length, key):
+            base = jnp.zeros((mon.spec.n_scopes,), jnp.int32)
+            with mon.open(mparams, calls_base=base) as col:
+                cache, logits = arch.prefill(
+                    params, {"tokens": tokens}, cache_len=cache_len,
+                    length=length)
+            tok0 = sample(logits, key)
+            return cache, tok0, col.compact_delta()
+
+        # exact-length fallback: retraces per distinct prompt length (the
+        # engine prefers the bucketed program whenever the family supports
+        # a traced ``length``)
+        self._prefill = compile_program(
+            prefill_core,
+            in_specs=(REP, REP, REP, REP), out_specs=(REP, REP, REP))
+        # bucketed: one trace per PAD BUCKET — ``length`` is a traced
+        # operand, so every prompt length in a bucket shares the program
+        self._prefill_bucketed = compile_program(
+            prefill_bucketed_core,
+            in_specs=(REP, REP, REP, REP, REP), out_specs=(REP, REP, REP))
 
     # -- host-visible entry points ----------------------------------------
     def sample(self, logits, rng):
@@ -168,6 +272,31 @@ class DecodeDriver:
         ``(cache, tok0, compact delta)`` — one dispatch, all async."""
         return self._prefill(params, mparams,
                              jnp.asarray(tokens, jnp.int32), key)
+
+    def prefill_bucketed(self, params, mparams, tokens, length, key):
+        """Bucketed prefill: ``tokens`` right-padded to its bucket width,
+        ``length`` the real prompt length (traced — no re-trace per
+        length).  Same returns as ``prefill``."""
+        return self._prefill_bucketed(
+            params, mparams, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(int(length), jnp.int32), key)
+
+    def trace_counts(self) -> dict[str, int]:
+        """Compile-cache sizes of the three programs (jit cache stats) —
+        the bucketing win's attestation: ``prefill_traces`` is bounded by
+        the bucket count, not by distinct prompt lengths."""
+
+        def n(f):
+            try:
+                return int(f._cache_size())
+            except Exception:  # cache-stat API unavailable
+                return -1
+
+        return {
+            "prefill_traces": n(self._prefill) + n(self._prefill_bucketed),
+            "admission_traces": n(self._admit),
+            "megastep_traces": n(self._megastep),
+        }
 
     def admit(self, lstate: LaneMonitorState, slab, tok, keys, active,
               remaining, lane, cache, tok0, key0, max_new, pdelta):

@@ -57,9 +57,38 @@ class ServeConfig:
     #   modest K instead of the pure-throughput optimum.
     # token_ring_depth — token egress ring slots; 0 => max(2*K, 8) (the
     #   pipelined drain consumes K slots per megastep).
+    # lane_shards — shard the decode slab over this many devices along a
+    #   1-D "lanes" mesh axis (dist.partition.lane_mesh).  Every lane-dim
+    #   tensor (slab, tok/keys/masks, per-lane counter rows, token-ring
+    #   slots) stays per-shard; only the lane-summed counter aggregate
+    #   psum-reduces.  1 = single device (byte-identical programs to the
+    #   unsharded engine).  Must divide n_lanes.
+    # prefill_buckets — prompt-length pad policy: "pow2" pads each prompt
+    #   to the next power-of-two bucket (>= prefill_bucket_min, <=
+    #   cache_len) so admission+prefill compile once per BUCKET instead of
+    #   once per distinct prompt length; None = exact-length (retrace per
+    #   length).  Auto-disabled for families without a length-masked
+    #   prefill (models.registry.Arch.supports_prefill_length).
     n_lanes: int = 4
     steps_per_commit: int = 8
     token_ring_depth: int = 0
+    lane_shards: int = 1
+    prefill_buckets: str | None = "pow2"
+    prefill_bucket_min: int = 8
+
+    def bucket_widths(self, supports_length: bool) -> tuple[int, ...] | None:
+        """Resolve the configured pad-bucket widths (None = bucketing off)."""
+        if self.prefill_buckets is None or not supports_length:
+            return None
+        if self.prefill_buckets != "pow2":
+            raise ValueError(
+                f"unknown prefill_buckets policy {self.prefill_buckets!r} "
+                f"(expected 'pow2' or None)")
+        widths, b = [], max(1, int(self.prefill_bucket_min))
+        while b <= self.cache_len:
+            widths.append(b)
+            b *= 2
+        return tuple(widths) or None
 
 
 def _discover_spec(arch: Arch, cfg: ServeConfig):
@@ -252,28 +281,79 @@ class ContinuousEngine:
         self.spec = spec
         self.runtime = runtime or scalpel.ScalpelRuntime(spec)
         self.mon = scalpel.Monitor(spec, telemetry=self.runtime.telemetry)
+        n = int(cfg.n_lanes)
+        shards = int(cfg.lane_shards)
+        self.mesh = None
+        if shards > 1:
+            from repro.dist.partition import lane_mesh
+
+            if n % shards:
+                raise ValueError(
+                    f"n_lanes={n} must divide evenly over "
+                    f"lane_shards={shards}")
+            self.mesh = lane_mesh(shards)
         self.driver = DecodeDriver(
             arch, self.mon, cache_len=cfg.cache_len,
             temperature=cfg.temperature,
             steps_per_commit=cfg.steps_per_commit,
+            mesh=self.mesh,
         )
-        n = int(cfg.n_lanes)
-        self.sched = Scheduler(n)
+        self._buckets = cfg.bucket_widths(arch.supports_prefill_length)
+        self.sched = Scheduler(n, buckets=self._buckets)
         self.lstate = self.mon.lane_init(n)
         # per-lane decode state: slab of batch-1 caches + current token +
         # RNG key + active/remaining masks (all donated through megasteps)
-        self.slab = arch.init_lane_cache(n, cfg.cache_len)
+        self.slab = arch.init_lane_cache(n, cfg.cache_len, mesh=self.mesh)
         self.tok = jnp.zeros((n, 1, 1), jnp.int32)
         self.keys = jnp.stack([jax.random.PRNGKey(0)] * n)
         self.active = jnp.zeros((n,), jnp.int32)
         self.remaining = jnp.zeros((n,), jnp.int32)
         depth = int(cfg.token_ring_depth) or max(2 * cfg.steps_per_commit, 8)
         self.tok_ring = self.runtime.telemetry.make_token_ring(n, depth)
+        if self.mesh is not None:
+            self._place_sharded()
         self._rng = jax.random.PRNGKey(cfg.seed)
+        self._warned_traces = False
         self.stats = {
             "megasteps": 0, "prefills": 0, "admissions": 0,
             "tokens_out": 0, "token_drains": 0, "wall_s": 0.0,
         }
+
+    def _place_sharded(self) -> None:
+        """Lay the initial lane state out on the lane mesh: lane-dim leaves
+        split over the ``lanes`` axis, aggregate leaves replicated — the
+        shard_map programs then consume everything without a resharding
+        copy (and donation recycles the same sharded buffers)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = self.mesh
+        lane = NamedSharding(mesh, P("lanes"))
+        rep = NamedSharding(mesh, P())
+        row1 = NamedSharding(mesh, P(None, "lanes"))
+        put = jax.device_put
+        self.slab = jax.tree.map(lambda x: put(x, lane), self.slab)
+        self.tok = put(self.tok, lane)
+        self.keys = put(self.keys, lane)
+        self.active = put(self.active, lane)
+        self.remaining = put(self.remaining, lane)
+        ls = self.lstate
+        self.lstate = dataclasses.replace(
+            ls,
+            lane_calls=put(ls.lane_calls, lane),
+            lane_values=put(ls.lane_values, lane),
+            lane_samples=put(ls.lane_samples, lane),
+            lane_sched=put(ls.lane_sched, lane),
+            calls=put(ls.calls, rep),
+            values=put(ls.values, rep),
+            samples=put(ls.samples, rep),
+            step=put(ls.step, rep),
+            ring=jax.tree.map(lambda x: put(x, rep), ls.ring),
+        )
+        tr = self.tok_ring
+        self.tok_ring = dataclasses.replace(
+            tr, steps=put(tr.steps, rep), toks=put(tr.toks, row1),
+            live=put(tr.live, row1), head=put(tr.head, rep),
+        )
 
     @property
     def counters(self):
@@ -301,8 +381,18 @@ class ContinuousEngine:
             # two async dispatches per admission: monitored prefill (+
             # first-token sample with the UNSPLIT request key — the serial
             # contract) and the slab/counter-row write
-            cache, tok0, pdelta = self.driver.prefill(
-                self.params, self.lstate.params, req.tokens, key)
+            s = int(np.shape(req.tokens)[1])
+            width = self.sched.route(s)
+            if self._buckets is not None:
+                toks = np.asarray(req.tokens)
+                if width > s:
+                    toks = np.pad(toks, ((0, 0), (0, width - s)))
+                cache, tok0, pdelta = self.driver.prefill_bucketed(
+                    self.params, self.lstate.params, toks, s, key)
+            else:
+                cache, tok0, pdelta = self.driver.prefill(
+                    self.params, self.lstate.params, req.tokens, key)
+            self._check_traces()
             (self.slab, self.tok, self.keys, self.active,
              self.remaining), self.lstate = self.driver.admit(
                 self.lstate, self.slab, self.tok, self.keys, self.active,
@@ -310,6 +400,29 @@ class ContinuousEngine:
             self.sched.admit(lane, req)
             self.stats["prefills"] += 1
             self.stats["admissions"] += 1
+
+    def _check_traces(self) -> None:
+        """One-shot compile-churn warning: when prefill has traced more
+        than twice per bucket actually in use, admission is re-compiling
+        per prompt length — point at the bucket config."""
+        if self._warned_traces:
+            return
+        traces = self.driver.trace_counts()["prefill_traces"]
+        n_buckets = (len(self.sched.buckets_used)
+                     if self._buckets is not None else 1)
+        if traces > 2 * max(1, n_buckets):
+            self._warned_traces = True
+            import warnings
+
+            hint = ("prefill_buckets is disabled or unsupported for this "
+                    "family" if self._buckets is None else
+                    f"buckets in use: {sorted(self.sched.buckets_used)}")
+            warnings.warn(
+                f"serve prefill has compiled {traces} traces for "
+                f"{max(1, n_buckets)} prompt bucket(s) — every distinct "
+                f"prompt length is re-tracing. Configure "
+                f"ServeConfig.prefill_buckets/prefill_bucket_min to bound "
+                f"compiles ({hint}).", RuntimeWarning, stacklevel=3)
 
     def run(self) -> dict[int, ServeResult]:
         """Drive megasteps until every submitted request completes."""
@@ -358,6 +471,23 @@ class ContinuousEngine:
                 r.counters = scalpel.Monitor.lane_counters_host(r.counters)
         return results
 
+    def compile_stats(self) -> dict[str, Any]:
+        """Jit cache sizes of the three serve programs plus the pad-waste
+        fraction — the bucketing win's observable surface."""
+        out = self.driver.trace_counts()
+        out["pad_waste_frac"] = self.sched.pad_waste_frac
+        out["buckets_used"] = sorted(self.sched.buckets_used)
+        return out
+
     def report(self) -> str:
         self.runtime.observe(self.lstate.counters)
-        return self.runtime.report("ScALPEL serving report (continuous)")
+        rep = self.runtime.report("ScALPEL serving report (continuous)")
+        cs = self.compile_stats()
+        rep += (
+            f"\ncompile: prefill_traces={cs['prefill_traces']} "
+            f"admission_traces={cs['admission_traces']} "
+            f"megastep_traces={cs['megastep_traces']} "
+            f"pad_waste_frac={cs['pad_waste_frac']:.3f} "
+            f"lane_shards={int(self.cfg.lane_shards)}"
+        )
+        return rep

@@ -48,10 +48,18 @@ class ServeResult:
 
 
 class Scheduler:
-    def __init__(self, n_lanes: int):
+    def __init__(self, n_lanes: int, buckets=None):
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
         self.n_lanes = int(n_lanes)
+        # prompt-length buckets (sorted pad widths, or None = exact-length):
+        # admission pads each prompt to its routed width so prefill compiles
+        # once per BUCKET, not once per distinct length
+        self.buckets = (tuple(sorted({int(b) for b in buckets}))
+                        if buckets else None)
+        self.prompt_tokens = 0
+        self.pad_tokens = 0
+        self.buckets_used: set[int] = set()
         self.queue: deque[Request] = deque()
         self.lane_rid: list[int | None] = [None] * n_lanes
         self.lane_left: list[int] = [0] * n_lanes
@@ -77,6 +85,31 @@ class Scheduler:
             self.queue.append(Request(rid, np.asarray(tokens),
                                       int(max_new), seed))
         return rid
+
+    # -- prompt-length bucketing -------------------------------------------
+    def route(self, length: int) -> int:
+        """Route a prompt length to its pad width: the smallest configured
+        bucket that fits (prompts past the largest bucket — and every
+        prompt when bucketing is off — go exact-length).  Records pad
+        waste: the fraction of prefill FLOPs spent on pad is the price of
+        the bounded trace count."""
+        length = int(length)
+        width = length
+        if self.buckets:
+            for b in self.buckets:
+                if b >= length:
+                    width = b
+                    break
+        self.prompt_tokens += length
+        self.pad_tokens += width - length
+        self.buckets_used.add(width)
+        return width
+
+    @property
+    def pad_waste_frac(self) -> float:
+        """Pad tokens as a fraction of all prefill tokens routed so far."""
+        tot = self.prompt_tokens + self.pad_tokens
+        return self.pad_tokens / tot if tot else 0.0
 
     # -- lane table --------------------------------------------------------
     def free_lanes(self) -> list[int]:

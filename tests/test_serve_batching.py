@@ -197,6 +197,80 @@ def test_decode_p50_keyed_by_shape_and_resettable(tiny, params):
     assert eng.step_times == {}
 
 
+def test_bucketed_prefill_mixed_lengths_exact_and_bounded_traces(
+        tiny, params):
+    """Prompt-length bucketing: mixed lengths 3..16 pad to pow2 buckets
+    {8, 16}; greedy tokens stay exactly serial (mask-correct prefill), the
+    prefill program compiles once per BUCKET (not per length), and the
+    scheduler accounts the pad waste."""
+    lengths = [3, 5, 8, 11, 13, 16]
+    prompts = [_prompt(50 + i, s=s) for i, s in enumerate(lengths)]
+    eng = ContinuousEngine(
+        tiny, params,
+        ServeConfig(cache_len=64, max_new_tokens=5, n_lanes=3,
+                    steps_per_commit=4))
+    assert eng._buckets == (8, 16, 32, 64)
+    rids = [eng.submit(p, max_new=5) for p in prompts]
+    res = eng.run()
+    for rid, prompt in zip(rids, prompts):
+        want, _ = _serial(tiny, params, prompt, max_new=5)
+        np.testing.assert_array_equal(res[rid].tokens, want)
+    cs = eng.compile_stats()
+    assert cs["buckets_used"] == [8, 16]
+    # the bucketing win: 6 distinct lengths, TWO prefill traces
+    assert cs["prefill_traces"] == 2, cs
+    assert cs["admission_traces"] == 1 and cs["megastep_traces"] == 1
+    pad = sum(8 - s if s <= 8 else 16 - s for s in lengths)
+    assert cs["pad_waste_frac"] == pytest.approx(
+        pad / (pad + sum(lengths)))
+    assert "pad_waste_frac" in eng.report()
+
+
+def test_bucketed_prefill_kv_family_exact(params):
+    """Bucketing on the KV-slab family: pad K/V slots sit past ``pos`` and
+    are overwritten/masked by decode — tokens stay exactly serial."""
+    arch = Arch(model_config("mistral_nemo_12b", smoke=True))
+    tparams = arch.init(jax.random.PRNGKey(1))
+    prompts = [jax.random.randint(jax.random.PRNGKey(60 + i), (1, s), 0,
+                                  arch.cfg.vocab) for i, s in
+               enumerate([5, 12])]
+    eng = ContinuousEngine(
+        arch, tparams,
+        ServeConfig(cache_len=64, max_new_tokens=4, n_lanes=2,
+                    steps_per_commit=2))
+    rids = [eng.submit(p) for p in prompts]
+    res = eng.run()
+    for rid, prompt in zip(rids, prompts):
+        want, _ = _serial(arch, tparams, prompt, max_new=4)
+        np.testing.assert_array_equal(res[rid].tokens, want)
+    assert eng.compile_stats()["buckets_used"] == [8, 16]
+    assert eng.compile_stats()["prefill_traces"] == 2
+
+
+def test_unbucketed_prefill_warns_on_per_length_retrace(tiny, params):
+    """Satellite: with bucketing disabled, the third distinct prompt
+    length trips the one-shot compile-churn warning pointing at
+    ServeConfig.prefill_buckets."""
+    eng = ContinuousEngine(
+        tiny, params,
+        ServeConfig(cache_len=64, max_new_tokens=2, n_lanes=3,
+                    steps_per_commit=2, prefill_buckets=None))
+    assert eng._buckets is None
+    for i, s in enumerate([4, 6, 9]):
+        eng.submit(_prompt(70 + i, s=s), max_new=2)
+    with pytest.warns(RuntimeWarning, match="prefill_buckets"):
+        res = eng.run()
+    assert eng.compile_stats()["prefill_traces"] == 3  # one per length
+    assert eng.compile_stats()["pad_waste_frac"] == 0.0
+    assert len(res) == 3
+    # the warning is one-shot: another retracing admission stays silent
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        eng.submit(_prompt(73, s=11), max_new=2)
+        eng.run()
+
+
 def test_transformer_kv_slab_family(params):
     """The KV-cache slab path (dense/transformer family): position-indexed
     dynamic_update_slice per lane under vmap still matches serial."""
