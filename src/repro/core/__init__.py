@@ -74,6 +74,7 @@ from .plan import (  # noqa: F401
     compile_scope_plans,
     compile_sentinels,
     describe_plans,
+    lane_slot_ids,
     spec_fingerprint,
     spec_layout,
 )

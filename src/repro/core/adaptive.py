@@ -114,6 +114,10 @@ class AdaptiveConfig:
                                     # time; >= 1.0 disables the budget loop
     max_cadence: int = 256          # cadence ceiling the budget loop may reach
 
+    # -- fleet hints (repro.telemetry head → agents downlink) -------------
+    accept_fleet_hints: bool = True  # apply head-level escalation hints
+                                     # arriving via a FleetAgent downlink
+
 
 @dataclasses.dataclass(frozen=True)
 class Transition:
@@ -225,7 +229,7 @@ class AdaptiveController:
         self.stats = {
             "drains": 0, "escalations": 0, "deescalations": 0,
             "plan_swaps": 0, "cadence_changes": 0, "suppressed": 0,
-            "step_time_wakes": 0,
+            "step_time_wakes": 0, "fleet_hints": 0, "fleet_hints_ignored": 0,
         }
 
     # -- wiring -----------------------------------------------------------
@@ -263,6 +267,46 @@ class AdaptiveController:
         with self._lock:
             self._escalate(self.spec.scope_index(scope), reason,
                            step=-1, tripwire=True)
+
+    def apply_fleet_hint(self, scope: str | None, *,
+                         reason: str = "fleet-hint",
+                         tripwire: bool = False) -> bool:
+        """Apply a fleet-head escalation hint (FleetAgent downlink path).
+
+        Another host saw an anomaly the head judged fleet-relevant; this
+        process escalates in sympathy so the anomaly's next occurrence is
+        observed WIDE everywhere.  ``scope=None`` (a global hint) wakes
+        sentinel scopes to CONFIGURED — the same move as the step-time
+        wake.  A named scope takes the detectors' ``_escalate`` path;
+        tripwire hints pierce cooldown exactly like local tripwires.
+        Gated by ``AdaptiveConfig.accept_fleet_hints``; returns whether the
+        hint was applied.  Runs on the agent's reader thread — host work
+        only, same rule as ``on_snapshot``.
+        """
+        if not self.cfg.accept_fleet_hints:
+            with self._lock:
+                self.stats["fleet_hints_ignored"] += 1
+            return False
+        with self._lock:
+            step = self._last_stamp
+            if scope is None:
+                self.stats["fleet_hints"] += 1
+                for idx in range(self.spec.n_scopes):
+                    if self._level[idx] == SENTINEL and \
+                            (tripwire or
+                             step >= self._cooldown_until_step[idx]):
+                        self._set_level(idx, CONFIGURED, reason, step)
+                return True
+            try:
+                idx = self.spec.scope_index(scope)
+            except (KeyError, ValueError):
+                # the hint names a scope this process doesn't monitor (a
+                # heterogeneous fleet) — nothing to escalate here
+                self.stats["fleet_hints_ignored"] += 1
+                return False
+            self.stats["fleet_hints"] += 1
+            self._escalate(idx, reason, step=step, tripwire=tripwire)
+            return True
 
     # -- resolved ladder knobs (legacy *_drains names are the defaults) ---
     @property

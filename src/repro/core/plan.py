@@ -276,12 +276,35 @@ class SlotLayout:
 
 @functools.lru_cache(maxsize=None)
 def spec_layout(spec: MonitorSpec) -> SlotLayout:
+    """The spec's dense lane layout.
+
+    **Lane ordering is a wire contract**: lanes run in ``spec.contexts``
+    declaration order, each scope contributing its slots in ``ctx.slots``
+    order.  The fleet wire format (repro.telemetry.wire) ships flat
+    ``CompactDelta`` payloads in exactly this order and identifies the
+    producing layout by ``spec_fingerprint`` — any change to this ordering
+    is a wire-format break and must change the fingerprint (it does: the
+    fingerprint hashes ``describe_plans``, which walks the same order).
+    """
     widths = tuple(len(c.slots) for c in spec.contexts)
     offsets, off = [], 0
     for w in widths:
         offsets.append(off)
         off += w
     return SlotLayout(offsets=tuple(offsets), widths=widths, total=off)
+
+
+@functools.lru_cache(maxsize=None)
+def lane_slot_ids(spec: MonitorSpec) -> tuple[tuple[str, str], ...]:
+    """Per flat lane, the (scope, slot_id) it carries — the human-readable
+    side of the wire contract above.  ``lane_slot_ids(spec)[i]`` labels
+    lane ``i`` of any ``CompactDelta``/wire frame produced under ``spec``.
+    """
+    out = []
+    for ctx in spec.contexts:
+        for slot in ctx.slots:
+            out.append((ctx.scope, slot.slot_id))
+    return tuple(out)
 
 
 @jax.tree_util.register_dataclass

@@ -62,6 +62,7 @@ class ScalpelRuntime:
         self._step = 0
         self._closed = False
         self.controller = None
+        self.fleet_agent = None
         self._shutdown_installed = False
         self._prev_handlers: dict[int, object] = {}
         self.state = CounterState.zeros(spec)
@@ -205,7 +206,33 @@ class ScalpelRuntime:
         ctl = adaptive_lib.AdaptiveController(self, config=config)
         ctl.install()
         self.controller = ctl
+        if self.fleet_agent is not None:
+            # a fleet agent attached first still delivers downlink hints
+            self.fleet_agent.controller = ctl
         return ctl
+
+    # -- fleet telemetry (repro.telemetry) ---------------------------------
+    def attach_fleet_agent(self, host_id: str, address, **kwargs):
+        """Attach a ``repro.telemetry.FleetAgent`` as a sink on this
+        runtime's plane: every drained snapshot ships one wire frame to the
+        aggregator at ``address``.
+
+        Rides the existing idempotent close path — ``close()``/
+        ``shutdown()`` (and the SIGTERM/atexit route when
+        ``graceful_shutdown`` is on) flush the agent's buffered frames and
+        emit its final ``shutdown=true`` frame exactly once, because the
+        plane closes each sink exactly once.  The current controller (if
+        any) receives head-level escalation hints from the downlink.
+        Returns the agent (also kept as ``self.fleet_agent``).
+        """
+        from repro.telemetry.agent import FleetAgent
+
+        kwargs.setdefault("fingerprint", self.spec.fingerprint)
+        kwargs.setdefault("controller", self.controller)
+        agent = FleetAgent(host_id, address, **kwargs)
+        self.telemetry.add_sink(agent)
+        self.fleet_agent = agent
+        return agent
 
     # -- graceful shutdown -------------------------------------------------
     def install_shutdown(self, signals=(signal.SIGTERM,)) -> None:
@@ -312,7 +339,31 @@ class ScalpelRuntime:
 
     # -- reporting ----------------------------------------------------------
     def report(self, title: str = "ScALPEL report") -> str:
-        return report_lib.format_text(self.snapshot(), title=title)
+        text = report_lib.format_text(self.snapshot(), title=title)
+        return text + "\n" + self._telemetry_footer()
+
+    def _telemetry_footer(self) -> str:
+        """One-line plane-health footer: the drop-accounting surface the
+        fleet tier inspects (``TelemetryPlane.stats()``), human-readable."""
+        st = self.telemetry.stats()
+        parts = [
+            f"drains={st['drain_count']}",
+            f"drain_s={st['drain_seconds']:.3f}",
+            f"dropped_snapshots={st['dropped_snapshots']}",
+        ]
+        if st["sink_errors"]:
+            errs = ",".join(f"{k}:{v}" for k, v in st["sink_errors"].items())
+            parts.append(f"sink_errors=[{errs}]")
+        if st["dropped_sinks"]:
+            parts.append(f"dropped_sinks={st['dropped_sinks']}")
+        agent = self.fleet_agent
+        if agent is not None:
+            a = agent.stats()
+            parts.append(
+                f"fleet[sent={a['frames_sent']} "
+                f"dropped={a['dropped_frames']} "
+                f"reconnects={a['reconnects']}]")
+        return "telemetry: " + " ".join(parts)
 
     def _exit_report(self) -> None:
         if self._closed:

@@ -315,6 +315,12 @@ class Sink:
     def close(self) -> None:
         self.flush()
 
+    def stats(self) -> dict:
+        """Sink-specific health counters, merged into
+        ``TelemetryPlane.stats()['sinks']`` — e.g. the fleet agent's
+        ``dropped_frames``/``reconnects``.  Default: nothing to report."""
+        return {}
+
 
 class TextSink(Sink):
     """Paper's default sink — human-readable text, one block per snapshot."""
@@ -487,6 +493,43 @@ class TelemetryPlane:
         return {
             r.name: r.errors for r in self._sink_records.values()
             if r.errors
+        }
+
+    def stats(self) -> dict:
+        """One uniform health dict for the whole plane (fleet-inspectable).
+
+        Fixes the old accounting asymmetry: drain counters, per-sink error
+        records, AND sink-specific extras (``Sink.stats()`` — the fleet
+        agent's ``dropped_frames``/``reconnects``) all surface here, so
+        ``report()`` and the fleet head read one shape.
+        """
+        sinks: dict[str, dict] = {}
+        for s in list(self.sinks):
+            rec = self._sink_records.get(id(s))
+            name = rec.name if rec is not None else type(s).__name__
+            entry = {"errors": rec.errors if rec is not None else 0,
+                     "dropped": False}
+            try:
+                entry.update(s.stats() or {})
+            except Exception:  # pragma: no cover - sink bug isolation
+                entry["stats_error"] = True
+            sinks[name] = entry
+        for name in self.dropped_sinks:
+            sinks.setdefault(name, {})["dropped"] = True
+            rec = next((r for r in self._sink_records.values()
+                        if r.name == name), None)
+            if rec is not None:
+                sinks[name].setdefault("errors", rec.errors)
+        return {
+            "cadence": self._cadence,
+            "drain_count": self.drain_count,
+            "drain_seconds": round(self.drain_seconds, 6),
+            "slots_copied": self.slots_copied,
+            "dropped_snapshots": self.dropped_snapshots,
+            "dropped_tokens": self.dropped_tokens,
+            "sink_errors": dict(self.sink_errors),
+            "dropped_sinks": list(self.dropped_sinks),
+            "sinks": sinks,
         }
 
     def _sink_failed(self, sink: Sink, rec: _SinkRecord,

@@ -1,0 +1,45 @@
+"""Fleet telemetry tier — cross-host aggregation for ScALPEL (ROADMAP 2).
+
+Three layers, PerSyst/LIKWID-shaped (PAPERS.md):
+
+    FleetAgent (wire.py, agent.py)     per-host sink on the TelemetryPlane
+        │  KIND_DELTA frames            drain: encodes each drained
+        ▼                               CompactDelta, bounded buffer,
+    Aggregator (aggregator.py)          reconnect backoff, drop accounting
+        │  KIND_AGG frames (tree)      merges per (scope, event) lane:
+        ▼                               exact i64/f64 sums + reservoirs
+    FleetHead (head.py)                fleet p50/p95/p99, exact sums,
+        │  KIND_HINT frames             straggler flags, JSONL report
+        ▼  (downlink, rebroadcast)
+    AdaptiveController.apply_fleet_hint
+
+``wire``/``agent``/``reservoir`` import eagerly and are deliberately
+jax-free (the agent runs on the telemetry drain thread, which must never
+dispatch device work — attested by test).  ``Aggregator``/``FleetHead``
+resolve lazily because they pull ``core.adaptive`` (which imports jax)
+for the shared EWMA+MAD baseline machinery.
+"""
+from . import wire  # noqa: F401
+from .agent import FleetAgent  # noqa: F401
+from .reservoir import Reservoir  # noqa: F401
+
+_LAZY = {
+    "Aggregator": ("repro.telemetry.aggregator", "Aggregator"),
+    "HostRecord": ("repro.telemetry.aggregator", "HostRecord"),
+    "MergedView": ("repro.telemetry.aggregator", "MergedView"),
+    "FleetHead": ("repro.telemetry.head", "FleetHead"),
+}
+
+__all__ = ["wire", "FleetAgent", "Reservoir",
+           "Aggregator", "HostRecord", "MergedView", "FleetHead"]
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

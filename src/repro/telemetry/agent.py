@@ -1,0 +1,441 @@
+"""Per-host fleet agent — a telemetry Sink that ships drained deltas as
+wire frames to an aggregator.
+
+``FleetAgent`` attaches to the existing ``TelemetryPlane`` fan-out exactly
+like the adaptive controller does (CallbackSink-style): its ``emit`` runs
+on the drain thread, so it must NEVER dispatch device computation — the
+ROADMAP drain invariant.  Everything it touches is already host numpy
+(``snap.delta``), and this module deliberately never imports jax; tests
+attest it with a raising ``sys.modules`` guard.
+
+Emit does exactly two things on the drain thread: normalize the delta to
+dense SlotLayout lanes and enqueue a LAZY frame into a BOUNDED buffer —
+the wire encode itself runs on the sender thread right before the send
+(codec cost measured in ``run_fleet_agg_sweep``), so shipping costs the
+monitored app's drain path almost nothing.  The sender thread owns the
+socket: connect with exponential backoff, length-prefixed sends, reconnect
+on failure.  An unreachable aggregator therefore costs the monitored
+application only the enqueue: frames pile up in the bounded buffer and the
+OLDEST are dropped with accounting (never even encoded)
+(``dropped_frames``) — the per-frame ``seq`` means the aggregator sees the
+gap and accounts the loss on its side too.
+
+The socket is bidirectional: when a ``controller`` (core/adaptive.py) is
+attached, a reader thread applies head-level KIND_HINT frames via
+``AdaptiveController.apply_fleet_hint`` — fleet-shared escalation
+decisions closing the per-process gap noted in ROADMAP item 3.
+
+``close()`` encodes one final frame with ``shutdown=True``, flushes the
+buffer, and stops the threads; it is idempotent (a double close never
+double-sends — ``ScalpelRuntime``'s graceful-shutdown path and an explicit
+``close()`` can both run).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from . import wire
+
+
+class _FrameLink:
+    """A resilient length-prefixed frame pipe to one peer.
+
+    Owns the socket and the sender thread; ``send(frame_bytes)`` enqueues
+    into a bounded buffer (drop-oldest with accounting).  Shared by
+    ``FleetAgent`` (leaf → aggregator) and ``Aggregator`` (child → parent
+    tree fan-in).
+    """
+
+    def __init__(self, address, *, max_buffer: int = 256,
+                 connect_timeout: float = 2.0, backoff_s: float = 0.05,
+                 backoff_max_s: float = 2.0, on_frame=None,
+                 name: str = "fleet-link"):
+        self.address = (str(address[0]), int(address[1]))
+        self.max_buffer = max(1, int(max_buffer))
+        self.connect_timeout = float(connect_timeout)
+        self.backoff_s = float(backoff_s)
+        self.backoff_max_s = float(backoff_max_s)
+        self.on_frame = on_frame      # downlink callback (decoded Frame)
+        self.name = name
+
+        self.frames_sent = 0
+        self.bytes_sent = 0
+        self.dropped_frames = 0
+        self.connects = 0
+        self.reconnects = 0
+        self.send_errors = 0
+
+        self._q: deque[bytes] = deque()
+        self._cond = threading.Condition()
+        self._inflight = False
+        self._stop = threading.Event()
+        self._sock: socket.socket | None = None
+        self._sock_lock = threading.Lock()
+        self._sender: threading.Thread | None = None
+        self._reader: threading.Thread | None = None
+        self._closed = False
+
+    # -- producer side -----------------------------------------------------
+    def send(self, frame_bytes, force: bool = False) -> bool:
+        """Enqueue one frame; False if it displaced/was dropped.
+
+        Accepts encoded bytes OR a zero-arg callable returning them — a
+        lazy frame is materialized on the sender thread right before the
+        send, keeping the encode off the producer's (drain) thread.  A
+        frame dropped from the buffer is never encoded at all.
+
+        ``force`` grows past the bound by one — the shutdown frame must
+        never be the one dropped.
+        """
+        with self._cond:
+            if self._closed and not force:
+                self.dropped_frames += 1
+                return False
+            ok = True
+            if len(self._q) >= self.max_buffer and not force:
+                self._q.popleft()      # drop-oldest: fresher data wins
+                self.dropped_frames += 1
+                ok = False
+            self._q.append(frame_bytes)
+            self._cond.notify_all()
+        self._ensure_sender()
+        return ok
+
+    def flush(self, timeout: float = 5.0) -> bool:
+        """Block until the buffer drains (or timeout); True when empty."""
+        self._ensure_sender()
+        end = time.monotonic() + timeout
+        with self._cond:
+            while self._q or self._inflight:
+                left = end - time.monotonic()
+                if left <= 0:
+                    return False
+                self._cond.wait(min(left, 0.05))
+        return True
+
+    def close(self, flush_timeout: float = 5.0) -> None:
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+        self.flush(flush_timeout)
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        t = self._sender
+        if t is not None and t.is_alive():
+            t.join(timeout=flush_timeout + 1.0)
+        self._drop_conn()
+        with self._cond:
+            # anything still queued never made it out
+            self.dropped_frames += len(self._q)
+            self._q.clear()
+
+    @property
+    def connected(self) -> bool:
+        return self._sock is not None
+
+    # -- sender machinery --------------------------------------------------
+    def _ensure_sender(self) -> None:
+        # started once and runs until close — its loop swallows every
+        # error, so no per-send is_alive() probe on the producer path
+        if self._stop.is_set() or self._sender is not None:
+            return
+        self._sender = threading.Thread(
+            target=self._sender_loop, name=self.name, daemon=True)
+        self._sender.start()
+
+    def _sender_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._q and not self._stop.is_set():
+                    self._cond.wait(0.1)
+                if not self._q:
+                    return               # stopped and drained
+                frame = self._q.popleft()
+                self._inflight = True
+            if callable(frame):
+                try:
+                    frame = frame()
+                except Exception:   # pragma: no cover - encoder bug
+                    frame = None
+            ok = frame is not None and self._send_one(frame)
+            with self._cond:
+                self._inflight = False
+                if not ok:
+                    self.dropped_frames += 1
+                self._cond.notify_all()
+
+    def _send_one(self, frame: bytes) -> bool:
+        backoff = self.backoff_s
+        while True:
+            sock = self._connect()
+            if sock is None:
+                if self._stop.is_set():
+                    return False
+                self._stop.wait(backoff)
+                backoff = min(backoff * 2, self.backoff_max_s)
+                continue
+            try:
+                sock.sendall(wire.pack_frame(frame))
+                self.frames_sent += 1
+                self.bytes_sent += len(frame) + 4
+                return True
+            except OSError:
+                self.send_errors += 1
+                self._drop_conn()
+                if self._stop.is_set():
+                    return False
+
+    def _connect(self) -> socket.socket | None:
+        with self._sock_lock:
+            if self._sock is not None:
+                return self._sock
+        try:
+            sock = socket.create_connection(
+                self.address, timeout=self.connect_timeout)
+        except OSError:
+            return None
+        sock.settimeout(None)
+        with self._sock_lock:
+            self._sock = sock
+            self.connects += 1
+            if self.connects > 1:
+                self.reconnects += 1
+        if self.on_frame is not None:
+            self._reader = threading.Thread(
+                target=self._reader_loop, args=(sock,),
+                name=f"{self.name}-rx", daemon=True)
+            self._reader.start()
+        return sock
+
+    def _drop_conn(self) -> None:
+        with self._sock_lock:
+            sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _reader_loop(self, sock: socket.socket) -> None:
+        """Downlink: decode frames the peer pushes back (hints)."""
+        reader = wire.FrameReader()
+        try:
+            while not self._stop.is_set():
+                data = sock.recv(65536)
+                if not data:
+                    return
+                reader.feed(data)
+                for frame in reader.frames():
+                    try:
+                        self.on_frame(frame)
+                    except Exception:  # pragma: no cover - callback bug
+                        pass
+        except (OSError, wire.WireError):
+            return
+
+
+def _dense_gather(padded: np.ndarray, widths, dtype) -> np.ndarray:
+    """[n_scopes, max_slots] → flat [total] in SlotLayout lane order."""
+    if not widths or not sum(widths):
+        return np.zeros((0,), dtype)
+    return np.concatenate(
+        [np.asarray(padded[i, :w], dtype) for i, w in enumerate(widths)])
+
+
+class FleetAgent:
+    """Telemetry sink shipping each drained delta as one wire frame.
+
+    Deliberately NOT a ``core.telemetry.Sink`` subclass: the plane
+    duck-types its sinks (emit/flush/close/stats), and importing
+    ``repro.core`` would pull jax into this module — which must stay
+    jax-free end to end (drain-thread rule, attested by test).
+
+    host_id      this process's stable fleet identity
+    address      (host, port) of the aggregator it reports to
+    fingerprint  the producing spec's plan fingerprint; when omitted it is
+                 taken from the first drained snapshot (the shutdown frame
+                 of an agent that never emitted uses the zero fingerprint)
+    controller   optional AdaptiveController — head-level escalation hints
+                 arriving on the downlink are applied to it
+
+    Accounting (surfaced uniformly via ``stats()`` →
+    ``TelemetryPlane.stats()['sinks']``): frames/bytes sent, encode
+    seconds, dropped frames, reconnects.  ``shipped_*`` accumulate exactly
+    what was ENCODED (int64/f64) — the per-host oracle the fleet tests sum
+    against.
+    """
+
+    def __init__(self, host_id: str, address, *, fingerprint: str = "",
+                 controller=None, max_buffer: int = 256,
+                 connect_timeout: float = 2.0, backoff_s: float = 0.05,
+                 backoff_max_s: float = 2.0):
+        self.host_id = str(host_id)
+        self.controller = controller
+        self._fingerprint = fingerprint or ""
+        self._link = _FrameLink(
+            address, max_buffer=max_buffer, connect_timeout=connect_timeout,
+            backoff_s=backoff_s, backoff_max_s=backoff_max_s,
+            on_frame=self._on_downlink, name=f"fleet-agent-{host_id}",
+        )
+        self._seq = 0
+        self._last_step = -1
+        self._lanes = (0, 0)
+        self._encoder: wire.DeltaStreamEncoder | None = None
+        self._lock = threading.Lock()
+        self._enc_lock = threading.Lock()
+        self._closed = False
+        self.frames_encoded = 0
+        self.encode_seconds = 0.0
+        self.emit_seconds = 0.0
+        self.hints_applied = 0
+        self.shipped_calls: np.ndarray | None = None    # int64 sums
+        self.shipped_values: np.ndarray | None = None   # f64 sums
+        self.shipped_samples: np.ndarray | None = None  # int64 sums
+
+    # -- drain-thread side (never dispatches device work) ------------------
+    def emit(self, snap) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            t0 = time.perf_counter()
+            delta = snap.delta
+            calls = np.asarray(delta.calls).reshape(-1)
+            values = np.asarray(delta.values)
+            samples = np.asarray(delta.samples)
+            if values.ndim == 2:
+                # legacy padded CounterState delta: gather each scope's live
+                # footprint into SlotLayout order (host numpy — the wire
+                # contract is the dense lane order either way)
+                widths = [len(c.slots) for c in snap.spec.contexts]
+                values = _dense_gather(values, widths, np.float32)
+                samples = _dense_gather(samples, widths, np.int64)
+            else:
+                values = values.reshape(-1)
+                samples = samples.reshape(-1)
+            if not self._fingerprint:
+                self._fingerprint = snap.spec.fingerprint
+            if self._encoder is None:
+                self._encoder = wire.DeltaStreamEncoder(
+                    self.host_id, self._fingerprint)
+            enc = self._encoder
+            step = int(snap.step)
+
+            # the drain thread only normalizes and ENQUEUES — the wire
+            # encode AND the shipped_* oracle sums run lazily on the
+            # link's sender thread, off the monitored app's drain path.
+            # Safe to defer: the plane hands sinks a fresh host copy per
+            # drain, nothing mutates these arrays afterwards.  A frame
+            # dropped from the bounded buffer is never encoded, so the
+            # shipped_* oracle stays exactly "sums over frames encoded".
+            def _encode(calls=calls, values=values, samples=samples,
+                        seq=self._seq, lo=self._last_step, hi=step,
+                        enc=enc) -> bytes:
+                t = time.thread_time()
+                buf = enc.encode(calls, values, samples, seq=seq,
+                                 step_lo=lo, step_hi=hi)
+                with self._enc_lock:
+                    if self.shipped_calls is None:
+                        self.shipped_calls = np.zeros(calls.shape, np.int64)
+                        self.shipped_values = np.zeros(values.shape,
+                                                       np.float64)
+                        self.shipped_samples = np.zeros(samples.shape,
+                                                        np.int64)
+                    # += upcasts in place (i64 += i32, f64 += f32)
+                    self.shipped_calls += calls
+                    self.shipped_values += values
+                    self.shipped_samples += samples
+                    # codec CPU on the sender thread (thread_time: GIL
+                    # and scheduler waits excluded)
+                    self.encode_seconds += time.thread_time() - t
+                return buf
+
+            self._seq += 1
+            self._last_step = step
+            self.frames_encoded += 1
+            self._lanes = (calls.shape[0], values.shape[0])
+            # emit_seconds = everything this sink costs the drain thread
+            # (normalize + enqueue)
+            self.emit_seconds += time.perf_counter() - t0
+        self._link.send(_encode)
+
+    def _on_downlink(self, frame: wire.Frame) -> None:
+        if frame.kind != wire.KIND_HINT or self.controller is None:
+            return
+        self.controller.apply_fleet_hint(
+            frame.scope or None, reason=frame.reason,
+            tripwire=frame.tripwire)
+        self.hints_applied += 1
+
+    # -- lifecycle ---------------------------------------------------------
+    def flush(self, timeout: float = 0.25) -> None:
+        """Best-effort bounded wait for the send buffer to drain.
+
+        The plane calls this on every synchronous ``flush()``; with an
+        unreachable aggregator it must not stall the caller — the bounded
+        buffer + ``close()``'s longer flush own delivery, this just keeps a
+        healthy link caught up.
+        """
+        self._link.flush(timeout)
+
+    def close(self, flush_timeout: float = 5.0) -> None:
+        """Send the final ``shutdown=True`` frame, flush, stop.  Idempotent:
+        the second close (runtime shutdown + atexit, say) sends nothing."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            n, t = self._lanes
+            if self._encoder is None:
+                self._encoder = wire.DeltaStreamEncoder(
+                    self.host_id, self._fingerprint)
+            frame = self._encoder.encode(
+                np.zeros((n,), np.int64), np.zeros((t,), np.float32),
+                np.zeros((t,), np.int64), seq=self._seq,
+                step_lo=self._last_step, step_hi=self._last_step,
+                shutdown=True,
+            )
+            self._seq += 1
+        self._link.send(frame, force=True)
+        self._link.close(flush_timeout)
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def dropped_frames(self) -> int:
+        return self._link.dropped_frames
+
+    @property
+    def reconnects(self) -> int:
+        return self._link.reconnects
+
+    @property
+    def connected(self) -> bool:
+        return self._link.connected
+
+    def stats(self) -> dict:
+        """Uniform sink-health dict (TelemetryPlane.stats() collects it)."""
+        return {
+            "host_id": self.host_id,
+            "frames_encoded": self.frames_encoded,
+            "frames_sent": self._link.frames_sent,
+            "bytes_sent": self._link.bytes_sent,
+            "dropped_frames": self._link.dropped_frames,
+            "reconnects": self._link.reconnects,
+            "send_errors": self._link.send_errors,
+            "encode_seconds": round(self.encode_seconds, 6),
+            "emit_seconds": round(self.emit_seconds, 6),
+            "hints_applied": self.hints_applied,
+            "connected": self._link.connected,
+        }
+
+    def __repr__(self) -> str:
+        return (f"FleetAgent({self.host_id!r} -> "
+                f"{self._link.address[0]}:{self._link.address[1]}, "
+                f"sent={self._link.frames_sent}, "
+                f"dropped={self._link.dropped_frames})")

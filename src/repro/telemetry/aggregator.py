@@ -1,0 +1,501 @@
+"""Aggregator node — socket fan-in, per-lane merge, tree composition.
+
+One ``Aggregator`` accepts length-prefixed wire frames from any number of
+downstream senders (leaf ``FleetAgent``s and/or child aggregators) on a
+TCP listener and maintains, per flat ``SlotLayout`` lane:
+
+* exact int64/f64 running sums of every accepted ``KIND_DELTA`` (calls,
+  values, samples) — the fleet-counter exactness path;
+* a fixed-capacity ``Reservoir`` of per-frame interval means
+  (``values[lane] / samples[lane]``) — the fleet-percentile path.
+
+Tree composition follows PerSyst's shape: a child aggregator periodically
+pushes its own merged state upward as a ``KIND_AGG`` frame.  Those frames
+carry CUMULATIVE state, so the parent keeps only the LATEST frame per
+child and folds it in at ``merged()`` query time — re-sending never double
+counts, and a child that dies simply stops refreshing (its last state
+remains visible, its host count stops growing).
+
+Loss accounting is two-sided: senders count what their bounded buffers
+dropped; this node counts seq gaps per sender (``lost_frames``) plus
+frames it rejected (fingerprint mismatch / corruption / version skew).
+A plan-fingerprint mismatch is a hard reject — merging counters whose
+lanes mean different things is worse than dropping them.
+
+Downlink: ``broadcast_hint`` writes a ``KIND_HINT`` frame back down every
+live downstream connection (agents apply it via
+``AdaptiveController.apply_fleet_hint``); hints arriving from a parent are
+re-broadcast downward, so a head-level decision reaches every leaf.
+
+The per-host step-rate baselines reuse ``core.adaptive._Baseline`` — the
+same EWMA+MAD machinery the per-process controller uses for step-time
+outliers — which is what the head's straggler flags read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+import time
+
+import numpy as np
+
+from repro.core.adaptive import _Baseline
+
+from . import wire
+from .agent import _FrameLink
+from .reservoir import Reservoir
+
+
+@dataclasses.dataclass
+class HostRecord:
+    """Per-sender bookkeeping (leaf host or child aggregator)."""
+
+    host_id: str
+    kind: int = wire.KIND_DELTA
+    frames: int = 0
+    last_seq: int = -1
+    lost_frames: int = 0            # seq gaps: sender encoded, we never saw
+    last_step: int = -1
+    first_seen: float = 0.0
+    last_seen: float = 0.0
+    shutdown: bool = False
+    rate: float = float("nan")      # steps/sec over the last closed window
+    baseline: _Baseline = dataclasses.field(default_factory=_Baseline)
+    rate_window: float = 0.02       # min seconds of wall clock per sample
+    _pending_steps: int = 0
+    _anchor: float = 0.0
+
+    def observe(self, frame: wire.Frame, now: float,
+                rate_alpha: float) -> None:
+        if self.frames == 0:
+            self.first_seen = now
+            self._anchor = now
+        gap = frame.seq - self.last_seq - 1
+        if gap > 0:
+            self.lost_frames += gap
+        self.last_seq = max(self.last_seq, frame.seq)
+        self.frames += 1
+        if frame.step_hi > self.last_step and self.last_seen > 0.0:
+            # windowed rate: accumulate step spans until at least
+            # ``rate_window`` of wall clock separates us from the anchor,
+            # then emit ONE sample.  Arrival times are scheduler/TCP noise
+            # frame-to-frame (a close-time flush delivers many frames
+            # microseconds apart); per-frame instantaneous rates explode
+            # unboundedly upward and poison the EWMA, while a windowed
+            # sample collapses any burst into its honest average.
+            self._pending_steps += frame.step_hi - self.last_step
+            dt = now - self._anchor
+            if dt >= self.rate_window:
+                self.rate = self._pending_steps / dt
+                self.baseline.update(self.rate, rate_alpha)
+                self._pending_steps = 0
+                self._anchor = now
+        self.last_step = max(self.last_step, frame.step_hi)
+        self.last_seen = now
+        self.shutdown = self.shutdown or frame.shutdown
+
+    def smoothed_rate(self) -> float:
+        return self.baseline.mean if self.baseline.n else self.rate
+
+
+@dataclasses.dataclass
+class MergedView:
+    """A point-in-time combined view over this node and its children."""
+
+    calls: np.ndarray               # [n_scopes] i64 fleet sums
+    values: np.ndarray              # [total] f64 fleet sums
+    samples: np.ndarray             # [total] i64 fleet sums
+    reservoirs: list                # [total] Reservoir (fresh merged copies)
+    n_hosts: int
+    frames_in: int
+    dropped: int                    # lost (seq gaps) + rejected, whole subtree
+    hosts: dict                     # host_id -> HostRecord (direct senders)
+    fingerprint: str
+    step_hi: int
+
+
+class Aggregator:
+    """Fan-in node of the fleet telemetry tree.
+
+    address       (host, port) to listen on; port 0 picks a free one —
+                  read the bound port back from ``self.address``
+    node_id       this node's host_id in frames it pushes upward
+    parent        optional (host, port) of a parent aggregator; call
+                  ``push()`` (or set ``push_interval``) to send cumulative
+                  KIND_AGG frames upward
+    fingerprint   optional pinned plan fingerprint; otherwise learned from
+                  the first counter frame and enforced afterwards
+    reservoir_k   per-lane reservoir capacity
+    seed          reservoir RNG seed (deterministic percentiles in tests)
+    """
+
+    def __init__(self, address=("127.0.0.1", 0), *, node_id: str = "agg",
+                 parent=None, push_interval: float | None = None,
+                 fingerprint: str = "", reservoir_k: int = 256,
+                 seed: int = 0, rate_alpha: float = 0.2):
+        self.node_id = str(node_id)
+        self._requested_address = (str(address[0]), int(address[1]))
+        self.reservoir_k = int(reservoir_k)
+        self.rate_alpha = float(rate_alpha)
+        self._rng = np.random.default_rng(seed)
+        self._seed = int(seed)
+
+        self._lock = threading.RLock()
+        self._fingerprint = fingerprint or ""
+        self._calls: np.ndarray | None = None       # i64 [n_scopes]
+        self._values: np.ndarray | None = None      # f64 [total]
+        self._samples: np.ndarray | None = None     # i64 [total]
+        self._reservoirs: list[Reservoir] = []
+        self._hosts: dict[str, HostRecord] = {}
+        self._children: dict[str, wire.Frame] = {}  # latest AGG per child
+        self._step_hi = -1
+        self.frames_in = 0
+        self.rejected_fingerprint = 0
+        self.rejected_corrupt = 0
+        self.rejected_version = 0
+        self.hints_sent = 0
+
+        self._listener: socket.socket | None = None
+        self._accept_thread: threading.Thread | None = None
+        self._conns: list[socket.socket] = []
+        self._stop = threading.Event()
+        self._closed = False
+
+        self._parent_link: _FrameLink | None = None
+        if parent is not None:
+            self._parent_link = _FrameLink(
+                parent, on_frame=self._on_parent_frame,
+                name=f"agg-up-{node_id}")
+        self._push_interval = push_interval
+        self._push_seq = 0
+        self._push_thread: threading.Thread | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def serve(self) -> "Aggregator":
+        """Bind the listener and start accepting downstream connections."""
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind(self._bind_address)
+        sock.listen(64)
+        self._listener = sock
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"agg-accept-{self.node_id}",
+            daemon=True)
+        self._accept_thread.start()
+        if self._push_interval is not None and self._parent_link is not None:
+            self._push_thread = threading.Thread(
+                target=self._push_loop, name=f"agg-push-{self.node_id}",
+                daemon=True)
+            self._push_thread.start()
+        return self
+
+    @property
+    def _bind_address(self):
+        return self._requested_address
+
+    @property
+    def address(self) -> tuple[str, int]:
+        """The bound (host, port) — valid after ``serve()``."""
+        if self._listener is None:
+            raise RuntimeError("Aggregator.serve() has not been called")
+        return self._listener.getsockname()[:2]
+
+    def close(self, flush_timeout: float = 5.0) -> None:
+        """Stop accepting, push a final (shutdown) frame upward, close."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._stop.set()
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        if self._parent_link is not None:
+            try:
+                self._send_up(shutdown=True)
+            except Exception:
+                pass
+            self._parent_link.close(flush_timeout)
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        t = self._accept_thread
+        if t is not None and t.is_alive():
+            t.join(timeout=1.0)
+
+    def __enter__(self) -> "Aggregator":
+        return self.serve() if self._listener is None else self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- socket plumbing ---------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _addr = self._listener.accept()
+            except OSError:
+                return
+            with self._lock:
+                self._conns.append(conn)
+            threading.Thread(
+                target=self._conn_loop, args=(conn,),
+                name=f"agg-conn-{self.node_id}", daemon=True).start()
+
+    def _conn_loop(self, conn: socket.socket) -> None:
+        reader = wire.FrameReader()
+        try:
+            while not self._stop.is_set():
+                data = conn.recv(65536)
+                if not data:
+                    return
+                reader.feed(data)
+                try:
+                    for frame in reader.frames():
+                        self.ingest(frame)
+                except wire.VersionSkewError:
+                    with self._lock:
+                        self.rejected_version += 1
+                    return          # no resync on a corrupt byte stream
+                except wire.WireError:
+                    with self._lock:
+                        self.rejected_corrupt += 1
+                    return
+        except OSError:
+            return
+        finally:
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    # -- merge core --------------------------------------------------------
+    def ingest(self, frame: wire.Frame) -> bool:
+        """Fold one decoded frame in; False if it was rejected.
+
+        Public so in-process tests can drive the merge without sockets.
+        """
+        now = time.monotonic()
+        with self._lock:
+            if frame.kind == wire.KIND_HINT:
+                # hints travel downward only; one arriving here is a peer
+                # misconfiguration, not data — drop it.
+                return False
+            if not self._accept_fingerprint(frame):
+                self.rejected_fingerprint += 1
+                return False
+            rec = self._hosts.get(frame.host_id)
+            if rec is None:
+                rec = self._hosts[frame.host_id] = HostRecord(
+                    host_id=frame.host_id, kind=frame.kind)
+            rec.observe(frame, now, self.rate_alpha)
+            self._step_hi = max(self._step_hi, frame.step_hi)
+            if frame.kind == wire.KIND_AGG:
+                # cumulative child state: keep latest only (tree fan-in).
+                # NOT counted into frames_in — that tallies leaf DELTA
+                # frames only, so merged() can add the child's own
+                # frames_in without double counting the carrier frames.
+                self._children[frame.host_id] = frame
+                return True
+            self.frames_in += 1
+            self._merge_delta(frame)
+            return True
+
+    def _accept_fingerprint(self, frame: wire.Frame) -> bool:
+        fp = frame.fingerprint
+        if fp == wire._ZERO_FP:
+            return True             # control frame from a host that never
+                                    # drained (pure-shutdown agent)
+        if not self._fingerprint:
+            self._fingerprint = fp
+            return True
+        return fp == self._fingerprint
+
+    def _merge_delta(self, frame: wire.Frame) -> None:
+        calls = frame.calls.astype(np.int64)
+        values = frame.values.astype(np.float64)
+        samples = frame.samples.astype(np.int64)
+        if self._calls is None:
+            self._calls = np.zeros(calls.shape, np.int64)
+            self._values = np.zeros(values.shape, np.float64)
+            self._samples = np.zeros(samples.shape, np.int64)
+            self._reservoirs = [
+                Reservoir(self.reservoir_k,
+                          np.random.default_rng(self._seed + i))
+                for i in range(values.shape[0])
+            ]
+        if calls.shape != self._calls.shape or \
+                values.shape != self._values.shape:
+            # same fingerprint implies same layout; treat as corruption
+            self.rejected_corrupt += 1
+            return
+        self._calls += calls
+        self._values += values
+        self._samples += samples
+        for lane in np.nonzero(samples > 0)[0].tolist():
+            self._reservoirs[lane].add(values[lane] / samples[lane])
+
+    # -- views -------------------------------------------------------------
+    def merged(self) -> MergedView:
+        """Combine direct state with the latest cumulative child frames."""
+        with self._lock:
+            if self._calls is not None:
+                calls = self._calls.copy()
+                values = self._values.copy()
+                samples = self._samples.copy()
+                res = [self._clone_reservoir(r, i)
+                       for i, r in enumerate(self._reservoirs)]
+            else:
+                calls = values = samples = None
+                res = []
+            children = list(self._children.values())
+            n_hosts = sum(1 for r in self._hosts.values()
+                          if r.kind == wire.KIND_DELTA)
+            frames_in = self.frames_in
+            dropped = self._dropped_locked()
+            hosts = dict(self._hosts)
+            fp = self._fingerprint
+            step_hi = self._step_hi
+
+        for child in children:
+            if calls is None:
+                calls = np.zeros(child.calls.shape, np.int64)
+                values = np.zeros(child.values.shape, np.float64)
+                samples = np.zeros(child.samples.shape, np.int64)
+                res = [Reservoir(self.reservoir_k,
+                                 np.random.default_rng(self._seed + i))
+                       for i in range(child.values.shape[0])]
+            if child.calls.shape != calls.shape:
+                continue            # rejected at ingest already
+            calls = calls + child.calls.astype(np.int64)
+            values = values + child.values.astype(np.float64)
+            samples = samples + child.samples.astype(np.int64)
+            n_hosts += child.n_hosts
+            frames_in += child.frames_in
+            dropped += child.dropped
+            for lane, (seen, items) in enumerate(child.reservoirs or []):
+                if lane < len(res):
+                    res[lane].merge(items, seen)
+
+        if calls is None:
+            calls = np.zeros((0,), np.int64)
+            values = np.zeros((0,), np.float64)
+            samples = np.zeros((0,), np.int64)
+        return MergedView(
+            calls=calls, values=values, samples=samples, reservoirs=res,
+            n_hosts=n_hosts, frames_in=frames_in, dropped=dropped,
+            hosts=hosts, fingerprint=fp, step_hi=step_hi,
+        )
+
+    def _clone_reservoir(self, r: Reservoir, lane: int) -> Reservoir:
+        out = Reservoir(self.reservoir_k,
+                        np.random.default_rng(self._seed + 7919 + lane))
+        out.merge(r.items, r.seen)
+        return out
+
+    def _dropped_locked(self) -> int:
+        lost = sum(r.lost_frames for r in self._hosts.values())
+        return (lost + self.rejected_fingerprint + self.rejected_corrupt
+                + self.rejected_version)
+
+    @property
+    def dropped(self) -> int:
+        with self._lock:
+            return self._dropped_locked()
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "node_id": self.node_id,
+                "frames_in": self.frames_in,
+                "n_hosts": sum(1 for r in self._hosts.values()
+                               if r.kind == wire.KIND_DELTA),
+                "n_children": len(self._children),
+                "lost_frames": sum(r.lost_frames
+                                   for r in self._hosts.values()),
+                "rejected_fingerprint": self.rejected_fingerprint,
+                "rejected_corrupt": self.rejected_corrupt,
+                "rejected_version": self.rejected_version,
+                "hints_sent": self.hints_sent,
+                "step_hi": self._step_hi,
+                "fingerprint": self._fingerprint,
+            }
+
+    # -- upward push (tree fan-in) -----------------------------------------
+    def push(self) -> bool:
+        """Send one cumulative KIND_AGG frame to the parent now."""
+        if self._parent_link is None:
+            raise RuntimeError("Aggregator has no parent configured")
+        return self._send_up(shutdown=False)
+
+    def _send_up(self, shutdown: bool) -> bool:
+        view = self.merged()
+        with self._lock:
+            seq = self._push_seq
+            self._push_seq += 1
+        frame = wire.encode_agg(
+            view.calls, view.values, view.samples,
+            [(r.seen, r.items) for r in view.reservoirs],
+            host_id=self.node_id, seq=seq,
+            fingerprint=view.fingerprint or "",
+            step_lo=-1, step_hi=view.step_hi, n_hosts=view.n_hosts,
+            frames_in=view.frames_in, dropped=view.dropped,
+            shutdown=shutdown,
+        )
+        return self._parent_link.send(frame, force=shutdown)
+
+    def _push_loop(self) -> None:
+        while not self._stop.wait(self._push_interval):
+            try:
+                self._send_up(shutdown=False)
+            except Exception:
+                pass
+
+    def _on_parent_frame(self, frame: wire.Frame) -> None:
+        # a hint from above fans out below — the head reaches every leaf
+        if frame.kind == wire.KIND_HINT:
+            self._broadcast_raw(wire.encode_hint(
+                frame.scope, frame.reason, host_id=self.node_id,
+                seq=frame.seq, tripwire=frame.tripwire))
+
+    # -- downlink hints ----------------------------------------------------
+    def broadcast_hint(self, scope: str, reason: str, *,
+                       tripwire: bool = False) -> int:
+        """Write one KIND_HINT down every live downstream connection.
+
+        Returns how many connections it reached.
+        """
+        frame = wire.encode_hint(
+            scope or "", reason, host_id=self.node_id, seq=self.hints_sent,
+            tripwire=tripwire)
+        return self._broadcast_raw(frame)
+
+    def _broadcast_raw(self, frame: bytes) -> int:
+        data = wire.pack_frame(frame)
+        with self._lock:
+            conns = list(self._conns)
+        sent = 0
+        for conn in conns:
+            try:
+                conn.sendall(data)
+                sent += 1
+            except OSError:
+                pass
+        with self._lock:
+            self.hints_sent += 1
+        return sent
+
+    def __repr__(self) -> str:
+        st = self.stats()
+        return (f"Aggregator({self.node_id!r}, hosts={st['n_hosts']}, "
+                f"children={st['n_children']}, frames={st['frames_in']})")

@@ -1,0 +1,207 @@
+"""Fleet head — the tree root's reporting and decision sink.
+
+``FleetHead`` reads an ``Aggregator``'s :meth:`merged` view and turns it
+into the fleet-level products ROADMAP item 2 asks for:
+
+* **fleet percentiles** — p50/p95/p99 per (scope, event) lane from the
+  merged reservoirs (per-host per-interval event means), labeled through
+  ``plan.lane_slot_ids`` when the producing spec is at hand;
+* **exact fleet counter sums** — the int64/f64 sums every accepted delta
+  contributed to (cross-checked in tests against per-host oracles);
+* **straggler flags** — per-host step rates (EWMA-smoothed with
+  ``core.adaptive._Baseline``, the controller's own machinery) compared
+  against the fleet median with a MAD scale and a relative floor: a host
+  is a straggler when its rate sits ``sigma`` robust-deviations *below*
+  the fleet, Kunafa's node-wide-outlier use case;
+* **a JSONL fleet report** — one line per :meth:`write_report`, the fleet
+  analogue of the per-process ``JsonlSink`` stream;
+* **escalation hints** — :meth:`auto_hints` watches tripwire lanes
+  (NAN_COUNT/INF_COUNT) for fresh fleet-level ticks and rebroadcasts a
+  ``KIND_HINT`` down the tree so every per-process ``AdaptiveController``
+  escalates together (the per-process gap noted in ROADMAP item 3).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.core import plan as plan_lib
+
+from .aggregator import Aggregator, MergedView
+
+_TRIPWIRE_EVENTS = ("NAN_COUNT", "INF_COUNT")
+
+
+class FleetHead:
+    """Reporting head over one (root) aggregator.
+
+    aggregator       the tree root this head reads
+    spec             optional producing ``MonitorSpec`` — labels lanes as
+                     (scope, slot_id) and enables tripwire ``auto_hints``;
+                     without it lanes are labeled ``lane<i>``
+    percentiles      which fleet percentiles to report
+    straggler_sigma  robust deviations below the fleet median that flag a
+                     host (MAD scaled by 1.4826 to estimate sigma)
+    straggler_floor  relative MAD floor — jitter below ``floor * median``
+                     never flags (the per-process controller's rel_floor
+                     idea applied fleet-wide)
+    jsonl_path       optional path; ``write_report()`` appends one JSON
+                     line per call
+    """
+
+    def __init__(self, aggregator: Aggregator, *, spec=None,
+                 percentiles=(50.0, 95.0, 99.0),
+                 straggler_sigma: float = 4.0,
+                 straggler_floor: float = 0.05,
+                 straggler_warmup: int = 3,
+                 jsonl_path: str | None = None):
+        self.aggregator = aggregator
+        self.spec = spec
+        self.percentiles = tuple(float(q) for q in percentiles)
+        self.straggler_sigma = float(straggler_sigma)
+        self.straggler_floor = float(straggler_floor)
+        self.straggler_warmup = int(straggler_warmup)
+        self.jsonl_path = jsonl_path
+        self.reports_written = 0
+        self.hints_broadcast = 0
+        self._lane_labels: list[tuple[str, str]] | None = None
+        self._tripwire_seen: dict[int, int] = {}
+        self._lock = threading.Lock()
+        if spec is not None:
+            self._lane_labels = list(plan_lib.lane_slot_ids(spec))
+
+    # -- lane naming -------------------------------------------------------
+    def _labels(self, total: int) -> list[tuple[str, str]]:
+        if self._lane_labels is not None and len(self._lane_labels) == total:
+            return self._lane_labels
+        return [("fleet", f"lane{i}") for i in range(total)]
+
+    # -- straggler machinery -----------------------------------------------
+    def straggler_flags(self, view: MergedView | None = None) -> dict:
+        """host_id -> flag for every DIRECT leaf host with a known rate.
+
+        Cross-host outlier test: median + MAD over the smoothed per-host
+        step rates, flag hosts ``sigma`` robust-deviations LOW with a
+        relative floor so ordinary jitter never flags.  (Rates ride the
+        aggregator's per-host ``_Baseline``s; hosts folded in through
+        child AGG frames carry no per-host rates — stragglers are a
+        direct-attachment product, typically computed at depth-1 nodes.)
+        """
+        if view is None:
+            view = self.aggregator.merged()
+        rates = {
+            hid: rec.smoothed_rate() for hid, rec in view.hosts.items()
+            if rec.baseline.n >= self.straggler_warmup
+        }
+        if len(rates) < 2:
+            return {hid: False for hid in rates}
+        vals = np.asarray(list(rates.values()), np.float64)
+        med = float(np.median(vals))
+        mad = float(np.median(np.abs(vals - med)))
+        scale = max(1.4826 * mad, self.straggler_floor * abs(med))
+        thresh = med - self.straggler_sigma * scale
+        return {hid: bool(r < thresh) for hid, r in rates.items()}
+
+    # -- report assembly ---------------------------------------------------
+    def snapshot(self) -> dict:
+        """One structured fleet report (plain dict; JSON-serializable)."""
+        view = self.aggregator.merged()
+        labels = self._labels(view.values.shape[0])
+        lanes = []
+        for i, (scope, slot_id) in enumerate(labels):
+            r = view.reservoirs[i] if i < len(view.reservoirs) else None
+            pct = {}
+            if r is not None and len(r):
+                q = r.percentile(list(self.percentiles))
+                pct = {f"p{g:g}": float(v)
+                       for g, v in zip(self.percentiles, np.atleast_1d(q))}
+            lanes.append({
+                "scope": scope,
+                "slot": slot_id,
+                "sum": float(view.values[i]),
+                "samples": int(view.samples[i]),
+                "reservoir_n": 0 if r is None else len(r),
+                "reservoir_seen": 0 if r is None else r.seen,
+                **pct,
+            })
+        flags = self.straggler_flags(view)
+        hosts = {
+            hid: {
+                "frames": rec.frames,
+                "lost_frames": rec.lost_frames,
+                "last_step": rec.last_step,
+                "rate": None if np.isnan(rec.rate) else round(rec.rate, 3),
+                "rate_smoothed": (round(rec.smoothed_rate(), 3)
+                                  if rec.baseline.n else None),
+                "shutdown": rec.shutdown,
+                "straggler": flags.get(hid, False),
+            }
+            for hid, rec in view.hosts.items()
+        }
+        return {
+            "ts": time.time(),
+            "fingerprint": view.fingerprint,
+            "n_hosts": view.n_hosts,
+            "frames_in": view.frames_in,
+            "dropped": view.dropped,
+            "step_hi": view.step_hi,
+            "calls": [int(c) for c in view.calls],
+            "lanes": lanes,
+            "hosts": hosts,
+            "stragglers": sorted(h for h, f in flags.items() if f),
+        }
+
+    def write_report(self) -> dict:
+        """Append one fleet snapshot line to ``jsonl_path`` (and return it)."""
+        snap = self.snapshot()
+        if self.jsonl_path is not None:
+            line = json.dumps(snap, sort_keys=True)
+            with self._lock:
+                with open(self.jsonl_path, "a") as f:
+                    f.write(line + "\n")
+                self.reports_written += 1
+        return snap
+
+    # -- fleet-wide escalation hints ---------------------------------------
+    def broadcast_hint(self, scope: str, reason: str, *,
+                       tripwire: bool = False) -> int:
+        """Push one escalation hint down the tree (scope "" = global)."""
+        n = self.aggregator.broadcast_hint(scope, reason, tripwire=tripwire)
+        self.hints_broadcast += 1
+        return n
+
+    def auto_hints(self) -> list[tuple[str, str]]:
+        """Scan tripwire lanes for fresh fleet-level ticks and rebroadcast.
+
+        Returns the (scope, reason) hints sent this call.  Needs ``spec``
+        (lane labels) — without it, no lanes are recognizably tripwires.
+        """
+        if self._lane_labels is None:
+            return []
+        view = self.aggregator.merged()
+        sent = []
+        with self._lock:
+            for i, (scope, slot_id) in enumerate(self._lane_labels):
+                # slot ids read EVENT[:tensor][/subevent]; the tripwire
+                # match is on the event part alone
+                event = slot_id.split("/", 1)[0].split(":", 1)[0]
+                if event not in _TRIPWIRE_EVENTS:
+                    continue
+                if i >= view.samples.shape[0]:
+                    continue
+                ticks = int(round(float(view.values[i])))
+                if ticks > self._tripwire_seen.get(i, 0):
+                    self._tripwire_seen[i] = ticks
+                    reason = f"fleet:{event.lower()}"
+                    sent.append((scope, reason))
+        for scope, reason in sent:
+            self.broadcast_hint(scope, reason, tripwire=True)
+        return sent
+
+    def __repr__(self) -> str:
+        return (f"FleetHead(agg={self.aggregator.node_id!r}, "
+                f"reports={self.reports_written}, "
+                f"hints={self.hints_broadcast})")

@@ -1,0 +1,100 @@
+"""Reservoir sampling for fleet percentile estimation.
+
+The head reports per-scope distributions (p50/p95/p99) over per-host,
+per-interval event means — values that arrive as an unbounded stream at
+every aggregator.  A fixed-capacity uniform reservoir (Vitter's Algorithm
+R, the same scheme Scalene's sampler uses) keeps the estimate O(k) per
+lane no matter how many hosts or how long the run.
+
+Two operations matter for the tree:
+
+* ``add(x)`` — leaf path: every drained frame contributes its lanes'
+  interval means.
+* ``merge(items, seen)`` — fan-in path: a child aggregator ships its own
+  reservoir (plus how many values it represents) upward; the parent folds
+  it in weighted by ``seen`` so each original observation keeps a
+  near-uniform inclusion probability across the whole subtree.
+
+Deterministic under a seeded ``numpy.random.Generator`` — tests pin seeds
+and compare percentiles against a merged-stream oracle.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Reservoir:
+    """Fixed-capacity uniform sample of a value stream (Algorithm R)."""
+
+    __slots__ = ("k", "seen", "_items", "_rng")
+
+    def __init__(self, k: int, rng: np.random.Generator | None = None):
+        if k < 1:
+            raise ValueError(f"reservoir capacity must be >= 1, got {k}")
+        self.k = int(k)
+        self.seen = 0
+        self._items: list[float] = []
+        self._rng = rng if rng is not None else np.random.default_rng(0)
+
+    def add(self, x: float) -> None:
+        self.seen += 1
+        if len(self._items) < self.k:
+            self._items.append(float(x))
+            return
+        j = int(self._rng.integers(0, self.seen))
+        if j < self.k:
+            self._items[j] = float(x)
+
+    def merge(self, items, seen: int) -> None:
+        """Fold a child reservoir (``items`` drawn uniformly from ``seen``
+        observations) into this one.
+
+        When everything still fits in ``k`` the merge is exact
+        (concatenation).  Otherwise the combined pool is subsampled with
+        per-item weights ``seen/len(items)`` — each item stands in for
+        that many original observations — which keeps inclusion
+        probabilities uniform across subtrees of very different sizes.
+        """
+        items = [float(x) for x in np.asarray(items).reshape(-1)]
+        seen = int(seen)
+        if seen < len(items):
+            raise ValueError(
+                f"reservoir merge: seen={seen} < {len(items)} items")
+        if not items:
+            self.seen += seen
+            return
+        if self.seen == len(self._items) and \
+                len(self._items) + len(items) <= self.k:
+            # both sides exhaustive and the union fits: exact
+            self._items.extend(items)
+            self.seen += seen
+            return
+        pool = self._items + items
+        w = np.concatenate([
+            np.full(len(self._items),
+                    (self.seen / len(self._items)) if self._items else 0.0),
+            np.full(len(items), seen / len(items)),
+        ])
+        n_keep = min(self.k, len(pool))
+        idx = self._rng.choice(
+            len(pool), size=n_keep, replace=False, p=w / w.sum())
+        self._items = [pool[i] for i in idx]
+        self.seen += seen
+
+    @property
+    def items(self) -> np.ndarray:
+        return np.asarray(self._items, np.float32)
+
+    def percentile(self, q) -> float | np.ndarray:
+        """Percentile estimate over the sample (NaN when empty)."""
+        if not self._items:
+            q_arr = np.asarray(q, np.float64)
+            return (float("nan") if q_arr.ndim == 0
+                    else np.full(q_arr.shape, np.nan))
+        return np.percentile(np.asarray(self._items, np.float64), q)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __repr__(self) -> str:
+        return f"Reservoir(k={self.k}, n={len(self._items)}, seen={self.seen})"

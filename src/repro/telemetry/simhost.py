@@ -1,0 +1,194 @@
+"""Simulated fleet host — the shared per-process workload behind the
+multi-process fleet tests and ``examples/fleet_monitor.py``.
+
+One ``run_host`` call is one "host" of the fleet: it builds the shared
+``MonitorSpec`` (every host MUST compile the same plans — the wire
+fingerprint check enforces it), runs a small monitored workload with a
+``FleetAgent`` attached to the runtime's telemetry plane, and returns (or,
+via the CLI, prints as a ``FLEET-ORACLE:`` JSON line) everything the
+aggregation tier is later checked against:
+
+* ``shipped_calls`` / ``shipped_values`` / ``shipped_samples`` — the
+  agent's own int64/f64 sums over every frame it ENCODED.  The fleet-sum
+  acceptance test asserts the aggregator's totals equal the sum of these
+  per-host oracles (int lanes exactly, float lanes to f64 tolerance).
+* ``lane_means`` — per flat lane, the per-drain interval means recorded by
+  a shadow ``CallbackSink`` on the same plane.  The percentile acceptance
+  test merges all hosts' streams and compares ``np.percentile`` of the
+  merged stream against the head's reservoir estimate.
+
+Fault hooks (``repro.testing.faults``): ``straggle_s`` adds a host-side
+``StragglerDelay`` sleep every step (the straggler the head must flag);
+``nan_step`` splices a NaN into one scope's probed tensor (the tripwire
+the head turns into a fleet-wide hint).
+
+    python -m repro.telemetry.simhost --host-id h0 --port 9999 --steps 30
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+EVENTS = ("ACT_RMS", "ACT_ZERO_FRAC", "NAN_COUNT", "INF_COUNT")
+SCOPES = ("layer/attn", "layer/mlp", "head")
+FAULT_SCOPE = "layer/attn"
+
+
+def build_spec():
+    """The fleet-shared MonitorSpec (same plans ⇒ same wire fingerprint)."""
+    from repro.core.context import EventSpec, MonitorSpec, ScopeContext
+
+    return MonitorSpec.of([
+        ScopeContext.exhaustive(s, [EventSpec(e, "x") for e in EVENTS])
+        for s in SCOPES
+    ])
+
+
+def run_host(host_id: str, port: int, *, steps: int = 30, cadence: int = 2,
+             seed: int = 0, pace_s: float = 0.005, straggle_s: float = 0.0,
+             nan_step: int | None = None, adaptive: bool = False,
+             linger_s: float = 0.0, max_buffer: int = 256,
+             aggregator_host: str = "127.0.0.1") -> dict:
+    """Run one simulated host against the aggregator at ``port``.
+
+    ``pace_s`` sleeps every step on EVERY host so healthy step rates are
+    stable (socket-arrival-time rates on an unpaced microbenchmark are
+    pure scheduler noise); ``straggle_s`` adds the straggler's extra
+    per-step sleep on top.  ``linger_s`` keeps the process alive after its
+    steps polling for a fleet hint (the downlink demo) — it exits early
+    the moment one is applied.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import core as scalpel
+    from repro.core.adaptive import AdaptiveConfig
+    from repro.testing.faults import FaultInjector, StragglerDelay, TensorFault
+
+    spec = build_spec()
+    runtime = scalpel.ScalpelRuntime(spec, hook_every=cadence)
+    ctl = None
+    if adaptive:
+        ctl = runtime.attach_controller(AdaptiveConfig(
+            overhead_budget=1.0, quiet_steps=10_000))
+    agent = runtime.attach_fleet_agent(
+        host_id, (aggregator_host, int(port)), max_buffer=max_buffer)
+
+    # shadow oracle: per-lane interval means of every drained delta, off
+    # the same plane fan-out the agent rides
+    lane_means: list[list[float]] = []
+
+    def record(snap):
+        d = snap.delta
+        vals = np.asarray(d.values, np.float64).reshape(-1)
+        smps = np.asarray(d.samples, np.int64).reshape(-1)
+        if not lane_means:
+            lane_means.extend([] for _ in range(vals.shape[0]))
+        for i in range(vals.shape[0]):
+            if smps[i] > 0:
+                lane_means[i].append(float(vals[i] / smps[i]))
+
+    runtime.telemetry.add_sink(scalpel.CallbackSink(record))
+
+    faults = []
+    if straggle_s > 0:
+        faults.append(StragglerDelay(step=0, seconds=straggle_s, every=1))
+    if nan_step is not None:
+        faults.append(TensorFault(FAULT_SCOPE, "x", step=int(nan_step),
+                                  kind="nan"))
+    injector = FaultInjector(faults)
+
+    mon = scalpel.Monitor(spec, telemetry=runtime.telemetry, counter_axes=())
+    key = jax.random.PRNGKey(seed)
+    w1, w2, w3 = (jax.random.normal(k, (32, 32)) * 0.2
+                  for k in jax.random.split(key, 3))
+
+    def workload(x, step):
+        h = jnp.tanh(x @ w1)
+        with scalpel.function("layer/attn"):
+            scalpel.probe(x=injector.corrupt(FAULT_SCOPE, "x", step, h))
+        m = jnp.tanh(h @ w2)
+        with scalpel.function("layer/mlp"):
+            scalpel.probe(x=m)
+        y = m @ w3
+        with scalpel.function("head"):
+            scalpel.probe(x=y)
+        return x, step + 1
+
+    step_fn = mon.jit(workload)
+    mstate = mon.init()
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, 32))
+    step = jnp.zeros((), jnp.int32)
+    for i in range(int(steps)):
+        mstate = mon.sync(mstate, runtime=runtime)
+        (x, step), mstate = step_fn(mstate, x, step)
+        runtime.on_step(mstate.counters, ring=mstate.ring)
+        runtime.flush()
+        injector.host_step(i)
+        if pace_s > 0:
+            time.sleep(pace_s)
+
+    if linger_s > 0 and ctl is not None:
+        deadline = time.monotonic() + linger_s
+        while time.monotonic() < deadline:
+            if ctl.stats["fleet_hints"] >= 1:
+                break
+            time.sleep(0.02)
+
+    # close FIRST: the plane's sink-close path flushes the agent and sends
+    # its final shutdown frame — stats snapped after include it, so the
+    # oracle's frames_sent matches the aggregator's per-host frame count
+    runtime.close()
+    agent_stats = agent.stats()
+    oracle = {
+        "host_id": host_id,
+        "steps": int(steps),
+        "fingerprint": spec.fingerprint,
+        "shipped_calls": [int(v) for v in
+                          (agent.shipped_calls if agent.shipped_calls
+                           is not None else [])],
+        "shipped_values": [float(v) for v in
+                           (agent.shipped_values if agent.shipped_values
+                            is not None else [])],
+        "shipped_samples": [int(v) for v in
+                            (agent.shipped_samples if agent.shipped_samples
+                             is not None else [])],
+        "lane_means": lane_means,
+        "agent": agent_stats,
+        "straggler_fired": list(injector.fired),
+        "fleet_hints": (ctl.stats["fleet_hints"] if ctl is not None
+                        else None),
+        "levels": (ctl.levels if ctl is not None else None),
+    }
+    return oracle
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--host-id", required=True)
+    p.add_argument("--port", type=int, required=True)
+    p.add_argument("--steps", type=int, default=30)
+    p.add_argument("--cadence", type=int, default=2)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--pace-s", type=float, default=0.005)
+    p.add_argument("--straggle-s", type=float, default=0.0)
+    p.add_argument("--nan-step", type=int, default=None)
+    p.add_argument("--adaptive", action="store_true")
+    p.add_argument("--linger-s", type=float, default=0.0)
+    p.add_argument("--max-buffer", type=int, default=256)
+    args = p.parse_args(argv)
+    oracle = run_host(
+        args.host_id, args.port, steps=args.steps, cadence=args.cadence,
+        seed=args.seed, pace_s=args.pace_s, straggle_s=args.straggle_s,
+        nan_step=args.nan_step, adaptive=args.adaptive,
+        linger_s=args.linger_s, max_buffer=args.max_buffer,
+    )
+    print("FLEET-ORACLE: " + json.dumps(oracle, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,549 @@
+"""Fleet wire format — versioned binary frames for drained counter deltas.
+
+The fleet tier (agent → aggregator tree → head) ships drained
+``CompactDelta``s between hosts.  The spec-wide dense ``SlotLayout``
+(core/plan.py) makes this a near-free flat-buffer pack: a delta is exactly
+``calls[n_scopes] i32 + values[total] f32 + samples[total] i32`` in a lane
+order that is **part of the wire contract** — see ``plan.lane_slot_ids``.
+Both ends must agree on the producing spec, which is why every frame
+carries the 20-byte plan fingerprint (``MonitorSpec.fingerprint``): an
+aggregator REJECTS mismatched plans instead of silently merging counters
+whose lanes mean different things.
+
+Frame body layout (all multi-byte integers are LEB128 varints, zigzag for
+signed; floats are little-endian IEEE):
+
+    magic        2B   b"SC"
+    version      1B   WIRE_VERSION
+    kind         1B   KIND_DELTA | KIND_AGG | KIND_HINT
+    flags        1B   bit 0: FLAG_SHUTDOWN (sender's final frame)
+    host_id      varint length + utf-8
+    seq          varint — per-sender frame counter (gap = lost frames)
+    fingerprint  20B   raw sha1 of the producing plan (hex → bytes)
+    step_lo      varint zigzag — first step the payload covers (exclusive)
+    step_hi      varint zigzag — last step the payload covers (inclusive)
+    payload      kind-specific (below)
+    crc32        4B LE over magic..payload — truncation/corruption check
+
+KIND_DELTA payload (one drained counter delta, dense layout):
+
+    n_scopes     varint
+    total        varint — SlotLayout.total (flat lane count)
+    calls        n_scopes x varint zigzag
+    samples      total x varint zigzag
+    values       total x f32 LE (raw pack of the dense lane vector)
+
+KIND_AGG payload (an aggregator's periodic upward downsample):
+
+    n_hosts      varint — distinct leaf hosts below this node
+    frames_in    varint — leaf frames merged below this node
+    dropped      varint — frames lost below this node (seq gaps + rejects)
+    n_scopes / total  varints
+    calls        n_scopes x varint zigzag (int64 fleet sums)
+    samples      total x varint zigzag   (int64 fleet sums)
+    values       total x f64 LE          (f64 fleet sums)
+    reservoirs   total x [seen varint, k varint, k x f32 LE]
+
+KIND_HINT payload (head → agents escalation rebroadcast, downlink):
+
+    scope        varint length + utf-8 ("" = global / wake sentinels)
+    reason       varint length + utf-8
+    tripwire     1B
+
+On a stream, frames are length-prefixed (u32 LE body length); use
+``FrameReader`` to incrementally split and decode.  Decoding raises
+``TruncatedFrameError`` (ran out of bytes), ``CorruptFrameError`` (bad
+magic/CRC/lengths) or ``VersionSkewError`` (unknown wire version) — the
+aggregator accounts each class separately.
+
+This module must stay device-free: it imports numpy only, never jax —
+encode/decode run on telemetry drain threads and aggregator IO threads,
+where dispatching device work would queue behind in-flight steps (the
+ROADMAP drain invariant).  Tests attest it with a raising sys.modules
+guard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+
+import numpy as np
+
+MAGIC = b"SC"
+WIRE_VERSION = 1
+
+KIND_DELTA = 0
+KIND_AGG = 1
+KIND_HINT = 2
+_KINDS = (KIND_DELTA, KIND_AGG, KIND_HINT)
+
+FLAG_SHUTDOWN = 0x01
+
+_FP_BYTES = 20          # sha1 — MonitorSpec.fingerprint is its hex form
+_ZERO_FP = "0" * (2 * _FP_BYTES)
+
+
+class WireError(ValueError):
+    """Base class for frame decode failures."""
+
+
+class TruncatedFrameError(WireError):
+    """The buffer ended before the frame did."""
+
+
+class CorruptFrameError(WireError):
+    """Bad magic, CRC mismatch, or inconsistent lengths."""
+
+
+class VersionSkewError(WireError):
+    """The frame's wire version is not one this decoder speaks."""
+
+
+# ---------------------------------------------------------------------------
+# varint / zigzag primitives
+# ---------------------------------------------------------------------------
+
+def _put_uvarint(out: bytearray, v: int) -> None:
+    if v < 0:
+        raise ValueError(f"uvarint cannot encode negative value {v}")
+    if v < 0x80:                # header fields are mostly one byte
+        out.append(v)
+        return
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return
+
+
+def _get_uvarint(buf: bytes, pos: int) -> tuple[int, int]:
+    shift = 0
+    v = 0
+    while True:
+        if pos >= len(buf):
+            raise TruncatedFrameError("varint ran off the end of the frame")
+        if shift > 63:
+            raise CorruptFrameError("varint longer than 64 bits")
+        b = buf[pos]
+        pos += 1
+        v |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return v, pos
+        shift += 7
+
+
+def _zigzag(v: int) -> int:
+    return (v << 1) ^ (v >> 63) if v < 0 else v << 1
+
+
+def _unzigzag(v: int) -> int:
+    return (v >> 1) ^ -(v & 1)
+
+
+def _put_svarint(out: bytearray, v: int) -> None:
+    _put_uvarint(out, _zigzag(int(v)))
+
+
+def _get_svarint(buf: bytes, pos: int) -> tuple[int, int]:
+    v, pos = _get_uvarint(buf, pos)
+    return _unzigzag(v), pos
+
+
+def _put_bytes(out: bytearray, b: bytes) -> None:
+    _put_uvarint(out, len(b))
+    out.extend(b)
+
+
+def _get_bytes(buf: bytes, pos: int) -> tuple[bytes, int]:
+    n, pos = _get_uvarint(buf, pos)
+    if pos + n > len(buf):
+        raise TruncatedFrameError("length-prefixed field ran off the end")
+    return buf[pos:pos + n], pos + n
+
+
+def _get_raw(buf: bytes, pos: int, n: int, what: str) -> tuple[bytes, int]:
+    if pos + n > len(buf):
+        raise TruncatedFrameError(f"{what} ran off the end of the frame")
+    return buf[pos:pos + n], pos + n
+
+
+# Integer LANE ARRAYS ride a width-tagged fixed-width block instead of
+# per-lane varints: one tag byte (bytes per lane: 1/2/4/8, the narrowest
+# signed width spanning the array's range) followed by the lanes as
+# little-endian SIGNED ints of that width.  Encode and decode are each a
+# couple of whole-array numpy calls — the per-lane Python varint loop
+# this replaces dominated frame codec time — and drained deltas (small
+# counts) still pack to one byte per lane.  Any width that fits is a
+# legal encoding; scalar header fields stay varints.
+_INT_DTYPES = {1: np.dtype("<i1"), 2: np.dtype("<i2"),
+               4: np.dtype("<i4"), 8: np.dtype("<i8")}
+# below this many lanes a Python min/max over .tolist() beats two numpy
+# reductions; monitored specs sit far under it, fleet AGG payloads above
+_SMALL_BLOCK = 512
+
+
+def _put_int_block(out: bytearray, arr: np.ndarray) -> None:
+    n = arr.size
+    if n == 0:
+        out.append(1)
+        return
+    if n <= _SMALL_BLOCK:
+        vals = arr.tolist()
+        mn, mx = min(vals), max(vals)
+    else:
+        mn, mx = int(arr.min()), int(arr.max())
+    if -(1 << 7) <= mn and mx < (1 << 7):
+        width = 1
+    elif -(1 << 15) <= mn and mx < (1 << 15):
+        width = 2
+    elif -(1 << 31) <= mn and mx < (1 << 31):
+        width = 4
+    else:
+        width = 8
+    out.append(width)
+    out += arr.astype(_INT_DTYPES[width], copy=False).tobytes()
+
+
+def _get_int_block(body: bytes, pos: int, n: int,
+                   what: str) -> tuple[np.ndarray, int]:
+    w_raw, pos = _get_raw(body, pos, 1, f"{what} width tag")
+    width = w_raw[0]
+    if width not in _INT_DTYPES:
+        raise CorruptFrameError(f"bad {what} width tag {width}")
+    raw, pos = _get_raw(body, pos, n * width, what)
+    return np.frombuffer(raw, _INT_DTYPES[width]).astype(np.int64), pos
+
+
+# ---------------------------------------------------------------------------
+# Frame dataclass
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Frame:
+    """One decoded wire frame (fields beyond the header are kind-gated)."""
+
+    kind: int
+    host_id: str
+    seq: int
+    fingerprint: str            # hex, like MonitorSpec.fingerprint
+    step_lo: int
+    step_hi: int
+    shutdown: bool = False
+
+    # KIND_DELTA / KIND_AGG counter payload
+    calls: np.ndarray | None = None      # [n_scopes] i64
+    values: np.ndarray | None = None     # [total] f32 (delta) / f64 (agg)
+    samples: np.ndarray | None = None    # [total] i64
+
+    # KIND_AGG extras
+    n_hosts: int = 0
+    frames_in: int = 0
+    dropped: int = 0
+    reservoirs: list | None = None       # per lane: (seen, np.ndarray f32)
+
+    # KIND_HINT
+    scope: str = ""
+    reason: str = ""
+    tripwire: bool = False
+
+
+_FP_CACHE: dict[str, bytes] = {}
+
+
+def _fp_raw(fingerprint: str) -> bytes:
+    """hex → raw fingerprint, cached (one spec per process in practice)."""
+    fp = fingerprint or _ZERO_FP
+    raw = _FP_CACHE.get(fp)
+    if raw is None:
+        try:
+            raw = bytes.fromhex(fp)
+        except ValueError as e:
+            raise ValueError(f"fingerprint must be hex, got {fp!r}") from e
+        if len(raw) != _FP_BYTES:
+            raise ValueError(
+                f"fingerprint must be {_FP_BYTES} bytes ({2 * _FP_BYTES} "
+                f"hex chars), got {len(raw)}")
+        if len(_FP_CACHE) > 64:
+            _FP_CACHE.clear()
+        _FP_CACHE[fp] = raw
+    return raw
+
+
+def _header(kind: int, host_id: str, seq: int, fingerprint: str,
+            step_lo: int, step_hi: int, shutdown: bool) -> bytearray:
+    fp_raw = _fp_raw(fingerprint)
+    out = bytearray()
+    out += MAGIC
+    out.append(WIRE_VERSION)
+    out.append(kind)
+    out.append(FLAG_SHUTDOWN if shutdown else 0)
+    _put_bytes(out, host_id.encode())
+    _put_uvarint(out, int(seq))
+    out += fp_raw
+    _put_svarint(out, int(step_lo))
+    _put_svarint(out, int(step_hi))
+    return out
+
+
+def _seal(out: bytearray) -> bytes:
+    out += struct.pack("<I", zlib.crc32(out) & 0xFFFFFFFF)
+    return bytes(out)
+
+
+# ---------------------------------------------------------------------------
+# Encoders
+# ---------------------------------------------------------------------------
+
+def encode_delta(calls, values, samples, *, host_id: str, seq: int,
+                 fingerprint: str, step_lo: int, step_hi: int,
+                 shutdown: bool = False) -> bytes:
+    """Pack one drained counter delta (host numpy, dense SlotLayout order).
+
+    ``calls``: [n_scopes] ints; ``values``: [total] floats; ``samples``:
+    [total] ints — exactly a drained ``CompactDelta``'s leaves.  Count
+    lanes ride width-tagged fixed-width blocks (drained deltas are small
+    ints, so most lanes cost one byte); values are a raw f32 pack.
+    """
+    calls = np.asarray(calls).reshape(-1)
+    values = np.asarray(values, np.float32).reshape(-1)
+    samples = np.asarray(samples).reshape(-1)
+    if values.shape != samples.shape:
+        raise ValueError(
+            f"values/samples lane counts differ: {values.shape} vs "
+            f"{samples.shape}")
+    out = _header(KIND_DELTA, host_id, seq, fingerprint, step_lo, step_hi,
+                  shutdown)
+    _put_uvarint(out, calls.shape[0])
+    _put_uvarint(out, values.shape[0])
+    _put_int_block(out, calls)
+    _put_int_block(out, samples)
+    out += values.tobytes()
+    return _seal(out)
+
+
+class DeltaStreamEncoder:
+    """Per-stream delta encoder with the constant header parts prebuilt.
+
+    One fleet stream repeats (host_id, fingerprint, lane counts) on every
+    frame — this precomputes those byte runs once so the per-frame work is
+    only the varying fields plus the lane payloads.  Produces bytes
+    identical to :func:`encode_delta`.
+    """
+
+    __slots__ = ("_pre_host", "_fp_raw", "_counts")
+
+    def __init__(self, host_id: str, fingerprint: str):
+        pre = bytearray()
+        pre += MAGIC
+        pre.append(WIRE_VERSION)
+        pre.append(KIND_DELTA)
+        pre.append(0)                     # flags slot (index 4)
+        _put_bytes(pre, host_id.encode())
+        self._pre_host = bytes(pre)
+        self._fp_raw = _fp_raw(fingerprint)
+        self._counts: dict[tuple[int, int], bytes] = {}
+
+    def encode(self, calls, values, samples, *, seq: int, step_lo: int,
+               step_hi: int, shutdown: bool = False) -> bytes:
+        values = np.asarray(values, np.float32)     # no-op when f32
+        out = bytearray(self._pre_host)
+        if shutdown:
+            out[4] = FLAG_SHUTDOWN
+        _put_uvarint(out, seq)
+        out += self._fp_raw
+        _put_svarint(out, step_lo)
+        _put_svarint(out, step_hi)
+        key = (calls.shape[0], values.shape[0])
+        counts = self._counts.get(key)
+        if counts is None:
+            cb = bytearray()
+            _put_uvarint(cb, key[0])
+            _put_uvarint(cb, key[1])
+            counts = self._counts[key] = bytes(cb)
+        out += counts
+        _put_int_block(out, calls)
+        _put_int_block(out, samples)
+        out += values.tobytes()
+        return _seal(out)
+
+
+def encode_agg(calls, values, samples, reservoirs, *, host_id: str,
+               seq: int, fingerprint: str, step_lo: int, step_hi: int,
+               n_hosts: int, frames_in: int, dropped: int,
+               shutdown: bool = False) -> bytes:
+    """Pack an aggregator's merged state for its parent (tree fan-in).
+
+    ``reservoirs``: per flat lane, ``(seen, samples_f32_array)`` — the
+    per-scope reservoir this node maintains; the parent merges them
+    weighted by ``seen``.
+    """
+    calls = np.asarray(calls, np.int64).reshape(-1)
+    values = np.asarray(values, np.float64).reshape(-1)
+    samples = np.asarray(samples, np.int64).reshape(-1)
+    if len(reservoirs) != values.shape[0]:
+        raise ValueError(
+            f"need one reservoir per lane: {len(reservoirs)} vs "
+            f"{values.shape[0]}")
+    out = _header(KIND_AGG, host_id, seq, fingerprint, step_lo, step_hi,
+                  shutdown)
+    _put_uvarint(out, int(n_hosts))
+    _put_uvarint(out, int(frames_in))
+    _put_uvarint(out, int(dropped))
+    _put_uvarint(out, calls.shape[0])
+    _put_uvarint(out, values.shape[0])
+    _put_int_block(out, calls)
+    _put_int_block(out, samples)
+    out += values.tobytes()
+    for seen, samp in reservoirs:
+        samp = np.asarray(samp, np.float32).reshape(-1)
+        _put_uvarint(out, int(seen))
+        _put_uvarint(out, samp.shape[0])
+        out += samp.tobytes()
+    return _seal(out)
+
+
+def encode_hint(scope: str, reason: str, *, host_id: str, seq: int,
+                fingerprint: str = "", tripwire: bool = False) -> bytes:
+    """Pack a head-level escalation hint (downlink; scope "" = global)."""
+    out = _header(KIND_HINT, host_id, seq, fingerprint or _ZERO_FP, 0, 0,
+                  False)
+    _put_bytes(out, scope.encode())
+    _put_bytes(out, reason.encode())
+    out.append(1 if tripwire else 0)
+    return _seal(out)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def decode_frame(buf: bytes) -> Frame:
+    """Decode one frame body (no length prefix).  Raises WireError."""
+    if len(buf) < len(MAGIC) + 3 + 4:
+        raise TruncatedFrameError(f"frame too short ({len(buf)} bytes)")
+    if buf[:2] != MAGIC:
+        raise CorruptFrameError(f"bad magic {buf[:2]!r}")
+    version = buf[2]
+    if version != WIRE_VERSION:
+        raise VersionSkewError(
+            f"wire version {version} not supported (speaking "
+            f"{WIRE_VERSION})")
+    body, crc_raw = buf[:-4], buf[-4:]
+    (crc,) = struct.unpack("<I", crc_raw)
+    if zlib.crc32(body) & 0xFFFFFFFF != crc:
+        raise CorruptFrameError("CRC mismatch (corrupt or truncated frame)")
+    kind = buf[3]
+    if kind not in _KINDS:
+        raise CorruptFrameError(f"unknown frame kind {kind}")
+    flags = buf[4]
+    pos = 5
+    host_raw, pos = _get_bytes(body, pos)
+    seq, pos = _get_uvarint(body, pos)
+    fp_raw, pos = _get_raw(body, pos, _FP_BYTES, "fingerprint")
+    step_lo, pos = _get_svarint(body, pos)
+    step_hi, pos = _get_svarint(body, pos)
+    frame = Frame(
+        kind=kind, host_id=host_raw.decode(), seq=seq,
+        fingerprint=fp_raw.hex(), step_lo=step_lo, step_hi=step_hi,
+        shutdown=bool(flags & FLAG_SHUTDOWN),
+    )
+
+    if kind == KIND_HINT:
+        scope_raw, pos = _get_bytes(body, pos)
+        reason_raw, pos = _get_bytes(body, pos)
+        trip_raw, pos = _get_raw(body, pos, 1, "tripwire flag")
+        frame.scope = scope_raw.decode()
+        frame.reason = reason_raw.decode()
+        frame.tripwire = bool(trip_raw[0])
+        _expect_end(body, pos)
+        return frame
+
+    if kind == KIND_AGG:
+        frame.n_hosts, pos = _get_uvarint(body, pos)
+        frame.frames_in, pos = _get_uvarint(body, pos)
+        frame.dropped, pos = _get_uvarint(body, pos)
+    n_scopes, pos = _get_uvarint(body, pos)
+    total, pos = _get_uvarint(body, pos)
+    if n_scopes > len(body) or total > len(body):
+        # a corrupted count would otherwise drive a huge decode loop
+        raise CorruptFrameError(
+            f"implausible lane counts n_scopes={n_scopes} total={total}")
+    calls, pos = _get_int_block(body, pos, n_scopes, "calls")
+    samples, pos = _get_int_block(body, pos, total, "samples")
+    fdt = np.float64 if kind == KIND_AGG else np.float32
+    nbytes = total * np.dtype(fdt).itemsize
+    raw, pos = _get_raw(body, pos, nbytes, "values")
+    frame.calls = calls
+    frame.values = np.frombuffer(raw, fdt).copy()
+    frame.samples = samples
+    if kind == KIND_AGG:
+        res = []
+        for _ in range(total):
+            seen, pos = _get_uvarint(body, pos)
+            k, pos = _get_uvarint(body, pos)
+            if k > len(body):
+                raise CorruptFrameError(f"implausible reservoir size {k}")
+            raw, pos = _get_raw(body, pos, 4 * k, "reservoir samples")
+            res.append((seen, np.frombuffer(raw, np.float32).copy()))
+        frame.reservoirs = res
+    _expect_end(body, pos)
+    return frame
+
+
+def _expect_end(body: bytes, pos: int) -> None:
+    if pos != len(body):
+        raise CorruptFrameError(
+            f"{len(body) - pos} trailing bytes after payload")
+
+
+# ---------------------------------------------------------------------------
+# Stream framing
+# ---------------------------------------------------------------------------
+
+_LEN = struct.Struct("<I")
+MAX_FRAME_BYTES = 1 << 26       # 64 MiB — a corrupt length must not OOM us
+
+
+def pack_frame(frame_bytes: bytes) -> bytes:
+    """Length-prefix one encoded frame for a byte stream."""
+    if len(frame_bytes) > MAX_FRAME_BYTES:
+        raise ValueError(f"frame too large ({len(frame_bytes)} bytes)")
+    return _LEN.pack(len(frame_bytes)) + frame_bytes
+
+
+class FrameReader:
+    """Incremental splitter/decoder for a length-prefixed frame stream.
+
+    Feed whatever bytes the socket produced; ``frames()`` yields every
+    complete decoded frame and leaves partial ones buffered.  Decode
+    errors propagate to the caller — on a byte stream there is no reliable
+    resync past a corrupt frame, so the connection should be dropped (and
+    accounted) by whoever owns it.
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> None:
+        self._buf.extend(data)
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+    def frames(self):
+        while True:
+            if len(self._buf) < _LEN.size:
+                return
+            (n,) = _LEN.unpack(bytes(self._buf[:_LEN.size]))
+            if n > MAX_FRAME_BYTES:
+                raise CorruptFrameError(f"frame length {n} exceeds cap")
+            if len(self._buf) < _LEN.size + n:
+                return
+            body = bytes(self._buf[_LEN.size:_LEN.size + n])
+            del self._buf[:_LEN.size + n]
+            yield decode_frame(body)

@@ -1,0 +1,352 @@
+"""Wire codec contract (repro.telemetry.wire) — PR 10 satellite.
+
+Covers the acceptance checklist: hypothesis-style round-trip property
+tests (via the conftest-registered stub when real hypothesis is absent),
+truncated/corrupt-frame rejection, plan-fingerprint mismatch rejection at
+the aggregator, version-skew handling, and the stream FrameReader.  Also
+attests the module's device-freedom: it must not import jax at all.
+
+Deliberately jax-free and subprocess-free — this file runs in
+milliseconds.
+"""
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.telemetry import wire
+from repro.telemetry.reservoir import Reservoir
+
+FP = "ab" * 20
+FP2 = "cd" * 20
+
+
+def mk_delta(n_scopes=3, total=12, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    calls = rng.integers(0, 1000, n_scopes)
+    values = rng.normal(size=total).astype(np.float32)
+    samples = rng.integers(0, 500, total)
+    kw.setdefault("host_id", "h0")
+    kw.setdefault("seq", 7)
+    kw.setdefault("fingerprint", FP)
+    kw.setdefault("step_lo", -1)
+    kw.setdefault("step_hi", 42)
+    return calls, values, samples, wire.encode_delta(
+        calls, values, samples, **kw)
+
+
+# ---------------------------------------------------------------------------
+# round-trip properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(
+    n_scopes=st.integers(0, 9),
+    total=st.integers(0, 64),
+    seed=st.integers(0, 10_000),
+    seq=st.integers(0, 1 << 40),
+    step_lo=st.integers(-1, 1 << 30),
+    step_hi=st.integers(0, 1 << 31),
+    shutdown=st.booleans(),
+    host=st.text(min_size=0, max_size=24),
+)
+def test_delta_roundtrip_property(n_scopes, total, seed, seq, step_lo,
+                                  step_hi, shutdown, host):
+    rng = np.random.default_rng(seed)
+    calls = rng.integers(0, 1 << 31, n_scopes)
+    values = (rng.normal(size=total) * rng.choice(
+        [1e-20, 1.0, 1e20])).astype(np.float32)
+    samples = rng.integers(0, 1 << 31, total)
+    buf = wire.encode_delta(calls, values, samples, host_id=host, seq=seq,
+                            fingerprint=FP, step_lo=step_lo,
+                            step_hi=step_hi, shutdown=shutdown)
+    f = wire.decode_frame(buf)
+    assert f.kind == wire.KIND_DELTA
+    assert f.host_id == host
+    assert f.seq == seq
+    assert f.fingerprint == FP
+    assert f.step_lo == step_lo and f.step_hi == step_hi
+    assert f.shutdown == shutdown
+    np.testing.assert_array_equal(f.calls, calls.astype(np.int64))
+    np.testing.assert_array_equal(f.samples, samples.astype(np.int64))
+    np.testing.assert_array_equal(f.values, values)  # f32 pack is exact
+
+
+@settings(max_examples=15)
+@given(total=st.integers(1, 16), seed=st.integers(0, 1000),
+       k=st.integers(1, 8))
+def test_agg_roundtrip_property(total, seed, k):
+    rng = np.random.default_rng(seed)
+    calls = rng.integers(-5, 1 << 40, 4)
+    values = rng.normal(size=total).astype(np.float64) * 1e6
+    samples = rng.integers(0, 1 << 40, total)
+    reservoirs = [
+        (int(rng.integers(0, 1000)) + k, rng.normal(size=k).astype(np.float32))
+        for _ in range(total)
+    ]
+    buf = wire.encode_agg(calls, values, samples, reservoirs, host_id="agg0",
+                          seq=3, fingerprint=FP, step_lo=-1, step_hi=99,
+                          n_hosts=12, frames_in=345, dropped=6)
+    f = wire.decode_frame(buf)
+    assert f.kind == wire.KIND_AGG
+    assert (f.n_hosts, f.frames_in, f.dropped) == (12, 345, 6)
+    np.testing.assert_array_equal(f.calls, calls)
+    np.testing.assert_array_equal(f.values, values)  # f64 pack is exact
+    np.testing.assert_array_equal(f.samples, samples)
+    assert len(f.reservoirs) == total
+    for (seen, items), (dseen, ditems) in zip(reservoirs, f.reservoirs):
+        assert dseen == seen
+        np.testing.assert_array_equal(ditems, items)
+
+
+def test_hint_roundtrip():
+    buf = wire.encode_hint("layer/attn", "fleet:nan_count", host_id="head",
+                           seq=1, tripwire=True)
+    f = wire.decode_frame(buf)
+    assert f.kind == wire.KIND_HINT
+    assert (f.scope, f.reason, f.tripwire) == (
+        "layer/attn", "fleet:nan_count", True)
+    # empty scope = global hint
+    g = wire.decode_frame(wire.encode_hint("", "wake", host_id="head", seq=2))
+    assert g.scope == "" and g.tripwire is False
+
+
+def test_empty_fingerprint_encodes_zero_fp():
+    _, _, _, buf = mk_delta(fingerprint="")
+    assert wire.decode_frame(buf).fingerprint == wire._ZERO_FP
+
+
+def test_bad_fingerprint_rejected_at_encode():
+    with pytest.raises(ValueError, match="hex"):
+        mk_delta(fingerprint="zz" * 20)
+    with pytest.raises(ValueError, match="20 bytes"):
+        mk_delta(fingerprint="ab" * 10)
+
+
+# ---------------------------------------------------------------------------
+# rejection: truncation, corruption, version skew
+# ---------------------------------------------------------------------------
+
+def test_truncated_frames_rejected_at_every_length():
+    _, _, _, buf = mk_delta()
+    for n in range(len(buf)):
+        with pytest.raises(wire.WireError):
+            wire.decode_frame(buf[:n])
+
+
+def test_corrupt_byte_rejected_everywhere():
+    _, _, _, buf = mk_delta()
+    # flip every byte position (except the version byte — that's skew)
+    for i in range(len(buf)):
+        if i == 2:
+            continue
+        bad = bytearray(buf)
+        bad[i] ^= 0xFF
+        with pytest.raises(wire.WireError):
+            wire.decode_frame(bytes(bad))
+
+
+def test_bad_magic_is_corrupt():
+    _, _, _, buf = mk_delta()
+    with pytest.raises(wire.CorruptFrameError, match="magic"):
+        wire.decode_frame(b"XX" + buf[2:])
+
+
+def test_crc_catches_payload_tamper():
+    _, _, _, buf = mk_delta()
+    bad = bytearray(buf)
+    bad[-6] ^= 0x01         # inside payload, before the crc tail
+    with pytest.raises(wire.CorruptFrameError, match="CRC"):
+        wire.decode_frame(bytes(bad))
+
+
+def test_version_skew_detected_before_crc():
+    """A future sender bumps the version: the decoder must say SKEW (an
+    actionable, accounted condition), not CRC corruption."""
+    _, _, _, buf = mk_delta()
+    bad = bytearray(buf)
+    bad[2] = wire.WIRE_VERSION + 1
+    with pytest.raises(wire.VersionSkewError, match="version"):
+        wire.decode_frame(bytes(bad))
+
+
+def test_trailing_garbage_rejected():
+    _, _, _, buf = mk_delta()
+    with pytest.raises(wire.WireError):
+        wire.decode_frame(buf + b"\x00")
+
+
+def test_varint_guards():
+    out = bytearray()
+    with pytest.raises(ValueError):
+        wire._put_uvarint(out, -1)
+    # >64-bit varint is corrupt, not an infinite loop
+    with pytest.raises(wire.CorruptFrameError):
+        wire._get_uvarint(b"\xff" * 11, 0)
+
+
+def test_zigzag_symmetry():
+    for v in (0, 1, -1, 2**62, -(2**62), 12345, -54321):
+        assert wire._unzigzag(wire._zigzag(v)) == v
+
+
+# ---------------------------------------------------------------------------
+# stream framing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10)
+@given(chunk=st.integers(1, 13), n_frames=st.integers(1, 6),
+       seed=st.integers(0, 999))
+def test_frame_reader_reassembles_any_chunking(chunk, n_frames, seed):
+    frames = [mk_delta(seed=seed + i, seq=i)[3] for i in range(n_frames)]
+    stream = b"".join(wire.pack_frame(f) for f in frames)
+    reader = wire.FrameReader()
+    got = []
+    for i in range(0, len(stream), chunk):
+        reader.feed(stream[i:i + chunk])
+        got.extend(reader.frames())
+    assert [f.seq for f in got] == list(range(n_frames))
+    assert reader.pending_bytes == 0
+
+
+def test_frame_reader_leaves_partial_buffered():
+    buf = wire.pack_frame(mk_delta()[3])
+    reader = wire.FrameReader()
+    reader.feed(buf[:-1])
+    assert list(reader.frames()) == []
+    assert reader.pending_bytes == len(buf) - 1
+    reader.feed(buf[-1:])
+    assert len(list(reader.frames())) == 1
+
+
+def test_frame_reader_length_cap():
+    reader = wire.FrameReader()
+    reader.feed(b"\xff\xff\xff\xff")
+    with pytest.raises(wire.CorruptFrameError, match="cap"):
+        list(reader.frames())
+
+
+def test_pack_frame_size_cap():
+    with pytest.raises(ValueError, match="too large"):
+        wire.pack_frame(b"x" * (wire.MAX_FRAME_BYTES + 1))
+
+
+# ---------------------------------------------------------------------------
+# fingerprint mismatch rejection (aggregator policy)
+# ---------------------------------------------------------------------------
+
+def test_aggregator_rejects_fingerprint_mismatch():
+    from repro.telemetry.aggregator import Aggregator
+
+    agg = Aggregator(node_id="t")
+    ok = agg.ingest(wire.decode_frame(mk_delta(fingerprint=FP, seq=0)[3]))
+    assert ok
+    bad = agg.ingest(wire.decode_frame(mk_delta(fingerprint=FP2, seq=0,
+                                                host_id="h1")[3]))
+    assert not bad
+    st_ = agg.stats()
+    assert st_["rejected_fingerprint"] == 1
+    assert st_["frames_in"] == 1
+    assert agg.dropped == 1
+    # zero (control) fingerprint is always accepted — pure-shutdown agents
+    zero = wire.encode_delta([], [], [], host_id="h2", seq=0,
+                             fingerprint="", step_lo=-1, step_hi=-1,
+                             shutdown=True)
+    assert agg.ingest(wire.decode_frame(zero))
+
+
+def test_aggregator_counts_seq_gaps_as_lost():
+    from repro.telemetry.aggregator import Aggregator
+
+    agg = Aggregator(node_id="t")
+    for seq in (0, 1, 4, 9):       # gaps: 2,3 then 5..8 -> 6 lost
+        agg.ingest(wire.decode_frame(mk_delta(seq=seq)[3]))
+    assert agg.stats()["lost_frames"] == 6
+    assert agg.merged().dropped == 6
+
+
+# ---------------------------------------------------------------------------
+# reservoir (percentile substrate)
+# ---------------------------------------------------------------------------
+
+def test_reservoir_exact_below_capacity():
+    r = Reservoir(64, np.random.default_rng(0))
+    xs = list(range(50))
+    for x in xs:
+        r.add(x)
+    assert len(r) == 50 and r.seen == 50
+    assert r.percentile(50) == pytest.approx(np.percentile(xs, 50))
+
+
+def test_reservoir_merge_exact_when_fits():
+    a = Reservoir(100, np.random.default_rng(1))
+    for x in range(40):
+        a.add(float(x))
+    a.merge(np.arange(40, 80, dtype=np.float32), 40)
+    assert len(a) == 80 and a.seen == 80
+    assert a.percentile(99) == pytest.approx(
+        np.percentile(np.arange(80), 99), rel=1e-6)
+
+
+def test_reservoir_subsamples_at_capacity():
+    r = Reservoir(32, np.random.default_rng(2))
+    for x in range(1000):
+        r.add(float(x))
+    assert len(r) == 32 and r.seen == 1000
+    # a uniform sample of 0..999: the median estimate can't be wildly off
+    assert 150 < r.percentile(50) < 850
+
+
+def test_reservoir_merge_weights_by_seen():
+    # side A: 10 items standing for 1000 observations around 100;
+    # side B: 10 items standing for 10 observations around 0.
+    # the merged sample must be dominated by A.
+    r = Reservoir(16, np.random.default_rng(3))
+    for _ in range(3):
+        r.merge(np.full(10, 100.0, np.float32), 1000)
+        r.merge(np.zeros(10, np.float32), 10)
+    assert r.percentile(50) == pytest.approx(100.0)
+    assert r.seen == 3030
+
+
+def test_reservoir_empty_and_errors():
+    r = Reservoir(4)
+    assert np.isnan(r.percentile(50))
+    with pytest.raises(ValueError):
+        Reservoir(0)
+    with pytest.raises(ValueError, match="seen"):
+        r.merge([1.0, 2.0], 1)
+
+
+# ---------------------------------------------------------------------------
+# device-freedom attestation (module level)
+# ---------------------------------------------------------------------------
+
+def test_wire_and_agent_modules_are_jax_free():
+    """The codec and agent run on drain/IO threads — they must not even
+    import jax (the raising-guard runtime attestation lives in
+    test_fleet_agg.py; this is the static half)."""
+    import repro.telemetry.agent as agent_mod
+
+    for mod in (wire, agent_mod):
+        assert not hasattr(mod, "jnp"), mod
+        assert not hasattr(mod, "jax"), mod
+    src = open(wire.__file__).read() + open(agent_mod.__file__).read()
+    assert "import jax" not in src
+
+
+def test_importing_telemetry_package_does_not_import_jax():
+    import subprocess
+    import sys as _sys
+
+    out = subprocess.run(
+        [_sys.executable, "-c",
+         "import sys; import repro.telemetry; "
+         "print('jax' in sys.modules)"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": ":".join(_sys.path)}, timeout=120,
+    )
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "False"
